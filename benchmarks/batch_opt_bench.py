@@ -1,0 +1,73 @@
+"""Paper Fig. 13/14: batch-query optimization cost & benefit.
+
+Sweeps batch size and #candidate models per query; reports Alg. 4
+search time (cost) and training-time saving (benefit, Def. 3), plus the
+oracle gap on the small instances where the oracle is feasible.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, bench_world
+from repro.core.batch_opt import batch_optimize, batch_oracle
+from repro.core.cost import CostModel
+from repro.core.plans import Interval
+from repro.core.store import ModelStore
+
+
+def _store(index, n_models, span, seed):
+    rng = np.random.default_rng(seed)
+    store = ModelStore()
+    for _ in range(n_models):
+        lo = rng.uniform(span[0], span[1] * 0.85)
+        hi = lo + rng.uniform((span[1] - span[0]) * 0.03,
+                              (span[1] - span[0]) * 0.2)
+        nd, nt = index.count(lo, hi)
+        store.add(Interval(lo, hi), nd, nt, "vb",
+                  {"lam": np.ones((4, 8), np.float32)})
+    return store
+
+
+def _queries(rng, n, span):
+    out = []
+    for _ in range(n):
+        lo = rng.uniform(span[0], span[1] * 0.6)
+        hi = lo + rng.uniform((span[1] - span[0]) * 0.2,
+                              (span[1] - span[0]) * 0.4)
+        out.append(Interval(lo, min(hi, span[1])))
+    return out
+
+
+def run(batch_sizes=(2, 3, 4, 6), models_per=(8, 16, 24), seed=0):
+    _, _, index, _ = bench_world(n_docs=1200, seed=seed)
+    span = (0.0, 1200.0)
+    cost = CostModel(max_iters=BENCH_CFG.max_iters,
+                     n_topics=BENCH_CFG.n_topics)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for n_models in models_per:
+        store = _store(index, n_models, span, seed + n_models)
+        for b in batch_sizes:
+            qs = _queries(rng, b, span)
+            h = batch_optimize(store.models(), qs, index, cost)
+            oracle_t = float("nan")
+            if b <= 3 and n_models <= 8:
+                try:
+                    o = batch_oracle(store.models(), qs, index, cost)
+                    oracle_t = o.total_time
+                except ValueError:
+                    pass
+            rows.append((b, n_models, h.elapsed_s, h.benefit,
+                         h.total_time, h.naive_time, oracle_t))
+    return rows
+
+
+def main():
+    print("batch,models,search_s,benefit,total_time,naive_time,oracle_time")
+    for r in run():
+        print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
+                       for x in r))
+
+
+if __name__ == "__main__":
+    main()

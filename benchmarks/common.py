@@ -1,0 +1,70 @@
+"""Shared benchmark substrate: corpus/store construction + timing."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.lda_default import LDAConfig
+from repro.core.cost import CostModel
+from repro.core.gibbs import cgs_fit
+from repro.core.lda import log_predictive_probability, topics_from_vb
+from repro.core.plans import Interval
+from repro.core.store import ModelStore
+from repro.core.vb import vb_fit
+from repro.data.corpus import (
+    Corpus,
+    DataIndex,
+    doc_term_matrix,
+    make_corpus,
+    train_test_split,
+)
+
+BENCH_CFG = LDAConfig(n_topics=16, vocab_size=512, alpha=0.5, eta=0.05,
+                      max_iters=20, e_step_iters=10, gibbs_sweeps=10)
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw) -> Tuple[float, object]:
+    out = None
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / repeat, out
+
+
+def bench_world(n_docs=1500, cfg: LDAConfig = BENCH_CFG, seed=0):
+    corpus, beta = make_corpus(n_docs, cfg.vocab_size, cfg.n_topics,
+                               mean_doc_len=40, seed=seed)
+    train, test = train_test_split(corpus, test_frac=0.1, seed=seed)
+    return train, test, DataIndex(train), beta
+
+
+def train_vb_range(corpus: Corpus, cfg: LDAConfig, lo, hi, seed=0):
+    sub = corpus.subset(lo, hi)
+    x = doc_term_matrix(sub)
+    lam = np.asarray(vb_fit(x, jax.random.PRNGKey(seed), cfg))
+    return lam, sub
+
+
+def materialize_partitions(corpus: Corpus, cfg: LDAConfig, store: ModelStore,
+                           edges: List[float], kind: str = "vb") -> None:
+    for lo, hi in zip(edges, edges[1:]):
+        sub = corpus.subset(lo, hi)
+        if sub.n_docs == 0:
+            continue
+        if kind == "vb":
+            x = doc_term_matrix(sub)
+            lam = np.asarray(vb_fit(x, jax.random.PRNGKey(0), cfg))
+            theta = {"lam": lam}
+        else:
+            theta = {"delta_nkv": cgs_fit(sub.tokens, sub.doc_ids, cfg,
+                                          jax.random.PRNGKey(0))}
+        store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens, kind, theta)
+
+
+def lpp_of(beta: np.ndarray, test: Corpus) -> float:
+    return log_predictive_probability(beta, doc_term_matrix(test))

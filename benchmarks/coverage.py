@@ -1,0 +1,54 @@
+"""Paper Fig. 9: speedup ratio vs coverage ratio.
+
+Materialize models covering X% of the query range; the query trains the
+rest.  SR = t_from_scratch / t_mlego per coverage level.  At 100% the
+model is merged in milliseconds and plan-search cost becomes visible
+(the paper's motivation for PSOA).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, bench_world, lpp_of, timed
+from repro.core.plans import Interval
+from repro.core.query import QueryEngine
+from repro.core.store import ModelStore
+from repro.core.vb import vb_fit
+from repro.data.corpus import doc_term_matrix
+
+
+def run(n_docs=1500, coverages=(0.0, 0.25, 0.5, 0.75, 1.0), seed=0):
+    cfg = BENCH_CFG
+    train, test, index, _ = bench_world(n_docs=n_docs, seed=seed)
+    lo, hi = 0.0, float(train.attr[-1]) + 1.0
+
+    x_all = doc_term_matrix(train)
+    t_orig, _ = timed(
+        lambda: np.asarray(vb_fit(x_all, jax.random.PRNGKey(seed), cfg)))
+
+    rows = []
+    for cov in coverages:
+        store = ModelStore()
+        # cover [lo, lo + cov*(hi-lo)) with 4 materialized pieces
+        edge = lo + cov * (hi - lo)
+        if cov > 0:
+            engine0 = QueryEngine(train, store, cfg, kind="vb")
+            for a, b in zip(np.linspace(lo, edge, 5),
+                            np.linspace(lo, edge, 5)[1:]):
+                engine0.train_range(float(a), float(b))
+        engine = QueryEngine(train, store, cfg, kind="vb")
+        t_mlego, res = timed(engine.execute, Interval(lo, hi), 0.0)
+        rows.append((cov, t_orig, t_mlego, t_orig / t_mlego,
+                     res.search_s, lpp_of(res.beta, test)))
+    return rows
+
+
+def main():
+    print("coverage,t_orig_s,t_mlego_s,SR,t_search_s,lpp")
+    for r in run():
+        print(",".join(f"{v:.4f}" for v in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Kernel parity micro-benchmarks.
+
+On this CPU host the Pallas kernels execute in interpret mode (a Python
+emulation — wall time is meaningless for TPU), so we report the
+reference-path timing (the jnp math the kernel replaces, which IS the
+CPU execution path) plus a parity check, and derive the kernel's TPU
+byte/flop budget analytically from its BlockSpec tiling.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, *args, repeat=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat * 1e6   # us
+
+
+def run(quick=False):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # vb_estep
+    from repro.kernels.vb_estep.ops import vb_estep
+    from repro.kernels.vb_estep.ref import vb_estep_ref
+    d, v, k = (64, 256, 64) if quick else (256, 1024, 128)
+    x = jnp.asarray(rng.poisson(0.4, (d, v)), jnp.float32)
+    eeb = jnp.asarray(rng.gamma(1.0, 1.0, (k, v)), jnp.float32)
+    g0 = jnp.ones((d, k), jnp.float32)
+    ref = jax.jit(lambda *a: vb_estep_ref(*a, 0.5, 10))
+    us = _t(ref, x, eeb, g0)
+    g1, s1 = vb_estep(x, eeb, g0, 0.5, 10, interpret=True)
+    g2, s2 = vb_estep_ref(x, eeb, g0, 0.5, 10)
+    err = float(jnp.abs(s1 - s2).max() / jnp.abs(s2).max())
+    # TPU budget: n_iters x 2 matmuls (D,K)x(K,V), one HBM pass over x
+    flops = 10 * 2 * 2 * d * k * v
+    rows.append(("vb_estep", us, err,
+                 f"tpu_us~{flops / 197e12 * 1e6:.1f}(mxu-bound)"))
+
+    # merge_topics
+    from repro.kernels.merge_topics.ops import merge_topics
+    from repro.kernels.merge_topics.ref import merge_topics_ref
+    n, mk, mv = (4, 64, 256) if quick else (16, 128, 1024)
+    st = jnp.asarray(rng.normal(size=(n, mk, mv)), jnp.float32)
+    w = jnp.ones((n,), jnp.float32)
+    ref = jax.jit(lambda s, w: merge_topics_ref(s, w, 0.01, 0.01))
+    us = _t(ref, st, w)
+    a = merge_topics(st, w, bias=0.01, base=0.01, interpret=True)
+    err = float(jnp.abs(a - ref(st, w)).max())
+    bts = (n + 1) * mk * mv * 4
+    rows.append(("merge_topics", us, err,
+                 f"tpu_us~{bts / 819e9 * 1e6:.2f}(hbm-bound)"))
+
+    # flash attention
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    b, s, h, kvh, hd = (1, 128, 4, 2, 32) if quick else (2, 256, 8, 2, 64)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    ref = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = _t(ref, q, kk, vv)
+    a = flash_attention(q, kk, vv, block_q=64, block_k=64, interpret=True)
+    err = float(jnp.abs(a - ref(q, kk, vv)).max())
+    flops = 4 * b * s * s * h * hd
+    rows.append(("flash_attention", us, err,
+                 f"tpu_us~{flops / 197e12 * 1e6:.2f}(mxu-bound)"))
+
+    # decode attention
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    s = 1024 if quick else 4096
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    ref = jax.jit(lambda q, k, v: decode_attention_ref(q, k, v, s - 1))
+    us = _t(ref, q, kc, vc)
+    a = decode_attention(q, kc, vc, s - 1, interpret=True)
+    err = float(jnp.abs(a - ref(q, kc, vc)).max())
+    bts = 2 * b * s * kvh * hd * 4
+    rows.append(("decode_attention", us, err,
+                 f"tpu_us~{bts / 819e9 * 1e6:.2f}(hbm-bound)"))
+
+    print("kernel,ref_us_per_call,max_err_vs_ref,derived")
+    for name, us, err, derived in rows:
+        print(f"{name},{us:.1f},{err:.2e},{derived}")
+
+
+if __name__ == "__main__":
+    run()

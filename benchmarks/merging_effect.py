@@ -1,0 +1,80 @@
+"""Paper Fig. 3/6: performance loss vs #merged models (monotonicity).
+
+Split a query range into 1..N partitions, train per partition, merge
+(MVB + MGS), and measure held-out lpp against the from-scratch model.
+Emits: n_parts, lpp_scratch, lpp_mvb, lpp_mgs, dp_mvb, dp_mgs — and a
+refit of the PerformanceLoss rho from the measurements (feeding the
+planner's cost model, §V.B.2).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, bench_world, lpp_of, timed
+from repro.core.cost import PerformanceLoss
+from repro.core.gibbs import cgs_fit
+from repro.core.lda import topics_from_gs, topics_from_vb
+from repro.core.merge import merge_gs, merge_vb
+from repro.core.lda import MaterializedModel
+from repro.core.plans import Interval
+from repro.core.vb import vb_fit
+from repro.data.corpus import doc_term_matrix
+
+
+def run(n_docs=1200, parts=(1, 2, 4, 8, 16), seed=0, out_rows=None):
+    cfg = BENCH_CFG
+    train, test, index, _ = bench_world(n_docs=n_docs, seed=seed)
+    lo, hi = 0.0, float(train.attr[-1]) + 1.0
+
+    x_all = doc_term_matrix(train)
+    lam = np.asarray(vb_fit(x_all, jax.random.PRNGKey(seed), cfg))
+    lpp_scratch = lpp_of(topics_from_vb(lam), test)
+
+    rows = []
+    xs, losses = [], []
+    for n in parts:
+        edges = np.linspace(lo, hi, n + 1)
+        vb_models, gs_models = [], []
+        for i, (a, b) in enumerate(zip(edges, edges[1:])):
+            sub = train.subset(a, b)
+            if sub.n_docs == 0:
+                continue
+            x = doc_term_matrix(sub)
+            l = np.asarray(vb_fit(x, jax.random.PRNGKey(seed + i), cfg))
+            vb_models.append(MaterializedModel(
+                i, Interval(a, b), sub.n_docs, sub.n_tokens, "vb",
+                {"lam": l}))
+            nkv = cgs_fit(sub.tokens, sub.doc_ids, cfg,
+                          jax.random.PRNGKey(seed + i))
+            gs_models.append(MaterializedModel(
+                i, Interval(a, b), sub.n_docs, sub.n_tokens, "gs",
+                {"delta_nkv": nkv}))
+        lpp_mvb = lpp_of(topics_from_vb(merge_vb(vb_models, cfg)), test)
+        lpp_mgs = lpp_of(topics_from_gs(merge_gs(gs_models, cfg), cfg.eta),
+                         test)
+        dp_mvb = abs(lpp_scratch - lpp_mvb)
+        dp_mgs = abs(lpp_scratch - lpp_mgs)
+        rows.append((n, lpp_scratch, lpp_mvb, lpp_mgs, dp_mvb, dp_mgs))
+        if n > 1:
+            xs.append(n - 1)
+            losses.append(min(max(dp_mvb / max(abs(lpp_scratch), 1e-9), 0.0),
+                              0.99))
+    ploss = PerformanceLoss.fit(xs, losses) if xs else PerformanceLoss()
+    if out_rows is not None:
+        out_rows.extend(rows)
+    return rows, ploss
+
+
+def main():
+    rows, ploss = run()
+    print("n_parts,lpp_scratch,lpp_mvb,lpp_mgs,dp_mvb,dp_mgs")
+    for r in rows:
+        print(",".join(f"{v:.4f}" if isinstance(v, float) else str(v)
+                       for v in r))
+    print(f"# fitted PerformanceLoss rho = {ploss.rho:.5f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Paper Fig. 7/8: model-construction time — MLego merge vs baselines.
+
+Baselines (paper §VI.A.4, adapted to this host per DESIGN.md §7):
+  ORIG : batch VB / CGS from scratch on the query range.
+  LDA* : the distributed-training baseline class — partitioned training
+         without reuse; on one host we execute the partition trainings
+         and charge the *max* partition time (perfect 8-way scaling,
+         an upper bound on LDA*'s advantage).
+  OGS  : online single-pass VB (one E/M sweep per minibatch).
+
+MLego answers from materialized models: plan search + Alg. 1 merge.
+SR (speedup ratio) = t_baseline / t_mlego.  --scale sweeps corpus size
+(Fig. 8).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    BENCH_CFG,
+    bench_world,
+    lpp_of,
+    materialize_partitions,
+    timed,
+)
+from repro.core.cost import CostModel
+from repro.core.lda import topics_from_vb
+from repro.core.merge import merge_vb
+from repro.core.plans import Interval
+from repro.core.query import QueryEngine
+from repro.core.store import ModelStore
+from repro.core.vb import vb_fit, vb_estep, _exp_dirichlet_expectation
+from repro.data.corpus import doc_term_matrix
+import jax.numpy as jnp
+
+
+def ogs_fit(x, cfg, key, batch_docs=64):
+    """Online VB: single pass, minibatch natural-gradient updates."""
+    d, v = x.shape
+    lam = jax.random.gamma(key, 100.0, (cfg.n_topics, v), jnp.float32) * 0.01
+    tau0, kappa = 1.0, 0.7
+    for t, s in enumerate(range(0, d, batch_docs)):
+        xb = jnp.asarray(x[s:s + batch_docs])
+        eeb = _exp_dirichlet_expectation(lam)
+        g0 = jnp.ones((xb.shape[0], cfg.n_topics), jnp.float32)
+        _, sstats = vb_estep(xb, eeb, g0, cfg.alpha, cfg.e_step_iters)
+        rho = (tau0 + t) ** (-kappa)
+        lam_hat = cfg.eta + (d / xb.shape[0]) * sstats
+        lam = (1 - rho) * lam + rho * lam_hat
+    return np.asarray(lam)
+
+
+def run(n_docs=1500, n_partitions=8, seed=0):
+    cfg = BENCH_CFG
+    train, test, index, _ = bench_world(n_docs=n_docs, seed=seed)
+    lo, hi = 0.0, float(train.attr[-1]) + 1.0
+    store = ModelStore()
+    edges = list(np.linspace(lo, hi, n_partitions + 1))
+
+    # materialization (offline capital; timed for reference)
+    t_mat, _ = timed(materialize_partitions, train, cfg, store, edges)
+
+    # ORIG
+    x_all = doc_term_matrix(train)
+    t_orig, lam = timed(
+        lambda: np.asarray(vb_fit(x_all, jax.random.PRNGKey(seed), cfg)))
+    lpp_orig = lpp_of(topics_from_vb(lam), test)
+
+    # LDA* proxy: partitioned training, charged max partition time
+    part_times = []
+    for a, b in zip(edges, edges[1:]):
+        sub = train.subset(a, b)
+        if sub.n_docs == 0:
+            continue
+        x = doc_term_matrix(sub)
+        t, _ = timed(lambda x=x: np.asarray(
+            vb_fit(x, jax.random.PRNGKey(seed), cfg)))
+        part_times.append(t)
+    t_ldastar = max(part_times)
+
+    # OGS
+    t_ogs, lam_ogs = timed(ogs_fit, x_all, cfg, jax.random.PRNGKey(seed))
+    lpp_ogs = lpp_of(topics_from_vb(lam_ogs), test)
+
+    # MLego: full-coverage query -> plan search + merge only
+    engine = QueryEngine(train, store, cfg, kind="vb")
+    t_mlego, res = timed(engine.execute, Interval(lo, hi), 0.0)
+    lpp_mlego = lpp_of(res.beta, test)
+
+    rows = [
+        ("ORIG", t_orig, lpp_orig, t_orig / t_mlego),
+        ("LDA*", t_ldastar, lpp_orig, t_ldastar / t_mlego),
+        ("OGS", t_ogs, lpp_ogs, t_ogs / t_mlego),
+        ("MLego", t_mlego, lpp_mlego, 1.0),
+    ]
+    return rows, t_mat
+
+
+def main():
+    scale = "--scale" in sys.argv
+    print("method,time_s,lpp,SR,n_docs")
+    sizes = (500, 1500, 4000) if scale else (1500,)
+    for n in sizes:
+        rows, t_mat = run(n_docs=n)
+        for name, t, lpp, sr in rows:
+            print(f"{name},{t:.4f},{lpp:.4f},{sr:.2f},{n}")
+        print(f"# materialization time {t_mat:.2f}s (offline, n={n})")
+
+
+if __name__ == "__main__":
+    main()

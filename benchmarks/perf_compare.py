@@ -1,0 +1,66 @@
+"""Before/after roofline comparison between two dry-run artifact dirs.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare \
+        --before experiments/baseline --after experiments/dryrun \
+        [--cells qwen3-moe-235b-a22b__train_4k__single,...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_dir(d):
+    out = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        with open(p) as f:
+            rec = json.load(f)
+        out[f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"] = rec
+    return out
+
+
+def fmt_delta(b, a):
+    if b == 0:
+        return "--"
+    return f"{(a - b) / b * 100:+.1f}%"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--before", default="experiments/baseline")
+    ap.add_argument("--after", default="experiments/dryrun")
+    ap.add_argument("--cells", default=None)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    before = load_dir(args.before)
+    after = load_dir(args.after)
+    cells = (args.cells.split(",") if args.cells
+             else sorted(set(before) & set(after)))
+    hdr = ("cell,term,before_s,after_s,delta,"
+           "temp_GB_before,temp_GB_after")
+    if args.md:
+        cols = hdr.split(",")
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+    else:
+        print(hdr)
+    for c in cells:
+        if c not in before or c not in after:
+            continue
+        b, a = before[c], after[c]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            bv, av = b["roofline"][term], a["roofline"][term]
+            row = [c, term.replace("_s", ""), f"{bv:.4f}", f"{av:.4f}",
+                   fmt_delta(bv, av),
+                   f"{b['bytes_per_device']['temp']/1e9:.2f}",
+                   f"{a['bytes_per_device']['temp']/1e9:.2f}"]
+            if args.md:
+                print("| " + " | ".join(row) + " |")
+            else:
+                print(",".join(row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Fig. 10/11/12: plan-search efficiency.
+
+Fig. 10: NAI vs GRA vs PSOA vs PSOA++ wall time on growing model sets.
+Fig. 11: impact of #candidate models per query.
+Fig. 12: impact of the weight parameter alpha on PSOA.
+All searchers return identical optima (asserted for alpha < 1); the
+benchmark reports time and #plans scored.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, bench_world
+from repro.core.cost import CostModel
+from repro.core.plans import Interval
+from repro.core.search import gra_search, nai_search, psoa_search
+from repro.core.store import ModelStore
+
+
+def _store(index, n_models, span, seed=0):
+    rng = np.random.default_rng(seed)
+    store = ModelStore()
+    k, v = 4, 8   # stats are stand-ins; search reads only ranges/counts
+    for _ in range(n_models):
+        lo = rng.uniform(span[0], span[1] * 0.85)
+        hi = lo + rng.uniform((span[1] - span[0]) * 0.02,
+                              (span[1] - span[0]) * 0.25)
+        nd, nt = index.count(lo, hi)
+        store.add(Interval(lo, hi), nd, nt, "vb",
+                  {"lam": np.ones((k, v), np.float32)})
+    return store
+
+
+def run_sizes(sizes=(6, 10, 14, 18, 22), alpha=0.3, seed=0, nai_cap=18):
+    _, _, index, _ = bench_world(n_docs=1200, seed=seed)
+    span = (0.0, 1200.0)
+    q = Interval(20.0, 1150.0)
+    cost = CostModel(max_iters=BENCH_CFG.max_iters,
+                     n_topics=BENCH_CFG.n_topics)
+    rows = []
+    for n in sizes:
+        store = _store(index, n, span, seed=seed + n)
+        ms = store.models()
+        r_psoa = psoa_search(ms, q, index, cost, alpha, use_plus=False)
+        r_plus = psoa_search(ms, q, index, cost, alpha, use_plus=True)
+        r_gra = gra_search(ms, q, index, cost)
+        if n <= nai_cap:
+            r_nai = nai_search(ms, q, index, cost, alpha)
+            assert abs(r_nai.score - r_psoa.score) < 1e-9
+            nai_t, nai_scored = r_nai.elapsed_s, r_nai.n_scored
+        else:
+            nai_t, nai_scored = float("nan"), -1
+        rows.append((n, alpha, nai_t, nai_scored,
+                     r_gra.elapsed_s, r_gra.n_scored,
+                     r_psoa.elapsed_s, r_psoa.n_scored,
+                     r_plus.elapsed_s, r_plus.n_scored))
+    return rows
+
+
+def run_alpha(alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0), n_models=14, seed=0):
+    _, _, index, _ = bench_world(n_docs=1200, seed=seed)
+    q = Interval(20.0, 1150.0)
+    cost = CostModel(max_iters=BENCH_CFG.max_iters,
+                     n_topics=BENCH_CFG.n_topics)
+    store = _store(index, n_models, (0.0, 1200.0), seed=seed)
+    rows = []
+    for a in alphas:
+        r = psoa_search(store.models(), q, index, cost, a)
+        rows.append((a, r.elapsed_s, r.n_scored, r.n_layers, r.method))
+    return rows
+
+
+def main():
+    print("n_models,alpha,nai_s,nai_scored,gra_s,gra_scored,"
+          "psoa_s,psoa_scored,psoa++_s,psoa++_scored")
+    for r in run_sizes():
+        print(",".join(str(x) if not isinstance(x, float)
+                       else f"{x:.6f}" for x in r))
+    print("alpha,psoa_s,n_scored,n_layers,method")
+    for r in run_alpha():
+        print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
+                       for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads experiments/dryrun/*.json (written by launch/dryrun.py) and
+renders, per (arch × shape × mesh):
+
+    compute/memory/collective terms (s), the dominant term,
+    MODEL_FLOPS = 6·N·D (train) / 2·N_active·tokens (serve),
+    MODEL_FLOPS / HLO_FLOPs (useful-compute fraction — catches
+    remat/redundancy waste), and bytes-per-device.
+
+Markdown output with --md (used verbatim in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.configs import ARCHS, SHAPES_BY_NAME
+from repro.models.model import build_model
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_global(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES_BY_NAME[shape_name]
+    model = build_model(cfg)
+    n_act = model.active_param_count()
+    n_tot = model.param_count()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.tokens
+    return 2.0 * n_act * shape.global_batch    # decode: 1 token/seq
+
+
+def load(dryrun_dir: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render(rows, md=False, mesh_filter=None):
+    out = []
+    hdr = ["arch", "shape", "mesh", "compute_s", "memory_s", "mem_kern_s",
+           "coll_s", "dominant", "model_gflops/dev", "useful_frac",
+           "temp_GB/dev"]
+    if md:
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    else:
+        out.append(",".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        mf = model_flops_global(r["arch"], r["shape"]) / r["n_devices"]
+        hlo_f = max(r["hlo_analysis"]["flops"], 1e-9)
+        rl = r["roofline"]
+        cells = [
+            r["arch"], r["shape"], r["mesh"],
+            f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+            f"{rl.get('memory_kernelized_s', rl['memory_s']):.4f}",
+            f"{rl['collective_s']:.4f}", rl["dominant"].replace("_s", ""),
+            f"{mf / 1e9:.1f}", f"{mf / hlo_f:.3f}",
+            f"{r['bytes_per_device']['temp'] / 1e9:.2f}",
+        ]
+        if md:
+            out.append("| " + " | ".join(cells) + " |")
+        else:
+            out.append(",".join(cells))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print(f"no dry-run artifacts under {args.dir}; "
+              "run python -m repro.launch.dryrun first", file=sys.stderr)
+        raise SystemExit(1)
+    print(render(rows, md=args.md, mesh_filter=args.mesh))
+
+
+if __name__ == "__main__":
+    main()

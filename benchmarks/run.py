@@ -1,0 +1,123 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  merging_effect      Fig. 3/6   perf loss vs #merges (+ rho refit)
+  merging_efficiency  Fig. 7     SR vs ORIG / LDA* / OGS
+  scalability         Fig. 8     SR vs corpus size
+  coverage            Fig. 9     SR vs coverage ratio
+  plan_search         Fig. 10-12 NAI/GRA/PSOA/PSOA++ times, alpha sweep
+  batch_opt           Fig. 13/14 Alg. 4 cost & benefit
+  kernels             (ours)     Pallas kernel parity timings
+  roofline            (ours)     table from dry-run artifacts, if present
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _section(name):
+    print(f"\n### {name}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    sections = []
+
+    def want(name):
+        return args.only is None or args.only == name
+
+    t_start = time.perf_counter()
+
+    if want("merging_effect"):
+        _section("merging_effect (Fig. 3/6)")
+        from benchmarks import merging_effect
+        rows, ploss = merging_effect.run(
+            n_docs=600 if args.quick else 1200,
+            parts=(1, 2, 4, 8) if args.quick else (1, 2, 4, 8, 16))
+        print("n_parts,lpp_scratch,lpp_mvb,lpp_mgs,dp_mvb,dp_mgs")
+        for r in rows:
+            print(",".join(f"{v:.4f}" if isinstance(v, float) else str(v)
+                           for v in r))
+        print(f"# fitted PerformanceLoss rho = {ploss.rho:.5f}")
+
+    if want("merging_efficiency"):
+        _section("merging_efficiency (Fig. 7)")
+        from benchmarks import merging_efficiency
+        rows, t_mat = merging_efficiency.run(
+            n_docs=600 if args.quick else 1500)
+        print("method,time_s,lpp,SR")
+        for name, t, lpp, sr in rows:
+            print(f"{name},{t:.4f},{lpp:.4f},{sr:.2f}")
+        print(f"# materialization {t_mat:.2f}s (offline)")
+
+    if want("scalability"):
+        _section("scalability (Fig. 8)")
+        from benchmarks import merging_efficiency
+        print("n_docs,method,time_s,SR")
+        for n in ((400, 1000) if args.quick else (500, 1500, 4000)):
+            rows, _ = merging_efficiency.run(n_docs=n)
+            for name, t, _, sr in rows:
+                print(f"{n},{name},{t:.4f},{sr:.2f}")
+
+    if want("coverage"):
+        _section("coverage (Fig. 9)")
+        from benchmarks import coverage
+        print("coverage,t_orig_s,t_mlego_s,SR,t_search_s,lpp")
+        for r in coverage.run(n_docs=600 if args.quick else 1500):
+            print(",".join(f"{v:.4f}" for v in r))
+
+    if want("plan_search"):
+        _section("plan_search (Fig. 10/11/12)")
+        from benchmarks import plan_search
+        print("n_models,alpha,nai_s,nai_scored,gra_s,gra_scored,"
+              "psoa_s,psoa_scored,psoa++_s,psoa++_scored")
+        sizes = (6, 10, 14) if args.quick else (6, 10, 14, 18, 22)
+        for r in plan_search.run_sizes(sizes=sizes):
+            print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
+                           for x in r))
+        print("alpha,psoa_s,n_scored,n_layers,method")
+        for r in plan_search.run_alpha():
+            print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
+                           for x in r))
+
+    if want("batch_opt"):
+        _section("batch_opt (Fig. 13/14)")
+        from benchmarks import batch_opt_bench
+        print("batch,models,search_s,benefit,total_time,naive_time,"
+              "oracle_time")
+        bs = (2, 3) if args.quick else (2, 3, 4, 6)
+        mp = (8, 16) if args.quick else (8, 16, 24)
+        for r in batch_opt_bench.run(batch_sizes=bs, models_per=mp):
+            print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
+                           for x in r))
+
+    if want("kernels"):
+        _section("kernels (interpret-mode parity timings)")
+        from benchmarks import kernel_bench
+        kernel_bench.run(quick=args.quick)
+
+    if want("roofline"):
+        _section("roofline (from dry-run artifacts)")
+        import os
+        from benchmarks import roofline
+        if os.path.isdir("experiments/dryrun") and \
+                os.listdir("experiments/dryrun"):
+            rows = roofline.load("experiments/dryrun")
+            print(roofline.render(rows, md=False))
+        else:
+            print("# no artifacts; run: PYTHONPATH=src python -m "
+                  "repro.launch.dryrun")
+
+    print(f"\n# total bench time {time.perf_counter() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

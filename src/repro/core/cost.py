@@ -1,0 +1,108 @@
+"""Plan cost model + score function (paper §IV.B–C, §V.B.2).
+
+  sc(p) = α · l_p(p) + (1 − α) · c_t(p)                      (Eq. 2)
+
+  l_p  = 1 − P(x)  — monotone performance-loss in the number of merged
+         components x (P(0) = 1, i.e. a single-model plan loses nothing)
+  c_t  = c_train(uncovered tokens) + t_m · x
+         c_train(N) = κ · M_i · N^e · K  (paper states e = 2; the
+         exponent is a calibratable knob — the planner only requires
+         monotonicity)
+
+c_t is normalized by the from-scratch cost of the whole query so both
+score terms live in [0, 1] and α weighs comparable quantities.
+
+The default P(x) follows the paper's Fig. 3/6 measurement (loss grows
+roughly geometrically with merge count) and can be re-fit from the
+``benchmarks/merging_effect`` run via ``PerformanceLoss.fit``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.plans import Interval, subtract
+
+
+@dataclass(frozen=True)
+class PerformanceLoss:
+    """Monotone P(x): P(0) = 1, decreasing in merge count x."""
+
+    rho: float = 0.98      # per-merge retention
+
+    def p(self, x: int) -> float:
+        return self.rho ** max(x, 0)
+
+    def loss(self, x: int) -> float:
+        return 1.0 - self.p(x)
+
+    @classmethod
+    def fit(cls, xs: Sequence[int], losses: Sequence[float]) -> "PerformanceLoss":
+        """Least-squares fit of rho from measured (x, l_p) pairs."""
+        xs = np.asarray(xs, float)
+        ls = np.clip(np.asarray(losses, float), 0.0, 0.999)
+        mask = xs > 0
+        if not mask.any():
+            return cls()
+        # 1 - rho^x = l  =>  x*log(rho) = log(1-l)
+        rho = float(np.exp((np.log(1.0 - ls[mask]) / xs[mask]).mean()))
+        return cls(rho=min(max(rho, 1e-3), 0.9999))
+
+
+@dataclass(frozen=True)
+class CostModel:
+    kappa_train: float = 1e-9   # seconds per (M_i · token^e · K) unit
+    train_exponent: float = 2.0  # the paper's O(M_i N² K)
+    t_merge: float = 1e-4       # seconds per single K×V merge (t_m)
+    max_iters: int = 100        # M_i
+    n_topics: int = 100         # K
+    ploss: PerformanceLoss = field(default_factory=PerformanceLoss)
+
+    # --- raw costs ------------------------------------------------------
+    def c_train(self, n_tokens: float) -> float:
+        return (self.kappa_train * self.max_iters
+                * float(n_tokens) ** self.train_exponent * self.n_topics)
+
+    def c_merge(self, x: int) -> float:
+        return self.t_merge * max(x, 0)
+
+    # --- plan-level -----------------------------------------------------
+    def components(self, n_models: int, uncovered_tokens: float) -> int:
+        """#things merged = models + (1 if a fresh model is trained)."""
+        return n_models + (1 if uncovered_tokens > 0 else 0)
+
+    def merges(self, n_models: int, uncovered_tokens: float) -> int:
+        return max(self.components(n_models, uncovered_tokens) - 1, 0)
+
+    def plan_lp(self, n_models: int, uncovered_tokens: float) -> float:
+        return self.ploss.loss(self.merges(n_models, uncovered_tokens))
+
+    def plan_ct(self, uncovered_tokens: float, n_models: int,
+                scratch_tokens: float) -> float:
+        """Normalized time cost in [0, ~1]."""
+        x = self.merges(n_models, uncovered_tokens)
+        raw = self.c_train(uncovered_tokens) + self.c_merge(x)
+        denom = max(self.c_train(scratch_tokens), 1e-30)
+        return raw / denom
+
+    def score(self, alpha: float, n_models: int, uncovered_tokens: float,
+              scratch_tokens: float) -> float:
+        lp = self.plan_lp(n_models, uncovered_tokens)
+        ct = self.plan_ct(uncovered_tokens, n_models, scratch_tokens)
+        return alpha * lp + (1.0 - alpha) * ct
+
+    # --- Theorem 3/4 critical point x* ----------------------------------
+    def critical_x(self, min_model_tokens: float) -> float:
+        """x* = c_t(min model) / t_m — below this width, merge cost is
+        negligible and the merge list can be dropped (PSOA++)."""
+        return self.c_train(min_model_tokens) / max(self.t_merge, 1e-30)
+
+
+def plan_stats(plan: Tuple, query: Interval, index) -> Tuple[int, float]:
+    """(n_models, uncovered_tokens) for a plan against a DataIndex."""
+    gaps = subtract(query, [m.o for m in plan])
+    unc = float(sum(index.tokens_in(g.lo, g.hi) for g in gaps))
+    return len(plan), unc

@@ -1,0 +1,46 @@
+"""Delta merging for LM parameters — the paper's Eq. 6 analogue for
+non-exponential-family models (DESIGN.md §4).
+
+LDA models merge exactly because their posteriors are exponential-family
+(Alg. 1: λ* = η + Σ w_i (λ_i − η)).  LM fine-tunes have no such
+guarantee, but the same *shape* of update — accumulate weighted deltas
+from a common prior — is the task-vector merge: given a base parameter
+tree θ0 and fine-tuned trees θ_i trained on n_i tokens,
+
+    θ* = θ0 + Σ_i w_i (θ_i − θ0),      w_i = n_i / Σ n_j  (or custom)
+
+This lets the MLego store/planner manage LM range-models with the SAME
+⟨o, N, Θ⟩ tuple and the SAME plan search: only the merge operator
+differs (approximate here, exact for LDA).  The merged-model quality
+enters the planner through the fitted monotone loss P(x), exactly as
+§V.B.2 prescribes for any domain-specific cost model.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def merge_param_deltas(base, tuned: Sequence, weights: Optional[Sequence[float]] = None):
+    """θ* = θ0 + Σ w_i (θ_i − θ0) over pytrees.
+
+    ``weights`` defaults to uniform 1/n (the SDA-Bayes form uses data
+    counts — pass n_i / Σ n_j).  Order-independent and associative in
+    Θ-space, like Alg. 1.
+    """
+    if not tuned:
+        raise ValueError("nothing to merge")
+    n = len(tuned)
+    w = [1.0 / n] * n if weights is None else list(weights)
+    if len(w) != n:
+        raise ValueError("weights/models length mismatch")
+
+    def combine(b, *ts):
+        b32 = np.asarray(b, np.float32)
+        delta = sum(wi * (np.asarray(t, np.float32) - b32)
+                    for wi, t in zip(w, ts))
+        return (b32 + delta).astype(np.asarray(b).dtype)
+
+    return jax.tree.map(lambda b, *ts: combine(b, *ts), base, *tuned)

@@ -1,0 +1,98 @@
+"""Collapsed Gibbs Sampling for LDA + DSGS partition deltas (paper Eq. 7–9).
+
+The token sweep is genuinely sequential (each draw conditions on all
+other assignments), so it is expressed as a ``lax.scan`` over tokens —
+exactly the per-partition CGS that DSGS assumes.  Distribution comes
+from *partitioning*, not from parallelizing the sweep: each worker runs
+CGS on its partition against a fixed global ``N_kv`` prior (Eq. 8) and
+emits ``ΔN_kv``; merging deltas (Alg. 2) is an all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lda_default import LDAConfig
+
+
+@functools.partial(jax.jit, static_argnames=("n_topics", "n_docs", "vocab",
+                                             "sweeps"))
+def _cgs_sweeps(tokens, doc_ids, key, global_nkv, n_topics: int,
+                n_docs: int, vocab: int, sweeps: int, alpha: float,
+                beta: float):
+    """Run ``sweeps`` full CGS sweeps.  Returns (z, local n_kv).
+
+    global_nkv is the fixed prior count matrix (Eq. 8's β + N_kv);
+    the sampler's conditional uses (n_kv_local + global_nkv + β).
+    """
+    t = tokens.shape[0]
+    k0, key = jax.random.split(key)
+    z0 = jax.random.randint(k0, (t,), 0, n_topics)
+
+    nkd = jnp.zeros((n_docs, n_topics), jnp.float32).at[doc_ids, z0].add(1.0)
+    nkv = jnp.zeros((n_topics, vocab), jnp.float32).at[z0, tokens].add(1.0)
+    nk = jnp.zeros((n_topics,), jnp.float32).at[z0].add(1.0)
+    gk = global_nkv.sum(axis=1)
+
+    def token_step(carry, inp):
+        z, nkd, nkv, nk = carry
+        idx, u = inp
+        d = doc_ids[idx]
+        w = tokens[idx]
+        old = z[idx]
+        # decrement
+        nkd = nkd.at[d, old].add(-1.0)
+        nkv = nkv.at[old, w].add(-1.0)
+        nk = nk.at[old].add(-1.0)
+        # conditional  (Eq. 7, with the DSGS global prior)
+        p = (nkd[d] + alpha) * (nkv[:, w] + global_nkv[:, w] + beta) / (
+            nk + gk + vocab * beta)
+        c = jnp.cumsum(p)
+        new = jnp.searchsorted(c, u * c[-1])
+        new = jnp.clip(new, 0, n_topics - 1)
+        z = z.at[idx].set(new)
+        nkd = nkd.at[d, new].add(1.0)
+        nkv = nkv.at[new, w].add(1.0)
+        nk = nk.at[new].add(1.0)
+        return (z, nkd, nkv, nk), None
+
+    def sweep(carry, key_s):
+        u = jax.random.uniform(key_s, (t,))
+        carry, _ = jax.lax.scan(token_step, carry,
+                                (jnp.arange(t), u))
+        return carry, None
+
+    keys = jax.random.split(key, sweeps)
+    (z, nkd, nkv, nk), _ = jax.lax.scan(sweep, (z0, nkd, nkv, nk), keys)
+    return z, nkv
+
+
+def cgs_fit(tokens: np.ndarray, doc_ids: np.ndarray, cfg: LDAConfig, key,
+            global_nkv: Optional[np.ndarray] = None,
+            sweeps: Optional[int] = None) -> np.ndarray:
+    """Train a CGS partition model.  Returns ΔN_kv (K, V) float32.
+
+    With ``global_nkv`` provided this is one DSGS step (Eq. 8):
+    ΔN_kv = CGS(α, β + N_kv, W^t).
+    """
+    if tokens.size == 0:
+        return np.zeros((cfg.n_topics, _vocab(cfg, global_nkv)), np.float32)
+    vocab = _vocab(cfg, global_nkv)
+    gnkv = (jnp.zeros((cfg.n_topics, vocab), jnp.float32)
+            if global_nkv is None else jnp.asarray(global_nkv, jnp.float32))
+    n_docs = int(doc_ids.max()) + 1
+    _, nkv = _cgs_sweeps(
+        jnp.asarray(tokens, jnp.int32), jnp.asarray(doc_ids, jnp.int32),
+        key, gnkv, cfg.n_topics, n_docs, vocab,
+        sweeps if sweeps is not None else cfg.gibbs_sweeps,
+        cfg.alpha, cfg.eta,
+    )
+    return np.asarray(nkv)
+
+
+def _vocab(cfg: LDAConfig, global_nkv) -> int:
+    return cfg.vocab_size if global_nkv is None else global_nkv.shape[1]

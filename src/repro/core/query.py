@@ -1,0 +1,172 @@
+"""Analytic query execution (paper Def. 1: q = {F, alpha, D, sigma, M}).
+
+The executor is the end-to-end path of Fig. 2: predicate -> plan search
+-> online training of uncovered ranges -> model merge -> approximate
+model m*.  Freshly trained gap models are materialized back into the
+store, so the system's reuse capital grows with every query — the
+interactivity flywheel the paper describes.
+
+Batch path (§V.C): one plan per query from Alg. 4, shared gap segments
+trained once, every query merged from its plan + the shared segment
+models.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.lda_default import LDAConfig
+from repro.core import merge as merge_mod
+from repro.core.batch_opt import BatchResult, batch_optimize, _gaps, _segments
+from repro.core.cost import CostModel, plan_stats
+from repro.core.gibbs import cgs_fit
+from repro.core.lda import MaterializedModel, topics_from_gs, topics_from_vb
+from repro.core.plans import Interval, subtract
+from repro.core.search import SearchResult, psoa_search, SEARCHERS
+from repro.core.store import ModelStore
+from repro.core.vb import vb_fit
+from repro.data.corpus import Corpus, DataIndex, doc_term_matrix
+
+
+@dataclass
+class QueryResult:
+    beta: np.ndarray             # merged topic-word matrix (K, V)
+    plan: SearchResult
+    n_trained_tokens: int
+    n_merged: int
+    train_s: float
+    merge_s: float
+    search_s: float
+    materialized: List[MaterializedModel] = field(default_factory=list)
+
+    @property
+    def total_s(self) -> float:
+        return self.train_s + self.merge_s + self.search_s
+
+
+class QueryEngine:
+    """Executes analytic queries against a corpus + model store."""
+
+    def __init__(self, corpus: Corpus, store: ModelStore, cfg: LDAConfig,
+                 cost: Optional[CostModel] = None, kind: str = "vb",
+                 *, materialize_results: bool = True, seed: int = 0):
+        self.corpus = corpus
+        self.index = DataIndex(corpus)
+        self.store = store
+        self.cfg = cfg
+        self.cost = cost or CostModel(max_iters=cfg.max_iters,
+                                      n_topics=cfg.n_topics)
+        self.kind = kind
+        self.materialize_results = materialize_results
+        self._key = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def train_range(self, lo: float, hi: float) -> Optional[MaterializedModel]:
+        """Train one fresh model on [lo, hi) and materialize it."""
+        d0, d1 = self.corpus.doc_slice(lo, hi)
+        if d1 <= d0:
+            return None
+        sub = self.corpus.subset(lo, hi)
+        if self.kind == "vb":
+            x = doc_term_matrix(sub)
+            lam = np.asarray(vb_fit(x, self._next_key(), self.cfg))
+            theta = {"lam": lam}
+        else:
+            nkv = cgs_fit(sub.tokens, sub.doc_ids, self.cfg, self._next_key())
+            theta = {"delta_nkv": nkv}
+        return self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
+                              self.kind, theta)
+
+    # ------------------------------------------------------------------
+    def execute(self, sigma: Interval, alpha: float,
+                method: str = "psoa++") -> QueryResult:
+        """One analytic query: search, train gaps, merge."""
+        t0 = time.perf_counter()
+        searcher = SEARCHERS[method]
+        res = searcher(self.store.models(self.kind), sigma, self.index,
+                       self.cost, alpha)
+        t_search = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        fresh: List[MaterializedModel] = []
+        n_tok = 0
+        for gap in subtract(sigma, [m.o for m in res.plan]):
+            m = self.train_range(gap.lo, gap.hi) if self.materialize_results \
+                else self._train_volatile(gap.lo, gap.hi)
+            if m is not None:
+                fresh.append(m)
+                n_tok += m.n_tokens
+        t_train = time.perf_counter() - t1
+
+        t2 = time.perf_counter()
+        parts = list(res.plan) + fresh
+        if not parts:
+            raise ValueError(f"query {sigma} selects no data")
+        beta = merge_mod.merge_models(parts, self.cfg)
+        t_merge = time.perf_counter() - t2
+        return QueryResult(beta, res, n_tok, len(parts), t_train, t_merge,
+                           t_search, materialized=fresh)
+
+    def _train_volatile(self, lo: float, hi: float) -> Optional[MaterializedModel]:
+        d0, d1 = self.corpus.doc_slice(lo, hi)
+        if d1 <= d0:
+            return None
+        sub = self.corpus.subset(lo, hi)
+        if self.kind == "vb":
+            x = doc_term_matrix(sub)
+            lam = np.asarray(vb_fit(x, self._next_key(), self.cfg))
+            theta = {"lam": lam}
+        else:
+            nkv = cgs_fit(sub.tokens, sub.doc_ids, self.cfg, self._next_key())
+            theta = {"delta_nkv": nkv}
+        return MaterializedModel(-1, Interval(lo, hi), sub.n_docs,
+                                 sub.n_tokens, self.kind, theta)
+
+    # ------------------------------------------------------------------
+    def execute_batch(self, sigmas: Sequence[Interval]
+                      ) -> Tuple[List[QueryResult], BatchResult]:
+        """§V.C batch path: Alg. 4 plan combination, shared gap training."""
+        t0 = time.perf_counter()
+        opt = batch_optimize(self.store.models(self.kind), list(sigmas),
+                             self.index, self.cost)
+        t_search = time.perf_counter() - t0
+
+        # train every atomic shared segment exactly once
+        gap_lists = [_gaps(p, q) for p, q in zip(opt.plans, sigmas)]
+        seg_models: Dict[Tuple[float, float], MaterializedModel] = {}
+        t1 = time.perf_counter()
+        for lo, hi, _ in _segments(gap_lists):
+            m = self.train_range(lo, hi) if self.materialize_results \
+                else self._train_volatile(lo, hi)
+            if m is not None:
+                seg_models[(lo, hi)] = m
+        t_train = time.perf_counter() - t1
+
+        results: List[QueryResult] = []
+        for qi, (plan, gaps, sigma) in enumerate(
+                zip(opt.plans, gap_lists, sigmas)):
+            t2 = time.perf_counter()
+            parts = list(plan)
+            n_tok = 0
+            for (lo, hi), m in seg_models.items():
+                if any(g.lo <= lo and hi <= g.hi for g in gaps):
+                    parts.append(m)
+                    n_tok += m.n_tokens
+            beta = merge_mod.merge_models(parts, self.cfg)
+            t_merge = time.perf_counter() - t2
+            sr = SearchResult(plan, 0.0, 0.0, method="ALG4")
+            results.append(QueryResult(beta, sr, n_tok, len(parts),
+                                       0.0, t_merge, 0.0))
+        # attribute shared costs once (on the batch result)
+        if results:
+            results[0].train_s = t_train
+            results[0].search_s = t_search
+        return results, opt

@@ -1,0 +1,108 @@
+"""Materialized-model store.
+
+Holds ⟨o, N, Θ⟩ tuples, answers "which models are usable for range Q",
+persists atomically (npz blobs + json manifest with content hashes) and
+participates in the checkpoint manager so a restarted cluster resumes
+with its full reuse capital.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.lda import MaterializedModel
+from repro.core.plans import Interval
+
+
+class ModelStore:
+    def __init__(self):
+        self._models: Dict[int, MaterializedModel] = {}
+        self._next_id = 0
+        self._lock = threading.Lock()
+
+    # --- CRUD ---------------------------------------------------------
+    def add(self, o: Interval, n_docs: int, n_tokens: int, kind: str,
+            theta: Dict[str, np.ndarray]) -> MaterializedModel:
+        with self._lock:
+            mid = self._next_id
+            self._next_id += 1
+            m = MaterializedModel(mid, o, n_docs, n_tokens, kind, theta)
+            self._models[mid] = m
+            return m
+
+    def remove(self, model_id: int) -> None:
+        with self._lock:
+            self._models.pop(model_id, None)
+
+    def get(self, model_id: int) -> MaterializedModel:
+        return self._models[model_id]
+
+    def __len__(self) -> int:
+        return len(self._models)
+
+    def models(self, kind: Optional[str] = None) -> List[MaterializedModel]:
+        ms = list(self._models.values())
+        return ms if kind is None else [m for m in ms if m.kind == kind]
+
+    def usable(self, query: Interval, kind: Optional[str] = None
+               ) -> List[MaterializedModel]:
+        return [m for m in self.models(kind) if query.contains(m.o)]
+
+    def nbytes(self) -> int:
+        return sum(m.nbytes() for m in self.models())
+
+    # --- persistence ----------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        manifest = {"next_id": self._next_id, "models": []}
+        for m in self.models():
+            blob = os.path.join(path, f"model_{m.model_id}.npz")
+            with tempfile.NamedTemporaryFile(dir=path, delete=False) as f:
+                np.savez(f, **m.theta)
+                tmp = f.name
+            os.replace(tmp, blob)
+            manifest["models"].append({
+                "model_id": m.model_id,
+                "lo": m.o.lo, "hi": m.o.hi,
+                "n_docs": m.n_docs, "n_tokens": m.n_tokens,
+                "kind": m.kind,
+                "sha": _sha(blob),
+                "file": os.path.basename(blob),
+            })
+        mf = os.path.join(path, "manifest.json")
+        with tempfile.NamedTemporaryFile("w", dir=path, delete=False) as f:
+            json.dump(manifest, f, indent=1)
+            tmp = f.name
+        os.replace(tmp, mf)
+
+    @classmethod
+    def load(cls, path: str, verify: bool = True) -> "ModelStore":
+        store = cls()
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        store._next_id = manifest["next_id"]
+        for e in manifest["models"]:
+            blob = os.path.join(path, e["file"])
+            if verify and _sha(blob) != e["sha"]:
+                raise IOError(f"checksum mismatch for {blob}")
+            with np.load(blob) as z:
+                theta = {k: z[k] for k in z.files}
+            m = MaterializedModel(
+                e["model_id"], Interval(e["lo"], e["hi"]),
+                e["n_docs"], e["n_tokens"], e["kind"], theta)
+            store._models[m.model_id] = m
+        return store
+
+
+def _sha(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()

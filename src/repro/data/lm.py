@@ -1,0 +1,60 @@
+"""LM data pipeline: deterministic, cursor-addressable synthetic batches.
+
+Batches are a pure function of (seed, cursor) so a restarted trainer
+resumes the exact stream — the checkpoint stores only the integer
+cursor.  Modality frontends are STUBS per the assignment: the VLM cell
+receives precomputed patch embeddings, the audio cell precomputed mel
+frame embeddings (both synthesized here with the same determinism).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def encoder_frames(cfg: ArchConfig) -> int:
+    """Stub mel-frontend frame count, padded for the ring mesh."""
+    return _round_up(cfg.encoder_seq, 256)
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, seed: int,
+               cursor: int) -> Dict[str, jnp.ndarray]:
+    """One training batch for (arch, B, S) at stream position ``cursor``."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), cursor)
+    ks = jax.random.split(key, 3)
+    v = cfg.vocab_size
+    tokens = jax.random.randint(ks[0], (batch, seq), 0, v, jnp.int32)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((batch, 1), jnp.int32)], axis=1)
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.family == "vlm" and cfg.n_patches:
+        p = min(cfg.n_patches, seq)
+        out["patch_embeds"] = (
+            jax.random.normal(ks[1], (batch, p, cfg.d_model), jnp.float32)
+            * 0.02)
+        # patch positions carry no next-token target
+        out["labels"] = out["labels"].at[:, :p].set(-1)
+    if cfg.is_encoder_decoder:
+        f = encoder_frames(cfg)
+        out["frames"] = (
+            jax.random.normal(ks[2], (batch, f, cfg.d_model), jnp.float32)
+            * 0.02)
+    return out
+
+
+def batch_stream(cfg: ArchConfig, batch: int, seq: int, *, seed: int = 0,
+                 start_cursor: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    cursor = start_cursor
+    while True:
+        yield make_batch(cfg, batch, seq, seed, cursor)
+        cursor += 1

@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    MeshEnv,
+    get_env,
+    set_env,
+    single_device_env,
+    infer_param_specs,
+    constrain,
+)
+
+__all__ = [
+    "MeshEnv",
+    "get_env",
+    "set_env",
+    "single_device_env",
+    "infer_param_specs",
+    "constrain",
+]

@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing.
+
+Atomic (write-to-tmp + rename), content-hashed, keep-N pruned pytree
+checkpoints.  A checkpoint is a directory:
+
+    step_000123/
+      manifest.json   {step, meta, leaves: [{path, file, sha, dtype, shape}]}
+      leaf_*.npy      one blob per pytree leaf
+
+Restores are verified against the manifest hashes (a torn write or bit
+rot surfaces as a hard error, not a silently-corrupt resume).  The tree
+*structure* is rebuilt from the manifest paths, so the checkpoint format
+is independent of in-memory dict ordering.
+
+This is the persistence layer for both the Trainer state and the
+MLego model store (core/store.py ships its own npz form for single
+models; the CheckpointManager snapshots whole training states).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out.append((key, leaf))
+    return out
+
+
+def _unflatten_from_paths(paths: List[str], leaves: List[Any]):
+    """Rebuild nested dicts/lists/tuples from 'a/b/0/c' style paths.
+
+    Integer components become list indices, everything else dict keys.
+    """
+    root: Dict = {}
+    for path, leaf in zip(paths, leaves):
+        parts = path.split("/")
+        node = root
+        for i, part in enumerate(parts[:-1]):
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(re.fullmatch(r"\d+", k) for k in keys):
+            return [fix(node[str(i)]) for i in range(len(keys))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def _sha(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dirs(self) -> List[Tuple[int, str]]:
+        out = []
+        for name in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.root, name,
+                                                 "manifest.json")):
+                out.append((int(m.group(1)), os.path.join(self.root, name)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        dirs = self._step_dirs()
+        return dirs[-1][0] if dirs else None
+
+    # ------------------------------------------------------------------
+    def save(self, tree, meta: Optional[Dict] = None, step: int = 0) -> str:
+        final = os.path.join(self.root, f"step_{step:09d}")
+        tmp = tempfile.mkdtemp(dir=self.root, prefix=".tmp_")
+        manifest = {"step": step, "meta": meta or {}, "leaves": []}
+        try:
+            for i, (path, leaf) in enumerate(_flatten_with_paths(tree)):
+                arr = np.asarray(leaf)
+                fname = f"leaf_{i:05d}.npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append({
+                    "path": path, "file": fname,
+                    "sha": _sha(os.path.join(tmp, fname)),
+                    "dtype": str(arr.dtype), "shape": list(arr.shape),
+                })
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)   # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._prune()
+        return final
+
+    def _prune(self) -> None:
+        dirs = self._step_dirs()
+        for _, d in dirs[: max(0, len(dirs) - self.keep)]:
+            shutil.rmtree(d, ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, verify: bool = True
+                ) -> Tuple[Any, Dict]:
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        paths, leaves = [], []
+        for e in manifest["leaves"]:
+            blob = os.path.join(d, e["file"])
+            if verify and _sha(blob) != e["sha"]:
+                raise IOError(f"checksum mismatch: {blob}")
+            arr = np.load(blob)
+            paths.append(e["path"])
+            leaves.append(arr)
+        tree = _unflatten_from_paths(paths, leaves)
+        meta = dict(manifest["meta"])
+        meta.setdefault("step", manifest["step"])
+        return tree, meta
+
+    def restore_latest(self, verify: bool = True
+                       ) -> Optional[Tuple[Any, Dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, verify=verify)

@@ -1,0 +1,83 @@
+"""Model merging as a mesh collective — the paper's Alg. 1/2 on TPU.
+
+The key TPU mapping (DESIGN.md §2): merging exponential-family
+sufficient statistics is a *reduction*, so merging per-device partition
+models IS an all-reduce:
+
+    MVB:  λ*   = η + psum(λ_dev − η)        over (pod, data)
+    MGS:  N*kv = psum(decay^s · ΔN_kv_dev)  over (pod, data)
+
+Cross-pod merging is the same psum including the "pod" axis — no
+parameter server, no torch.distributed emulation.  The vocab axis of
+the (K, V) statistics stays sharded over "model" throughout; only the
+partition (document) axis is reduced.
+
+``staleness`` implements the DSGS decay (Eq. 9) as a straggler policy:
+a device that contributes a stale delta (s > 0) has it decayed before
+the reduction — bounded-staleness asynchrony expressed synchronously.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MeshEnv
+
+
+def merge_vb_collective(lam_local, eta: float, env: MeshEnv,
+                        weight: Optional[jnp.ndarray] = None):
+    """λ_local: (K, V_shard) per-device VB posterior; returns merged λ.
+
+    Call inside shard_map over (dp..., model).  ``weight`` rescales this
+    device's contribution (paper's doc-count weighting).
+    """
+    delta = lam_local - eta
+    if weight is not None:
+        delta = delta * weight
+    return eta + jax.lax.psum(delta, env.dp_axes)
+
+
+def merge_gs_collective(delta_nkv, env: MeshEnv,
+                        decay: float = 1.0,
+                        staleness: Optional[jnp.ndarray] = None):
+    """ΔN_kv: (K, V_shard) per-device CGS delta; returns merged N_kv."""
+    d = delta_nkv
+    if staleness is not None:
+        d = d * (decay ** staleness.astype(jnp.float32))
+    return jax.lax.psum(d, env.dp_axes)
+
+
+def merge_stats(stats_per_device, env: MeshEnv, kind: str = "vb",
+                eta: float = 0.01):
+    """Host-callable wrapper: shard stats (device, K, V) over dp, merge.
+
+    Used by tests and the elastic repartitioner; the training loops call
+    the collective forms directly inside their shard_map bodies.
+    """
+    dp = env.dp_axes
+    tp = env.tp_axis
+
+    def body(s):
+        # s: (n_local, K, V_shard) — each rank owns a slice of the model
+        # list; the local reduction composes with the cross-rank psum
+        # because Alg. 1/2 merges are associative.
+        if kind == "vb":
+            delta = (s - eta).sum(0)
+            return (eta + jax.lax.psum(delta, dp))[None]
+        return jax.lax.psum(s.sum(0), dp)[None]
+
+    if env.dp_size == 1:
+        merged = stats_per_device.sum(0)
+        return (eta + (merged - eta * stats_per_device.shape[0])
+                if kind == "vb" else merged)
+    out = jax.shard_map(
+        body, mesh=env.mesh,
+        in_specs=P(dp, None, tp),
+        out_specs=P(dp, None, tp),
+        check_vma=False,
+    )(stats_per_device)
+    return out[0]

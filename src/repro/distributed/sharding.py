@@ -1,0 +1,293 @@
+"""Mesh environment + sharding-rule inference.
+
+The production mesh is fixed by the launch spec:
+  single pod : (data=16, model=16)            axes ("data", "model")
+  multi pod  : (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+
+Parallelism mapping (train profile):
+  - batch           -> ("pod", "data")   (DP)
+  - weights         -> 2-D FSDP over ("data", "model") where divisible
+  - sequence        -> "model" (SP); attention runs as ring flash
+                       attention over the seq-sharded KV (shard_map)
+  - experts         -> "model" (EP) with all_to_all dispatch
+  - optimizer state -> sharded identically to params (ZeRO-3-like)
+
+Serve profile:
+  - batch  -> ("pod", "data")
+  - weights-> "model" resident (Megatron TP slices); MoE experts 2-D
+  - KV cache seq dim -> "model" (split-K flash decode + psum combine)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshEnv:
+    mesh: Mesh
+    profile: str = "train"  # "train" | "serve"
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.axis_names)
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        return "model" if "model" in self.axis_names else None
+
+    def size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, (tuple, list)):
+            out = 1
+            for a in axis:
+                out *= self.size(a)
+            return out
+        return self.mesh.shape[axis]
+
+    @property
+    def dp_size(self) -> int:
+        return self.size(self.dp_axes)
+
+    @property
+    def tp_size(self) -> int:
+        return self.size(self.tp_axis)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+_LOCAL = threading.local()
+
+
+def get_env() -> Optional[MeshEnv]:
+    return getattr(_LOCAL, "env", None)
+
+
+@contextlib.contextmanager
+def set_env(env: MeshEnv):
+    prev = get_env()
+    _LOCAL.env = env
+    try:
+        yield env
+    finally:
+        _LOCAL.env = prev
+
+
+def single_device_env(profile: str = "train") -> MeshEnv:
+    """A (1, 1) mesh over the single local device — used by smoke tests."""
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    return MeshEnv(mesh=mesh, profile=profile)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints
+# ---------------------------------------------------------------------------
+
+def _divisible(dim: int, env: MeshEnv, axis) -> bool:
+    return dim % env.size(axis) == 0
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical axis names.
+
+    Logical names: 'dp' (batch), 'sp' (sequence over model), 'tp'
+    (feature over model), None (replicated).  Silently degrades to
+    replication when the dimension is not divisible.
+    """
+    env = get_env()
+    if env is None:
+        return x
+    assert x.ndim == len(logical), (x.shape, logical)
+    entries = []
+    for dim, name in zip(x.shape, logical):
+        if name == "dp" and _divisible(dim, env, env.dp_axes):
+            entries.append(env.dp_axes)
+        elif name in ("sp", "tp") and env.tp_axis and _divisible(dim, env, env.tp_axis):
+            entries.append(env.tp_axis)
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(x, env.sharding(P(*entries)))
+
+
+def gather_for_compute(param_tree):
+    """ZeRO-3 compute-time unsharding of one layer's weights.
+
+    Master weights rest fully sharded (2-D FSDP).  Left alone, GSPMD
+    resolves a dot whose weight contraction dim is `data`-sharded by
+    PARTIAL-SUMMING THE ACTIVATIONS — an all-reduce of (B, S, F) per
+    dot, ~512 GB/chip/step on the llava train cell.  Constraining the
+    layer's weight slices to replicated inside the scan body makes the
+    partitioner all-gather the (bf16, layer-sized) weights instead and
+    keeps every activation collective off the critical path.  Expert
+    weights are exempt (they stay sharded under EP + the MoE module's
+    own explicit gathers); 1-D leaves are already replicated.
+    """
+    env = get_env()
+    if env is None or env.mesh.size == 1:
+        return param_tree
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_tree)
+    out = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path).lower()
+        if (getattr(leaf, "ndim", 0) >= 2 and "expert" not in path_str
+                and "router" not in path_str):
+            spec = P(*([None] * leaf.ndim))
+            leaf = jax.lax.with_sharding_constraint(
+                leaf, env.sharding(spec))
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+def _spec_for(path: str, shape: Tuple[int, ...], env: MeshEnv) -> P:
+    """Infer a PartitionSpec for one parameter from its path + shape."""
+    names = [None] * len(shape)
+    dp, tp = env.dp_axes, env.tp_axis
+    serve = env.profile == "serve"
+
+    def try_assign(i: int, axis) -> bool:
+        if axis and names[i] is None and shape[i] % env.size(axis) == 0:
+            names[i] = axis
+            return True
+        return False
+
+    is_stacked = "stack" in path  # leading layer axis — never sharded
+    lead = 1 if is_stacked else 0
+    body = list(range(lead, len(shape)))
+
+    if "embed" in path or "unembed" in path:
+        # (V, D): vocab over model, feature over data (train) / model only (serve)
+        if len(body) == 2:
+            try_assign(body[0], tp)
+            if not serve:
+                try_assign(body[1], dp if len(dp) == 1 else dp[-1])
+            return P(*names)
+
+    if "expert" in path and len(body) >= 3:
+        # (E, d, f): experts over model (EP), d_ff over data (F-TP) —
+        # gate/up shard axis 2, down axis 1.  Train and serve share the
+        # layout: expert weights are never gathered; the down-proj
+        # partial sums psum over `data` instead (models/moe.py).
+        has_data = "data" in env.axis_names
+        try_assign(body[0], tp)
+        if has_data:
+            if "down" in path:
+                try_assign(body[1], "data")
+            else:
+                try_assign(body[2], "data")
+        return P(*names)
+
+    if len(body) == 2:
+        a, b = body
+        if serve:
+            # Megatron TP: shard the non-d_model dim over model
+            if "w_down" in path or "proj_in" in path or "wo" in path:
+                try_assign(a, tp)  # row-parallel: contraction dim sharded
+            else:
+                try_assign(b, tp)
+        else:
+            # 2-D FSDP
+            try_assign(a, "data" if "data" in env.axis_names else None)
+            try_assign(b, tp)
+        return P(*names)
+
+    # 1-D (norm scales, biases) and anything else: replicated
+    return P(*names)
+
+
+def infer_param_specs(param_tree, env: MeshEnv):
+    """Build a PartitionSpec pytree parallel to ``param_tree``.
+
+    ``param_tree`` may hold arrays or ShapeDtypeStructs.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_tree)
+    specs = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(_spec_for(path_str, tuple(leaf.shape), env))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(param_tree), specs)
+
+
+def param_shardings(param_tree, env: MeshEnv):
+    specs = infer_param_specs(param_tree, env)
+    return jax.tree.map(lambda s: env.sharding(s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache sharding rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_tree, env: MeshEnv, *, seq_sharded: bool = True):
+    """Input batches: dim 0 = batch over DP, dim 1 = sequence over model
+    (when divisible).  Frame/patch embeds follow the same rule."""
+    def spec(leaf):
+        names = [None] * len(leaf.shape)
+        if leaf.shape and _divisible(leaf.shape[0], env, env.dp_axes):
+            names[0] = env.dp_axes
+        if (seq_sharded and len(leaf.shape) >= 2 and env.tp_axis
+                and _divisible(leaf.shape[1], env, env.tp_axis)):
+            names[1] = env.tp_axis
+        return P(*names)
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(cache_tree, env: MeshEnv, batch: int):
+    """Decode caches.  Rules (cf. models/model.py cache layouts):
+
+      * attention K/V (.../k, .../v, ndim>=4): sequence dim (-3) over
+        `model` (split-K flash decode), batch dim over DP.
+      * rolling-window K/V and kpos: replicated (tiny).
+      * recurrent states (c/n/h/m/tail): batch dim over DP, rest
+        replicated (states are O(B·d)).
+
+    Batch dims are found by size match against ``batch`` (stacked leaves
+    have the layer-group axis leading; group counts never equal the
+    global batch in the assigned cells).
+    """
+    tp = env.tp_axis
+
+    def spec(path, leaf):
+        names = [None] * len(leaf.shape)
+        last = str(getattr(path[-1], "key", path[-1])) if path else ""
+        is_kv = last in ("k", "v") and len(leaf.shape) >= 4
+        # batch dim: first dim equal to `batch` (skip when ambiguous)
+        for i, d in enumerate(leaf.shape):
+            if d == batch and _divisible(d, env, env.dp_axes):
+                names[i] = env.dp_axes
+                break
+        if is_kv and tp is not None:
+            sdim = len(leaf.shape) - 3
+            if (names[sdim] is None
+                    and _divisible(leaf.shape[sdim], env, tp)):
+                names[sdim] = tp
+        return P(*names)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = [spec(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shardings_of(spec_tree, env: MeshEnv):
+    return jax.tree.map(lambda s: env.sharding(s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

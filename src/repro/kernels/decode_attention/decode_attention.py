@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: split-K flash decode over a KV cache.
+
+One new token (per sequence) attends to a cache of S entries.  The
+compute is a (G, hd)·(hd, S) matvec-batch — pure HBM-bandwidth over the
+cache.  The kernel splits the cache axis across the innermost grid dim
+(split-K) and carries partial softmax state (acc, m, l) in VMEM
+scratch, exactly mirroring the cross-device split-K combine that
+models/attention.decode_attention performs over the "model" mesh axis —
+device-level and core-level splits compose.
+
+Grid: (B, KVH, S/BK).  Blocks: q (1,1,G,hd), k/v (1,1,BK,hd).
+The position bound (kpos <= pos, windowed lower bound) is applied from
+a scalar-prefetch operand so cache positions beyond the current decode
+position are masked without host round-trips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bk: int, g: int, window: int, n_k: int, scale: float):
+    ik = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k0 = ik * bk
+    relevant = k0 <= pos
+    if window > 0:
+        relevant = relevant & (k0 + bk - 1 > pos - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)             # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, BK)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+        mask = kpos <= pos
+        if window > 0:
+            mask &= kpos > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        coef = jnp.exp(m_prev - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * coef + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * coef + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, pos, *, window: int = 0,
+                            block_k: int = 512, interpret: bool = False):
+    """q: (B, 1, H, hd); caches: (B, S, KVH, hd) -> (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    bk = min(block_k, s)
+    n_k = pl.cdiv(s, bk)
+
+    qg = q.reshape(b, kvh, g, hd)
+    kg = k_cache.transpose(0, 2, 1, 3)
+    vg = v_cache.transpose(0, 2, 1, 3)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kernel, bk=bk, g=g, window=window, n_k=n_k,
+                               scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, kvh, n_k),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b, h, ik, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik, pos: (b, h, ik, 0)),
+                pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik, pos: (b, h, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b, h, ik, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, hd), jnp.float32),
+                pltpu.VMEM((g, 128), jnp.float32),
+                pltpu.VMEM((g, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qg, kg, vg)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for split-K flash decode (same math as
+kernels/flash_attention/ref.decode_attention_ref, re-exported so each
+kernel directory is self-contained)."""
+from repro.kernels.flash_attention.ref import decode_attention_ref
+
+__all__ = ["decode_attention_ref"]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: GQA causal/windowed flash attention (prefill).
+
+Layout (chosen for the MXU, not ported from a CUDA tiling):
+  q   (B, KVH, G, S, hd)  — grouped-query heads folded next to their KV
+  k,v (B, KVH, S, hd)
+
+Grid: (B, KVH, S/BQ, S/BK), the KV axis innermost — TPU grids are
+sequential, so the online-softmax state for one (b, kvh, iq) lives in
+VMEM scratch across the BK sweep:
+
+    acc (G·BQ, hd) f32, m/l (G·BQ, 128) f32 (lane-padded)
+
+Each step: one (G·BQ, hd)x(hd, BK) MXU matmul for scores, one
+(G·BQ, BK)x(BK, hd) for the PV product, VPU max/exp for the softmax
+update.  Fully-masked causal blocks are skipped with ``pl.when``
+(upper-triangle blocks cost zero MXU work); windowed attention also
+skips blocks entirely below the band.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, g: int, causal: bool, window: int,
+            n_k: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = iq * bq
+    k0 = ik * bk
+    # block-level skip: causal above the diagonal, window below the band
+    relevant = True
+    if causal:
+        relevant = q0 + bq - 1 >= k0
+    if window > 0:
+        relevant = relevant & (k0 + bk - 1 > q0 - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)               # (BK, hd)
+        qf = q.reshape(g * bq, -1)
+        s = jnp.dot(qf, k.T, preferred_element_type=jnp.float32)  # (G·BQ, BK)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (g, bq, bk), 1)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (g, bq, bk), 2)
+        mask = jnp.ones((g, bq, bk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        mask = mask.reshape(g * bq, bk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, :1]                             # (G·BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        coef = jnp.exp(m_prev - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * coef + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * coef + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).reshape(
+            g, bq, -1).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, S, KVH, hd) -> (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    n_q, n_k = pl.cdiv(s, bq), pl.cdiv(s, bk)
+
+    qg = q.reshape(b, s, kvh, g, hd).transpose(0, 2, 3, 1, 4)  # (B,KVH,G,S,hd)
+    kg = k.transpose(0, 2, 1, 3)                               # (B,KVH,S,hd)
+    vg = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, g=g, causal=causal,
+                               window=window, n_k=n_k, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, bq, hd),
+                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, bq, hd),
+                               lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * bq, hd), jnp.float32),
+            pltpu.VMEM((g * bq, 128), jnp.float32),
+            pltpu.VMEM((g * bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, hd)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for GQA causal/windowed flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, S, H, hd); k, v: (B, S, KVH, hd).  Returns (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg, kf)
+    pos = jnp.arange(s)
+    d = pos[:, None] - pos[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= d >= 0
+    if window > 0:
+        mask &= d < window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p, vf)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window: int = 0):
+    """q: (B, 1, H, hd); caches: (B, S, KVH, hd); pos scalar int."""
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(k_cache.shape[1])
+    valid = kpos <= pos
+    if window > 0:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the merge_topics kernel.
+
+``merge_vb_stats`` / ``merge_gs_stats`` map the paper's Alg. 1/2 onto
+the fused kernel; core/merge.py stays the host/NumPy reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.merge_topics.merge_topics import merge_topics_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bias", "base", "interpret"))
+def merge_topics(stats, weights, bias: float = 0.0, base: float = 0.0,
+                 *, interpret: bool = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n, k, v = stats.shape
+    kp, vp = _round_up(k, 8), _round_up(v, 128)
+    if (kp, vp) != (k, v):
+        stats = jnp.pad(stats, ((0, 0), (0, kp - k), (0, vp - v)),
+                        constant_values=base)
+    out = merge_topics_pallas(stats, weights, bias, base,
+                              interpret=interpret)
+    return out[:k, :v]
+
+
+def merge_vb_stats(lams, weights, eta: float, *, interpret: bool = None):
+    """Alg. 1: λ* = η + Σ w_i (λ_i − η).  lams: (n, K, V)."""
+    return merge_topics(lams, weights, bias=eta, base=eta,
+                        interpret=interpret)
+
+
+def merge_gs_stats(deltas, staleness, decay: float, *,
+                   interpret: bool = None):
+    """Alg. 2: N* = Σ decay^{s_i} ΔN_i.  deltas: (n, K, V)."""
+    w = decay ** staleness.astype(jnp.float32)
+    return merge_topics(deltas, w, bias=0.0, base=0.0, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the weighted topic-statistic merge (Alg. 1/2).
+
+    out = bias + sum_i w_i * (stats_i - base)
+
+covers both merges:
+  MVB (Alg. 1): bias = eta,  base = eta   (λ* = η + Σ w_i (λ_i − η))
+  MGS (Alg. 2): bias = 0,    base = 0,  w_i = decay^{s_i}
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_topics_ref(stats, weights, bias: float = 0.0, base: float = 0.0):
+    """stats: (n, K, V); weights: (n,).  Returns (K, V)."""
+    w = weights.astype(jnp.float32)[:, None, None]
+    return bias + (w * (stats.astype(jnp.float32) - base)).sum(0)

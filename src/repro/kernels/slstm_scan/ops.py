@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the sLSTM scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.slstm_scan.slstm_scan import slstm_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def slstm_scan(xpre, r_mat, *, chunk: int = 128, interpret: bool = None):
+    """xpre: (S, B, 4, H, hd); r_mat: (H, hd, 4hd) -> h_out (S, B, H, hd).
+
+    Final state intentionally not returned by the kernel (the decode
+    handoff re-derives it from the last chunk in the jnp path); the
+    fused form exists for the prefill/train hot loop.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return slstm_scan_pallas(xpre.astype(jnp.float32),
+                             r_mat.astype(jnp.float32),
+                             chunk=chunk, interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the sLSTM scan kernel (time-major form of
+models/recurrent._slstm_local_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+def slstm_scan_ref(xpre, r_mat, c0, n0, h0, m0):
+    """xpre: (S, B, 4, H, hd) f32; r_mat: (H, hd, 4*hd);
+    state: (B, H, hd) each.  Returns (h_out (S, B, H, hd), final state)."""
+    s, b, _, h, hd = xpre.shape
+
+    def step(carry, x_t):
+        c, nrm, hprev, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", hprev, r_mat).reshape(b, h, 4, hd)
+        tot = x_t + rec.transpose(0, 2, 1, 3)      # (B, 4, H, hd)
+        z = jnp.tanh(tot[:, 0])
+        logi = tot[:, 1]
+        logf = _logsig(tot[:, 2])
+        o = jax.nn.sigmoid(tot[:, 3])
+        m_new = jnp.maximum(logf + m, logi)
+        i_s = jnp.exp(logi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * z
+        nrm = f_s * nrm + i_s
+        hnew = o * c / jnp.maximum(nrm, 1e-6)
+        return (c, nrm, hnew, m_new), hnew
+
+    carry, hs = jax.lax.scan(step, (c0, n0, h0, m0), xpre)
+    return hs, carry

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: sLSTM token scan with VMEM-resident recurrence.
+
+Why: the sLSTM recurrence h_{t-1} @ R is h-dependent, so it cannot be
+parallelized over time — and in the jnp lowering the (H, hd, 4hd)
+recurrent matrix R is re-read from HBM at EVERY token: 16.8 MB x 32k
+tokens = 3.3 TB of HBM traffic per layer on the xlstm prefill cell, the
+single largest memory-roofline term in the whole assigned matrix
+(EXPERIMENTS.md §Perf, xlstm iteration).
+
+The kernel pins one head's R block (hd x 4hd = 4.2 MB at hd=512) in
+VMEM and sweeps the token chunks sequentially, carrying the per-head
+(c, n, h, m) state in scratch across grid steps.  sLSTM heads are
+independent (block-diagonal R — the defining sLSTM trait), so the grid
+is (H, S/CHUNK) with the chunk axis innermost; HBM traffic drops to
+one read of xpre + one write of h_out + H reads of R.
+
+Grid/blocks:
+  xpre  (S, B, 4, H, hd) -> block (CHUNK, B, 4, 1, hd)   [h, ic]
+  r_mat (H, hd, 4hd)     -> block (1, hd, 4hd)           [h]  (resident)
+  h_out (S, B, H, hd)    -> block (CHUNK, B, 1, hd)
+  state scratch: 4 x (B, hd) f32, reset at ic == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+def _kernel(xpre_ref, r_ref, out_ref, c_ref, n_ref, h_ref, m_ref, *,
+            chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    r = r_ref[0]                       # (hd, 4hd) — VMEM resident
+    xp = xpre_ref[...]                 # (CHUNK, B, 4, 1, hd)
+    hd = r.shape[0]
+
+    def step(t, state):
+        c, nrm, hprev, m, out = state
+        rec = jnp.dot(hprev, r, preferred_element_type=jnp.float32)
+        rec = rec.reshape(hprev.shape[0], 4, hd)          # (B, 4, hd)
+        tot = xp[t, :, :, 0, :] + rec
+        z = jnp.tanh(tot[:, 0])
+        logi = tot[:, 1]
+        logf = _logsig(tot[:, 2])
+        o = jax.nn.sigmoid(tot[:, 3])
+        m_new = jnp.maximum(logf + m, logi)
+        i_s = jnp.exp(logi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * z
+        nrm = f_s * nrm + i_s
+        hnew = o * c / jnp.maximum(nrm, 1e-6)
+        out = jax.lax.dynamic_update_index_in_dim(
+            out, hnew[:, None, :], t, 0)
+        return c, nrm, hnew, m_new, out
+
+    out0 = jnp.zeros(out_ref.shape, jnp.float32)
+    c, nrm, h, m, out = jax.lax.fori_loop(
+        0, chunk, step,
+        (c_ref[...], n_ref[...], h_ref[...], m_ref[...], out0))
+    c_ref[...] = c
+    n_ref[...] = nrm
+    h_ref[...] = h
+    m_ref[...] = m
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def slstm_scan_pallas(xpre, r_mat, *, chunk: int = 128,
+                      interpret: bool = False):
+    """xpre: (S, B, 4, H, hd) f32; r_mat: (H, hd, 4hd) f32.
+
+    Returns (h_out (S, B, H, hd), (c, n, h, m) final each (B, H, hd)).
+    """
+    s, b, four, h, hd = xpre.shape
+    assert four == 4
+    ch = min(chunk, s)
+    n_chunks = pl.cdiv(s, ch)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=ch),
+        grid=(h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((ch, b, 4, 1, hd), lambda ih, ic: (ic, 0, 0, ih, 0)),
+            pl.BlockSpec((1, hd, 4 * hd), lambda ih, ic: (ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ch, b, 1, hd), lambda ih, ic: (ic, 0, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, b, h, hd), xpre.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((b, hd), jnp.float32),
+            pltpu.VMEM((b, hd), jnp.float32),
+            pltpu.VMEM((b, hd), jnp.float32),
+            pltpu.VMEM((b, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xpre, r_mat)
+    return out

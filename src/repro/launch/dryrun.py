@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on
+first init, and the production meshes need 512 placeholder host
+devices ((2,16,16) multi-pod; the single-pod (16,16) mesh uses the
+first 256).
+
+For each cell this driver:
+  1. builds the LoweringSpec (ShapeDtypeStruct inputs — no allocation),
+  2. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``,
+  3. records memory_analysis(), cost_analysis(), and the collective
+     byte account parsed from the optimized HLO,
+  4. writes one JSON artifact per cell under --out.
+
+Any failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the system, not in the cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ALL_SHAPES, ARCHS, get_arch, get_shape
+from repro.distributed.sharding import MeshEnv
+from repro.launch.hlo_analyzer import analyze_hlo
+from repro.launch.mesh import make_env
+from repro.launch.specs import make_spec
+
+# TPU v5e hardware model for the roofline terms (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def run_cell(arch: str, shape_name: str, env: MeshEnv,
+             mesh_name: str, hlo_path: Optional[str] = None
+             ) -> Dict[str, Any]:
+    t0 = time.perf_counter()
+    spec = make_spec(arch, shape_name, env)
+    n_dev = env.mesh.size
+    jitted = jax.jit(spec.step, in_shardings=spec.in_shardings,
+                     out_shardings=spec.out_shardings)
+    with env.mesh:
+        lowered = jitted.lower(*spec.args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if hlo_path:
+        import gzip
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    st = analyze_hlo(hlo, n_dev)
+
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "mode": spec.static.get("mode"),
+        "optimizer": spec.static.get("optimizer"),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # memory_analysis is per-device on SPMD modules
+        "bytes_per_device": {
+            "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak": int(getattr(mem, "peak_memory_in_bytes", 0)) or None,
+        },
+        # XLA's own numbers (while bodies counted once) for reference
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        # trip-count-aware analysis (per device)
+        "hlo_analysis": {
+            "flops": st.flops,
+            "hbm_bytes_kernel_interior": st.hbm_bytes_kernel_interior,
+            "hbm_bytes": st.hbm_bytes,
+            "collective_wire_bytes": st.collective_wire_bytes,
+            "collective_counts": st.collective_counts,
+            "collective_bytes_by_kind": st.collective_bytes_by_kind,
+            "unknown_trip_loops": st.unknown_trip_loops,
+        },
+    }
+    # roofline terms (seconds per step, per chip)
+    out["roofline"] = {
+        "compute_s": st.flops / PEAK_FLOPS,
+        "memory_s": st.hbm_bytes / HBM_BW,
+        "collective_s": st.collective_wire_bytes / ICI_BW,
+        "memory_kernelized_s": (st.hbm_bytes - st.hbm_bytes_kernel_interior) / HBM_BW,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=out["roofline"].get)
+    out["roofline"]["dominant"] = dom
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = ([s.name for s in ALL_SHAPES] if args.shape == "all"
+              else args.shape.split(","))
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_name in meshes:
+        env = make_env(multi_pod=(mesh_name == "multi"))
+        for arch in archs:
+            cfg = get_arch(arch)
+            for shape_name in shapes:
+                shape = get_shape(shape_name)
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    n_ok += 1
+                    continue
+                if not cfg.supports_shape(shape):
+                    print(f"SKIP {tag} (full attention at 500k)")
+                    n_skip += 1
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, env, mesh_name,
+                                   hlo_path=os.path.join(
+                                       args.out, tag + ".hlo.gz"))
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(f"OK   {tag}: compile {rec['compile_s']:.1f}s "
+                          f"compute {r['compute_s']*1e3:.2f}ms "
+                          f"memory {r['memory_s']*1e3:.2f}ms "
+                          f"coll {r['collective_s']*1e3:.2f}ms "
+                          f"-> {r['dominant']}", flush=True)
+                    n_ok += 1
+                except Exception:
+                    print(f"FAIL {tag}\n{traceback.format_exc()}",
+                          flush=True)
+                    n_fail += 1
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,456 @@
+"""Trip-count-aware HLO analysis: FLOPs, HBM bytes, collective bytes.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits a
+``while`` body ONCE, so everything inside a ``lax.scan`` (our layer
+stacks, ring-attention steps, E-step fixed points) is undercounted by
+its trip count — for a 94-layer scan that is a 94x error.  This module
+re-derives the three roofline inputs from the optimized HLO text with
+loop multipliers propagated through the call graph:
+
+  * computations are parsed into (ops, shapes) tables;
+  * a worklist walk from ENTRY accumulates a multiplier per computation:
+    ``while`` bodies/conditions multiply by the loop trip count (parsed
+    from backend_config known_trip_count, falling back to the condition
+    constant), fusions/calls/conditionals/to_apply inherit x1
+    (conditionals count every branch — a documented upper bound);
+  * FLOPs: 2 * numel(out) * prod(contracting dims) per ``dot``
+    (+ numel for transcendental-heavy elementwise sets — negligible and
+    omitted), times the computation multiplier;
+  * HBM bytes: operand+output bytes of boundary ops in control
+    computations (fusion calls are the boundary — their internals are
+    on-chip), with in-place semantics for dynamic-update-slice and
+    row-access semantics for gather/dynamic-slice;
+  * collective wire bytes: ring-algorithm per-chip costs per op
+    (all-reduce 2x(n-1)/n, all-gather/all-to-all (n-1)/n,
+    reduce-scatter (n-1)x, collective-permute 1x), times multiplier.
+
+Validated in tests against cost_analysis on loop-free graphs and
+against hand-counted scan examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s+\(.*\)\s*->.*\{$")
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|true_computation|false_computation)"
+    r"=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[\\"{:n]*?(\d+)')
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ZERO_COST = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "while", "conditional", "call", "after-all",
+              "add-dependency", "reshape", "iota", "partition-id",
+              "replica-id", "custom-call", "rng-bit-generator",
+              "get-dimension-size", "domain", "opt-barrier"}
+
+
+def _array_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _array_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _numel(shape_str: str) -> int:
+    total = 0
+    for _, dims in _array_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str            # result shape string
+    kind: str             # op code
+    rest: str             # remainder of the line (operands + attrs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]        # op name -> result shape
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # bytes inside named_scope("kernel_interior") regions — traffic the
+    # Pallas kernels keep in VMEM on the TPU target; the roofline
+    # reports memory terms with and without it.
+    hbm_bytes_kernel_interior: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    flops_by_comp: Dict[str, float] = dataclasses.field(default_factory=dict)
+    loop_trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.shape
+    return comps, entry
+
+
+def _while_trip_count(op: Op, comps: Dict[str, Computation]) -> Optional[int]:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    # fall back: condition computation comparing against a constant
+    cm = re.search(r"condition=(%[\w.\-]+)", op.rest)
+    if cm and cm.group(1) in comps:
+        cond = comps[cm.group(1)]
+        consts = [o for o in cond.ops if o.kind == "constant"]
+        if len(consts) == 1:
+            vm = re.search(r"constant\((\d+)\)", consts[0].rest)
+            if vm is None:
+                vm = re.search(r"\((\d+)\)", "(" + consts[0].rest)
+            if vm:
+                return int(vm.group(1))
+    return None
+
+
+def _static_edges(comps: Dict[str, Computation], stats: HloStats
+                  ) -> Dict[str, List[Tuple[str, float]]]:
+    """caller -> [(callee, per-call multiplier)] from the op list."""
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for comp in comps.values():
+        for op in comp.ops:
+            factor = 1.0
+            if op.kind == "while":
+                tc = _while_trip_count(op, comps)
+                if tc is None:
+                    stats.unknown_trip_loops += 1
+                    tc = 1
+                stats.loop_trip_counts[op.name] = tc
+                factor = float(tc)
+            called = _CALLED_RE.findall(op.rest)
+            bm = _BRANCHES_RE.search(op.rest)
+            if bm:
+                called += [c.strip() for c in bm.group(1).split(",")]
+            for c in called:
+                if c in comps:
+                    edges[comp.name].append((c, factor))
+    return edges
+
+
+def compute_multipliers(comps: Dict[str, Computation], entry: str,
+                        stats: HloStats) -> Dict[str, float]:
+    """Accumulate execution counts per computation in topological order
+    (the computation call graph is a DAG)."""
+    edges = _static_edges(comps, stats)
+    # topo order via DFS from entry
+    order: List[str] = []
+    seen = set()
+
+    def dfs(name: str):
+        if name in seen:
+            return
+        seen.add(name)
+        for c, _ in edges.get(name, ()):
+            dfs(c)
+        order.append(name)
+
+    dfs(entry)
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    for name in reversed(order):          # callers before callees
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for c, factor in edges.get(name, ()):
+            mult[c] = mult.get(c, 0.0) + m * factor
+    return mult
+
+
+def _classify(comps: Dict[str, Computation]) -> Dict[str, str]:
+    """computation -> 'control' (bytes counted at op boundary) or
+    'fused' (on-chip: bytes not counted, flops still counted)."""
+    cls = {c: "control" for c in comps}
+    for comp in comps.values():
+        for op in comp.ops:
+            refs = _CALLED_RE.findall(op.rest)
+            if op.kind in ("fusion", "reduce", "map", "sort", "scatter",
+                           "reduce-window", "select-and-scatter",
+                           "all-reduce", "reduce-scatter"):
+                for r in refs:
+                    if r in cls:
+                        cls[r] = "fused"
+    return cls
+
+
+def _operand_names(op: Op) -> List[str]:
+    # operands are at the start of `rest`, up to the closing paren at depth 0
+    depth = 1
+    end = 0
+    for i, ch in enumerate(op.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = op.rest[:end]
+    return re.findall(r"%[\w.\-]+", inner)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_n = _numel(op.shape)
+    lhs = _operand_names(op)
+    if not lhs:
+        return 0.0
+    lhs_shape = comp.shapes.get(lhs[0])
+    if lhs_shape is None:
+        return 0.0
+    dims = _array_dims(lhs_shape)
+    if not dims:
+        return 0.0
+    lhs_dims = dims[0][1]
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if cm and cm.group(1):
+        for c in cm.group(1).split(","):
+            ci = int(c)
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * out_n * k
+
+
+def _op_bytes(op: Op, comp: Computation,
+              comps: Optional[Dict[str, Computation]] = None) -> float:
+    """Approximate HBM traffic of one boundary op.
+
+    Slicing semantics: gather / dynamic-slice read only the rows they
+    produce; dynamic-update-slice / scatter write (and read) only the
+    update region (XLA performs them in place at loop boundaries).  For
+    ``fusion`` ops the same rules are applied *through* the fusion: an
+    operand whose only consumers inside the fused computation are
+    slices is charged at the sliced size, and a fused root DUS is
+    charged as in-place — otherwise scan bodies that slice stacked
+    parameters would be billed the whole stack every iteration.
+    """
+    out_b = _shape_bytes(op.shape)
+    if op.kind in ("gather", "dynamic-slice"):
+        return 2.0 * out_b                       # read rows + write out
+    if op.kind in ("dynamic-update-slice",):
+        ops_ = _operand_names(op)
+        upd = comp.shapes.get(ops_[1]) if len(ops_) > 1 else None
+        ub = _shape_bytes(upd) if upd else out_b
+        return 2.0 * ub                          # in-place: read+write update
+    if op.kind == "scatter":
+        ops_ = _operand_names(op)
+        upd = comp.shapes.get(ops_[-1]) if ops_ else None
+        ub = _shape_bytes(upd) if upd else out_b
+        return 2.0 * ub
+    if op.kind == "fusion" and comps is not None:
+        return _fusion_bytes(op, comp, comps)
+    in_b = 0.0
+    for name in _operand_names(op):
+        s = comp.shapes.get(name)
+        if s is not None:
+            in_b += _shape_bytes(s)
+    return in_b + out_b
+
+
+_SLICE_KINDS = ("dynamic-slice", "gather", "slice")
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  comps: Dict[str, Computation]) -> float:
+    m = re.search(r"calls=(%[\w.\-]+)", op.rest)
+    operands = _operand_names(op)
+    if not m or m.group(1) not in comps:
+        in_b = sum(_shape_bytes(comp.shapes.get(n, "")) for n in operands)
+        return in_b + _shape_bytes(op.shape)
+    fused = comps[m.group(1)]
+    # map parameter index -> consumers inside the fused computation
+    param_name = {}
+    for fop in fused.ops:
+        if fop.kind == "parameter":
+            # Op.rest holds everything after "parameter(" -> "N), ..."
+            pm = re.match(r"(\d+)\)", fop.rest)
+            if pm:
+                param_name[int(pm.group(1))] = fop.name
+    consumers: Dict[str, List[Op]] = {}
+    for fop in fused.ops:
+        for name in _operand_names(fop):
+            consumers.setdefault(name, []).append(fop)
+
+    # root DUS (possibly behind a bitcast): in-place semantics
+    root = fused.ops[-1] if fused.ops else None
+    while root is not None and root.kind in ("bitcast", "reshape"):
+        prev = _operand_names(root)
+        root = next((f for f in fused.ops if prev and f.name == prev[0]),
+                    None)
+    dus_base = None
+    dus_update_bytes = 0.0
+    if root is not None and root.kind == "dynamic-update-slice":
+        ops_ = _operand_names(root)
+        if len(ops_) > 1:
+            dus_base = ops_[0]
+            upd = fused.shapes.get(ops_[1])
+            dus_update_bytes = _shape_bytes(upd) if upd else 0.0
+
+    in_b = 0.0
+    for i, operand in enumerate(operands):
+        pname = param_name.get(i)
+        full = _shape_bytes(comp.shapes.get(operand, ""))
+        if pname is None:
+            in_b += full
+            continue
+        if pname == dus_base or (
+                dus_base is not None
+                and _only_feeds(consumers, pname, dus_base)):
+            continue   # untouched in-place base
+        cons = consumers.get(pname, [])
+        if cons and all(c.kind in _SLICE_KINDS for c in cons):
+            in_b += min(sum(_shape_bytes(c.shape) for c in cons), full)
+        else:
+            in_b += full
+
+    if dus_base is not None:
+        return in_b + 2.0 * dus_update_bytes
+    return in_b + _shape_bytes(op.shape)
+
+
+def _only_feeds(consumers: Dict[str, List[Op]], pname: str,
+                target: str) -> bool:
+    cons = consumers.get(pname, [])
+    return len(cons) == 1 and cons[0].name == target and \
+        cons[0].kind in ("bitcast", "reshape")
+
+
+def _collective_wire(op: Op, n_default: int) -> Tuple[str, float, int]:
+    kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+    out_b = _shape_bytes(op.shape)
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", op.rest)
+    if m:
+        n = len(m.group(1).split(","))
+    else:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+        n = int(m.group(2)) if m else n_default
+    frac = (n - 1) / max(n, 1)
+    if kind == "all-reduce":
+        wire = 2.0 * out_b * frac
+    elif kind == "all-gather":
+        wire = out_b * frac
+    elif kind == "reduce-scatter":
+        wire = out_b * (n - 1)
+    elif kind == "all-to-all":
+        wire = out_b * frac
+    else:  # collective-permute
+        wire = float(out_b)
+    return kind, wire, n
+
+
+def analyze_hlo(hlo: str, n_partitions: int) -> HloStats:
+    comps, entry = parse_computations(hlo)
+    stats = HloStats()
+    if entry is None:
+        return stats
+    mult = compute_multipliers(comps, entry, stats)
+    cls = _classify(comps)
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0.0:
+            continue
+        fused = cls[comp.name] == "fused"
+        comp_flops = 0.0
+        for op in comp.ops:
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base in _COLLECTIVES:
+                kind, wire, _ = _collective_wire(op, n_partitions)
+                stats.collective_wire_bytes += m * wire
+                stats.collective_counts[kind] = (
+                    stats.collective_counts.get(kind, 0) + int(m))
+                stats.collective_bytes_by_kind[kind] = (
+                    stats.collective_bytes_by_kind.get(kind, 0.0) + m * wire)
+                if not fused:
+                    stats.hbm_bytes += m * _op_bytes(op, comp, comps)
+                continue
+            if op.kind in ("dot", "convolution"):
+                comp_flops += _dot_flops(op, comp)
+            if fused or op.kind in _ZERO_COST or op.kind.endswith("-done"):
+                continue
+            b = m * _op_bytes(op, comp, comps)
+            stats.hbm_bytes += b
+            if "kernel_interior" in op.rest:
+                stats.hbm_bytes_kernel_interior += b
+        if comp_flops:
+            stats.flops += m * comp_flops
+            stats.flops_by_comp[comp.name] = m * comp_flops
+    return stats
+
+
+def byte_hotspots(hlo: str, n_partitions: int, top: int = 25
+                  ) -> List[Tuple[float, str, str, str]]:
+    """Debug view: largest HBM byte contributors as
+    (bytes, computation, op kind, op name)."""
+    comps, entry = parse_computations(hlo)
+    stats = HloStats()
+    mult = compute_multipliers(comps, entry, stats)
+    cls = _classify(comps)
+    rows = []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0.0 or cls[comp.name] == "fused":
+            continue
+        for op in comp.ops:
+            if op.kind in _ZERO_COST or op.kind.endswith("-done"):
+                continue
+            b = m * _op_bytes(op, comp, comps)
+            if b > 0:
+                rows.append((b, comp.name, op.kind, op.name))
+    return sorted(rows, reverse=True)[:top]

@@ -1,0 +1,111 @@
+"""HLO parsing: collective byte accounting for the roofline.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the post-SPMD optimized HLO text and sum, per
+collective op, the *wire bytes per chip* under ring algorithms:
+
+    all-reduce        2 · size · (n-1)/n     (reduce-scatter + all-gather)
+    all-gather        out_size · (n-1)/n     (each chip receives the rest)
+    reduce-scatter    in_size  · (n-1)/n
+    all-to-all        size · (n-1)/n
+    collective-permute size                  (one hop)
+
+``n`` is the replica-group size parsed from the op's replica_groups (or
+the partition count when groups are flat).  Shapes in the partitioned
+module are per-device shapes, which is what the per-chip wire formula
+wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:   # iota form [num_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0              # per-chip ring wire bytes
+    payload_bytes: float = 0.0           # raw op result bytes
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, kind: str, wire: float, payload: float):
+        self.wire_bytes += wire
+        self.payload_bytes += payload
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + wire
+
+
+def collective_stats(hlo_text: str, n_partitions: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([a-z\-]+)\(", line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        out_bytes = _shape_bytes(shape_str)
+        n = _group_size(line, n_partitions)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-reduce":
+            wire = 2.0 * out_bytes * frac
+        elif kind == "all-gather":
+            wire = out_bytes * frac
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (n - 1)     # input is n x output
+        elif kind == "all-to-all":
+            wire = out_bytes * frac
+        else:  # collective-permute
+            wire = float(out_bytes)
+        stats.add(kind, wire, float(out_bytes))
+    return stats
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 20) -> List[Tuple[str, int]]:
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT )?%?[\w.\-]+ = .+? ([a-z\-]+)\(",
+                     line)
+        if m:
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

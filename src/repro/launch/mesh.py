@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any
+device initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import MeshEnv
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_env(*, multi_pod: bool = False, profile: str = "train") -> MeshEnv:
+    return MeshEnv(mesh=make_production_mesh(multi_pod=multi_pod),
+                   profile=profile)

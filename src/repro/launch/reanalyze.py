@@ -1,0 +1,63 @@
+"""Re-derive roofline stats from saved dry-run HLO (no recompilation).
+
+The analyzer evolves during perf iteration; this tool re-runs
+``analyze_hlo`` over every ``*.hlo.gz`` artifact and patches the
+matching JSON in place.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_analyzer import analyze_hlo
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for hlo_path in sorted(glob.glob(os.path.join(args.dir, "*.hlo.gz"))):
+        json_path = hlo_path[: -len(".hlo.gz")] + ".json"
+        if not os.path.exists(json_path):
+            continue
+        with open(json_path) as f:
+            rec = json.load(f)
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        st = analyze_hlo(hlo, rec["n_devices"])
+        rec["hlo_analysis"] = {
+            "flops": st.flops,
+            "hbm_bytes_kernel_interior": st.hbm_bytes_kernel_interior,
+            "hbm_bytes": st.hbm_bytes,
+            "collective_wire_bytes": st.collective_wire_bytes,
+            "collective_counts": st.collective_counts,
+            "collective_bytes_by_kind": st.collective_bytes_by_kind,
+            "unknown_trip_loops": st.unknown_trip_loops,
+        }
+        rec["roofline"] = {
+            "compute_s": st.flops / PEAK_FLOPS,
+            "memory_s": st.hbm_bytes / HBM_BW,
+            "collective_s": st.collective_wire_bytes / ICI_BW,
+            "memory_kernelized_s": (st.hbm_bytes - st.hbm_bytes_kernel_interior) / HBM_BW,
+        }
+        rec["roofline"]["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"),
+            key=rec["roofline"].get)
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving launcher: batched prefill + greedy decode.
+
+``--reduced`` executes the smoke-scale config end-to-end on this host;
+the full cells are exercised through launch/dryrun.py (prefill_32k /
+decode_32k / long_500k lower the same functions this driver calls).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.lm import encoder_frames, make_batch
+from repro.distributed.sharding import single_device_env, set_env
+from repro.models.model import build_model
+
+
+def generate(model, params, batch, env, *, steps: int, cache_len: int):
+    """Prefill the prompt then greedy-decode ``steps`` tokens."""
+    with set_env(env):
+        logits, caches = model.prefill(params, batch, env,
+                                       cache_len=cache_len)
+        s = batch["tokens"].shape[1]
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+        @jax.jit
+        def step(params, caches, tok, pos):
+            lg, caches = model.decode_step(params, caches, tok, pos, env)
+            nxt = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            return nxt, caches
+
+        for i in range(steps):
+            out.append(tok)
+            tok, caches = step(params, caches, tok,
+                               jnp.asarray(s + i, jnp.int32))
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    env = single_device_env(profile="serve")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, args.batch, args.prompt_len, 0, 0)
+    batch.pop("labels", None)
+    t0 = time.perf_counter()
+    toks = generate(model, params, batch, env, steps=args.gen_len,
+                    cache_len=args.prompt_len + args.gen_len)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen_len / dt:.1f} tok/s)")
+    print("sample:", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Per-cell lowering specs: (arch × shape × mesh) -> jit-able step +
+ShapeDtypeStruct inputs + shardings.
+
+This is the single source of truth for what the multi-pod dry-run
+lowers, what the launchers execute, and what the roofline reads.  No
+device memory is ever allocated here — parameters, optimizer state and
+caches are all ``jax.eval_shape`` trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch, get_shape
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.lm import encoder_frames
+from repro.distributed.sharding import (
+    MeshEnv,
+    batch_specs,
+    cache_specs,
+    infer_param_specs,
+    shardings_of,
+)
+from repro.models.model import Model, build_model
+from repro.train.optim import OptimizerConfig, build_optimizer
+from repro.train.trainer import make_train_step
+
+# Optimizer-state memory policy: factored second moment above this many
+# parameters (AdamW's 2x f32 state does not fit HBM for the 100B+ cells).
+ADAFACTOR_THRESHOLD = 50e9
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    name: str
+    step: Callable               # positional-args function to jit
+    args: Tuple[Any, ...]        # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    static: Dict[str, Any]
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": _struct((b, s), jnp.int32),
+               "labels": _struct((b, s), jnp.int32)}
+        if cfg.family == "vlm" and cfg.n_patches:
+            out["patch_embeds"] = _struct((b, min(cfg.n_patches, s),
+                                           cfg.d_model), jnp.float32)
+        if cfg.is_encoder_decoder:
+            out["frames"] = _struct((b, encoder_frames(cfg), cfg.d_model),
+                                    jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _struct((b, s), jnp.int32)}
+        if cfg.family == "vlm" and cfg.n_patches:
+            out["patch_embeds"] = _struct((b, min(cfg.n_patches, s),
+                                           cfg.d_model), jnp.float32)
+        if cfg.is_encoder_decoder:
+            out["frames"] = _struct((b, encoder_frames(cfg), cfg.d_model),
+                                    jnp.float32)
+        return out
+    # decode: one token against a cache of seq_len
+    return {"token": _struct((b, 1), jnp.int32),
+            "pos": _struct((), jnp.int32)}
+
+
+def pick_optimizer(model: Model) -> OptimizerConfig:
+    n = model.param_count()
+    if n > ADAFACTOR_THRESHOLD:
+        return OptimizerConfig(name="adafactor")
+    return OptimizerConfig(name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# per-mode lowering specs
+# ---------------------------------------------------------------------------
+
+def train_spec(cfg: ArchConfig, shape: ShapeConfig, env: MeshEnv,
+               *, remat: bool = True) -> LoweringSpec:
+    model = build_model(cfg)
+    opt_cfg = pick_optimizer(model)
+    opt_init, _ = build_optimizer(opt_cfg)
+    step_fn = make_train_step(model, opt_cfg, env, remat=remat)
+
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_s = jax.eval_shape(opt_init, params_s)
+    step_s = _struct((), jnp.int32)
+    batch_s = make_inputs(cfg, shape)
+
+    p_specs = infer_param_specs(params_s, env)
+    o_specs = _opt_specs(opt_s, params_s, p_specs)
+    b_specs = batch_specs(batch_s, env)
+
+    in_sh = (shardings_of(p_specs, env), shardings_of(o_specs, env),
+             env.sharding(P()), shardings_of(b_specs, env))
+    metrics_s = {"loss": P(), "grad_norm": P(), "nll": P(), "aux": P()}
+    out_sh = (shardings_of(p_specs, env), shardings_of(o_specs, env),
+              env.sharding(P()), shardings_of(metrics_s, env))
+    return LoweringSpec(
+        name=f"{cfg.name}:{shape.name}",
+        step=step_fn,
+        args=(params_s, opt_s, step_s, batch_s),
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        static={"optimizer": opt_cfg.name, "mode": "train"},
+    )
+
+
+def _opt_specs(opt_s, params_s, p_specs):
+    """Optimizer state shards like its parameter; factored/scalar leaves
+    replicate (vr/vc rows are small)."""
+    flat_p, _ = jax.tree_util.tree_flatten(params_s)
+    flat_ps, _ = jax.tree_util.tree_flatten(
+        p_specs, is_leaf=lambda x: isinstance(x, P))
+    by_shape = {}
+    for leaf, spec in zip(flat_p, flat_ps):
+        by_shape.setdefault((tuple(leaf.shape), str(leaf.dtype)), spec)
+
+    def spec(leaf):
+        got = by_shape.get((tuple(leaf.shape), str(leaf.dtype)))
+        if got is not None:
+            return got
+        # factored vr/vc or differently-dtyped m/v: match on shape only
+        for (shp, _), sp in by_shape.items():
+            if shp == tuple(leaf.shape):
+                return sp
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(spec, opt_s)
+
+
+def prefill_spec(cfg: ArchConfig, shape: ShapeConfig, env: MeshEnv
+                 ) -> LoweringSpec:
+    model = build_model(cfg)
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch_s = make_inputs(cfg, shape)
+    b = shape.global_batch
+
+    def step(params, batch):
+        from repro.distributed.sharding import set_env
+        with set_env(env):
+            return model.prefill(params, batch, env)
+
+    logits_s, cache_s = jax.eval_shape(step, params_s, batch_s)
+    p_specs = infer_param_specs(params_s, env)
+    b_specs = batch_specs(batch_s, env)
+    c_specs = cache_specs(cache_s, env, b)
+    lg_spec = _logits_spec(logits_s, env)
+    return LoweringSpec(
+        name=f"{cfg.name}:{shape.name}",
+        step=step,
+        args=(params_s, batch_s),
+        in_shardings=(shardings_of(p_specs, env), shardings_of(b_specs, env)),
+        out_shardings=(env.sharding(lg_spec), shardings_of(c_specs, env)),
+        static={"mode": "prefill"},
+    )
+
+
+def decode_spec(cfg: ArchConfig, shape: ShapeConfig, env: MeshEnv
+                ) -> LoweringSpec:
+    model = build_model(cfg)
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    b = shape.global_batch
+    cache_s = jax.eval_shape(
+        functools.partial(model.init_cache, b, shape.seq_len))
+    inp = make_inputs(cfg, shape)
+
+    def step(params, caches, token, pos):
+        from repro.distributed.sharding import set_env
+        with set_env(env):
+            return model.decode_step(params, caches, token, pos, env)
+
+    logits_s, _ = jax.eval_shape(step, params_s, cache_s, inp["token"],
+                                 inp["pos"])
+    p_specs = infer_param_specs(params_s, env)
+    c_specs = cache_specs(cache_s, env, b)
+    tok_spec = batch_specs(inp["token"], env, seq_sharded=False)
+    lg_spec = _logits_spec(logits_s, env)
+    return LoweringSpec(
+        name=f"{cfg.name}:{shape.name}",
+        step=step,
+        args=(params_s, cache_s, inp["token"], inp["pos"]),
+        in_shardings=(shardings_of(p_specs, env),
+                      shardings_of(c_specs, env),
+                      env.sharding(tok_spec), env.sharding(P())),
+        out_shardings=(env.sharding(lg_spec), shardings_of(c_specs, env)),
+        static={"mode": "decode"},
+    )
+
+
+def _logits_spec(logits_s, env: MeshEnv) -> P:
+    b, _, v = logits_s.shape
+    names = [None, None, None]
+    if b % env.dp_size == 0:
+        names[0] = env.dp_axes
+    if env.tp_axis and v % env.tp_size == 0:
+        names[2] = env.tp_axis
+    return P(*names)
+
+
+def make_spec(arch: str, shape_name: str, env: MeshEnv) -> LoweringSpec:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if not cfg.supports_shape(shape):
+        raise ValueError(f"{arch} skips {shape_name} "
+                         f"(sub-quadratic attention required)")
+    if shape.kind == "train":
+        return train_spec(cfg, shape, env)
+    if shape.kind == "prefill":
+        return prefill_spec(cfg, shape, env)
+    return decode_spec(cfg, shape, env)

@@ -1,0 +1,71 @@
+"""Training launcher.
+
+On real hardware this runs the full config on the production mesh; on
+this CPU host use ``--reduced`` (the per-arch smoke config) to execute
+real steps, or ``--dry`` to lower+compile the full cell only (same path
+as launch/dryrun.py, single cell).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --shape train_4k --dry
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_arch, get_shape
+from repro.data.lm import batch_stream
+from repro.distributed.sharding import single_device_env
+from repro.models.model import build_model
+from repro.train.optim import OptimizerConfig
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--reduced", action="store_true",
+                    help="run the smoke-scale config on this host")
+    ap.add_argument("--dry", action="store_true",
+                    help="lower+compile the full cell instead of running")
+    args = ap.parse_args()
+
+    if args.dry:
+        # defer: device count must be forced before jax init
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape,
+               "--mesh", "single,multi", "--out", "experiments/dryrun"]
+        raise SystemExit(subprocess.call(cmd))
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    env = single_device_env()
+    model = build_model(cfg)
+    opt = OptimizerConfig(name=args.optimizer, lr=args.lr,
+                          warmup_steps=max(args.steps // 10, 1))
+    trainer = Trainer(model, opt, env, ckpt_dir=args.ckpt_dir,
+                      remat=not args.reduced)
+    state = trainer.restore_or_init()
+    print(f"{cfg.name}: {model.param_count():,} params, "
+          f"start step {int(state.step)}")
+    stream = batch_stream(cfg, args.batch, args.seq,
+                          start_cursor=state.data_cursor)
+    state = trainer.fit(state, stream, args.steps, log_every=5)
+    print(f"finished at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Shared layer primitives: norms, RoPE, projections, MLPs, init."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def rmsnorm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(cfg: ArchConfig, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_init(cfg: ArchConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(hd: int, theta: float):
+    return theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (S,) or (..., S) global token positions."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd//2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd//2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : (d + 1) // 2]))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ArchConfig, key, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff),
+        "w_up": dense_init(k2, d, d_ff),
+        "w_down": dense_init(k3, d_ff, d),
+    }
+
+
+def mlp_apply(cfg: ArchConfig, p, x):
+    dt = x.dtype
+    act = act_fn(cfg.act)
+    h = act(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)

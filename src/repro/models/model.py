@@ -1,0 +1,862 @@
+"""Unified model definition for the 10 assigned architectures.
+
+One ``Model`` class covers every family (dense / moe / ssm / hybrid /
+vlm / audio).  The layer stack is expressed as a ``lax.scan`` over
+*pattern groups* (the block_pattern repeated n_layers // period times,
+plus an unrolled tail) so that the HLO — and therefore dry-run compile
+time and code size — is independent of depth.  Per-layer parameters are
+stacked along a leading axis ("stack" in the param path tells the
+sharding rules to skip it).
+
+Execution modes:
+  * ``loss`` / ``train``  — teacher-forced LM loss over (tokens, labels)
+  * ``prefill``           — forward pass that also builds decode caches
+  * ``decode_step``       — one new token against the caches
+
+Distribution: batch over ("pod","data"), sequence over "model" (SP) via
+the ring/flash modules in models/attention.py, experts over "model"
+(EP) in models/moe.py, recurrent states replicated (they are O(B·d)).
+Parameters are 2-D FSDP sharded by distributed/sharding.py rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import (MeshEnv, constrain,
+                                          gather_for_compute, get_env,
+                                          set_env)
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models.layers import (
+    act_fn,
+    dense_init,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    rope_frequencies,
+    apply_rope,
+    sinusoidal_positions,
+)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def cast_params(params: Params, dt) -> Params:
+    """Compute-dtype copies of the f32 master weights (>=2-D leaves).
+
+    Casting BEFORE the layer scan matters for distribution, not just
+    speed: the FSDP all-gathers/reduce-scatters then move bf16 instead
+    of the f32 masters — XLA does not hoist the convert above the
+    gather on its own (measured 2x on every dense train cell,
+    EXPERIMENTS.md §Perf).  1-D leaves (norm scales, gates) stay f32.
+    """
+    if dt == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda x: x.astype(dt)
+        if x.ndim >= 2 and x.dtype == jnp.float32 else x, params)
+
+
+# ===========================================================================
+# per-kind layer parameter initialisers
+# ===========================================================================
+
+def _attn_params(cfg: ArchConfig, key, cross: bool = False) -> Params:
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], d, qd),
+        "wk": dense_init(ks[1], d, kvd),
+        "wv": dense_init(ks[2], d, kvd),
+        "wo": dense_init(ks[3], qd, d, scale=1.0 / math.sqrt(qd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _layer_params(cfg: ArchConfig, kind: str, key) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": norm_init(cfg, d)}
+    if kind in ("attn", "local"):
+        p["attn"] = _attn_params(cfg, ks[0])
+        p["norm2"] = norm_init(cfg, d)
+        if cfg.is_moe:
+            p["moe"] = moe_mod.moe_init(cfg, ks[1])
+            if cfg.n_shared_experts:
+                p["shared_mlp"] = mlp_init(
+                    cfg, ks[2], d, cfg.d_ff_expert * cfg.n_shared_experts)
+        else:
+            p["mlp"] = mlp_init(cfg, ks[1], d, cfg.d_ff)
+    elif kind == "rec":
+        # Griffin recurrent block: gate & recurrent input projections,
+        # conv4, RG-LRU gates, output projection — then its own MLP.
+        dr = d
+        p["proj_gate"] = dense_init(ks[0], d, dr)
+        p["proj_in"] = dense_init(ks[1], d, dr)
+        p["conv_w"] = jax.random.normal(ks[2], (4, dr), jnp.float32) * 0.1
+        p["conv_b"] = jnp.zeros((dr,), jnp.float32)
+        p["w_rg"] = dense_init(ks[3], dr, dr)
+        p["b_rg"] = jnp.zeros((dr,), jnp.float32)
+        p["w_ig"] = dense_init(ks[4], dr, dr)
+        p["b_ig"] = jnp.zeros((dr,), jnp.float32)
+        p["lam"] = jnp.full((dr,), 0.7, jnp.float32)  # a ≈ 0.96^c init
+        p["wo"] = dense_init(ks[5], dr, d)
+        p["norm2"] = norm_init(cfg, d)
+        p["mlp"] = mlp_init(cfg, jax.random.fold_in(key, 7), d, cfg.d_ff)
+    elif kind == "m":
+        # mLSTM block: qkv + output projections + per-head i/f gates.
+        h = cfg.n_heads
+        p["wq"] = dense_init(ks[0], d, d)
+        p["wk"] = dense_init(ks[1], d, d)
+        p["wv"] = dense_init(ks[2], d, d)
+        p["wo"] = dense_init(ks[3], d, d)
+        p["w_if"] = dense_init(ks[4], d, 2 * h)   # input & forget gates
+        p["b_if"] = jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), jnp.full((h,), 3.0, jnp.float32)])
+    elif kind == "s":
+        # sLSTM block: z/i/f/o pre-activations + block-diag recurrent R.
+        h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+        p["w_zifo"] = dense_init(ks[0], d, 4 * d)
+        p["b_zifo"] = jnp.zeros((4, h, hd), jnp.float32)
+        p["r_mat"] = jax.random.normal(ks[1], (h, hd, 4 * hd)) * (hd ** -0.5)
+        p["wo"] = dense_init(ks[2], d, d)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+# ===========================================================================
+# per-kind sequence-mode forward (train / prefill)
+# ===========================================================================
+
+def _qk_norm(cfg: ArchConfig, x, scale):
+    """Per-head RMSNorm (qwen3)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + scale)
+    return out.astype(x.dtype)
+
+
+def _attn_qkv(cfg: ArchConfig, p, h, positions):
+    b, s, _ = h.shape
+    dt = h.dtype
+    q = h @ p["wq"].astype(dt)
+    k = h @ p["wk"].astype(dt)
+    v = h @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = _qk_norm(cfg, q, p["q_norm"])
+        k = _qk_norm(cfg, k, p["k_norm"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(cfg: ArchConfig, p, x, env: MeshEnv):
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_dispatch(cfg, p["moe"], x, env=env)
+        if cfg.n_shared_experts:
+            y = y + mlp_apply(cfg, p["shared_mlp"], x)
+        return y, aux
+    return mlp_apply(cfg, p["mlp"], x), jnp.zeros((), jnp.float32)
+
+
+def _attn_layer_seq(cfg: ArchConfig, p, x, env: MeshEnv, *, kind: str,
+                    positions, causal: bool = True):
+    h = norm_apply(cfg, x, p["norm1"])
+    q, k, v = _attn_qkv(cfg, p["attn"], h, positions)
+    window = cfg.window if kind == "local" else 0
+    o = attn.ring_attention(q, k, v, env=env, causal=causal, window=window)
+    b, s, _, _ = o.shape
+    x = x + o.reshape(b, s, cfg.q_dim) @ p["attn"]["wo"].astype(x.dtype)
+    h2 = norm_apply(cfg, x, p["norm2"])
+    y, aux = _ffn(cfg, p, h2, env)
+    return x + y, aux
+
+
+def _rec_layer_seq(cfg: ArchConfig, p, x, env: MeshEnv):
+    dt = x.dtype
+    h = norm_apply(cfg, x, p["norm1"])
+    gate = jax.nn.gelu(h @ p["proj_gate"].astype(dt))
+    xin = h @ p["proj_in"].astype(dt)
+    hr = rec.rglru_seq(xin, p["w_rg"], p["b_rg"], p["w_ig"], p["b_ig"],
+                       p["conv_w"], p["conv_b"], p["lam"], env=env)
+    x = x + (gate * hr) @ p["wo"].astype(dt)
+    h2 = norm_apply(cfg, x, p["norm2"])
+    return x + mlp_apply(cfg, p["mlp"], h2)
+
+
+def _mlstm_layer_seq(cfg: ArchConfig, p, x, env: MeshEnv):
+    dt = x.dtype
+    b, s, d = x.shape
+    hn, hd = cfg.n_heads, d // cfg.n_heads
+    h = norm_apply(cfg, x, p["norm1"])
+    q = (h @ p["wq"].astype(dt)).reshape(b, s, hn, hd)
+    k = (h @ p["wk"].astype(dt)).reshape(b, s, hn, hd)
+    v = (h @ p["wv"].astype(dt)).reshape(b, s, hn, hd)
+    gates = h @ p["w_if"].astype(dt) + p["b_if"].astype(dt)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)       # (B,S,H)
+    o = rec.mlstm_seq(q, k, v, i_raw, f_raw, env=env)
+    return x + o.reshape(b, s, d) @ p["wo"].astype(dt)
+
+
+def _slstm_layer_seq(cfg: ArchConfig, p, x, env: MeshEnv):
+    dt = x.dtype
+    b, s, d = x.shape
+    hn, hd = cfg.n_heads, d // cfg.n_heads
+    h = norm_apply(cfg, x, p["norm1"])
+    pre = (h @ p["w_zifo"].astype(dt)).reshape(b, s, 4, hn, hd)
+    pre = pre + p["b_zifo"].astype(dt)
+    o = rec.slstm_seq(pre, p["r_mat"], env=env)
+    return x + o.reshape(b, s, d) @ p["wo"].astype(dt)
+
+
+def _layer_seq(cfg: ArchConfig, kind: str, p, x, env: MeshEnv, positions,
+               causal: bool = True):
+    """Returns (x, aux_loss)."""
+    if kind in ("attn", "local"):
+        return _attn_layer_seq(cfg, p, x, env, kind=kind,
+                               positions=positions, causal=causal)
+    if kind == "rec":
+        return _rec_layer_seq(cfg, p, x, env), jnp.zeros((), jnp.float32)
+    if kind == "m":
+        return _mlstm_layer_seq(cfg, p, x, env), jnp.zeros((), jnp.float32)
+    if kind == "s":
+        return _slstm_layer_seq(cfg, p, x, env), jnp.zeros((), jnp.float32)
+    raise ValueError(kind)
+
+
+# ===========================================================================
+# per-kind caches + decode-mode forward
+# ===========================================================================
+
+def _layer_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int,
+                 dtype) -> Cache:
+    hd = cfg.hd
+    if kind == "attn":
+        shape = (batch, cache_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "local":
+        w = min(cfg.window, cache_len)
+        shape = (batch, w, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "kpos": jnp.full((w,), -1, jnp.int32)}
+    d = cfg.d_model
+    hn = cfg.n_heads
+    hdm = d // hn
+    if kind == "rec":
+        return {"h": jnp.zeros((batch, d), jnp.float32),
+                "tail": jnp.zeros((batch, 3, d), jnp.float32)}
+    if kind == "m":
+        return {"c": jnp.zeros((batch, hn, hdm, hdm), jnp.float32),
+                "n": jnp.zeros((batch, hn, hdm), jnp.float32)}
+    if kind == "s":
+        z = jnp.zeros((batch, hn, hdm), jnp.float32)
+        return {"c": z, "n": z, "h": z,
+                "m": jnp.full((batch, hn, hdm), -1e30, jnp.float32)}
+    raise ValueError(kind)
+
+
+def _layer_decode(cfg: ArchConfig, kind: str, p, x, cache: Cache,
+                  pos, env: MeshEnv) -> Tuple[jnp.ndarray, Cache]:
+    """x: (B, 1, d) -> (x', cache')."""
+    dt = x.dtype
+    b, _, d = x.shape
+    if kind in ("attn", "local"):
+        h = norm_apply(cfg, x, p["norm1"])
+        posv = jnp.full((1,), pos, jnp.int32)
+        q, k, v = _attn_qkv(cfg, p["attn"], h, posv)
+        if kind == "attn":
+            o, kc, vc = attn.decode_attention(
+                q, cache["k"], cache["v"], k, v, pos, env=env)
+            cache = {"k": kc, "v": vc}
+        else:
+            o, kc, vc, kp = attn.window_decode_attention(
+                q, cache["k"], cache["v"], cache["kpos"], k, v, pos,
+                window=cfg.window)
+            cache = {"k": kc, "v": vc, "kpos": kp}
+        x = x + o.reshape(b, 1, cfg.q_dim) @ p["attn"]["wo"].astype(dt)
+        h2 = norm_apply(cfg, x, p["norm2"])
+        if cfg.is_moe:
+            y = moe_mod.moe_decode(cfg, p["moe"], h2, env=env)
+            if cfg.n_shared_experts:
+                y = y + mlp_apply(cfg, p["shared_mlp"], h2)
+        else:
+            y = mlp_apply(cfg, p["mlp"], h2)
+        return x + y, cache
+    if kind == "rec":
+        h = norm_apply(cfg, x, p["norm1"])[:, 0]
+        gate = jax.nn.gelu(h @ p["proj_gate"].astype(dt))
+        xin = h @ p["proj_in"].astype(dt)
+        (hh, tail), hr = rec.rglru_decode_step(
+            (cache["h"], cache["tail"]), xin, p["w_rg"], p["b_rg"],
+            p["w_ig"], p["b_ig"], p["conv_w"], p["conv_b"], p["lam"])
+        x = x + ((gate * hr.astype(dt)) @ p["wo"].astype(dt))[:, None]
+        h2 = norm_apply(cfg, x, p["norm2"])
+        return x + mlp_apply(cfg, p["mlp"], h2), {"h": hh, "tail": tail}
+    hn, hdm = cfg.n_heads, d // cfg.n_heads
+    if kind == "m":
+        h = norm_apply(cfg, x, p["norm1"])[:, 0]
+        q = (h @ p["wq"].astype(dt)).reshape(b, hn, hdm)
+        k = (h @ p["wk"].astype(dt)).reshape(b, hn, hdm)
+        v = (h @ p["wv"].astype(dt)).reshape(b, hn, hdm)
+        gates = h @ p["w_if"].astype(dt) + p["b_if"].astype(dt)
+        i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+        (c, n), o = rec.mlstm_decode_step(
+            (cache["c"], cache["n"]), q, k, v, i_raw, f_raw)
+        x = x + (o.reshape(b, d) @ p["wo"].astype(dt))[:, None]
+        return x, {"c": c, "n": n}
+    if kind == "s":
+        h = norm_apply(cfg, x, p["norm1"])[:, 0]
+        pre = (h @ p["w_zifo"].astype(dt)).reshape(b, 4, hn, hdm)
+        pre = pre + p["b_zifo"].astype(dt)
+        st = (cache["c"], cache["n"], cache["h"], cache["m"])
+        (c, n, hh, m), o = rec.slstm_decode_step(st, pre, p["r_mat"])
+        x = x + (o.reshape(b, d) @ p["wo"].astype(dt))[:, None]
+        return x, {"c": c, "n": n, "h": hh, "m": m}
+    raise ValueError(kind)
+
+
+# ===========================================================================
+# the Model
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # --- layout -----------------------------------------------------------
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return self.cfg.block_pattern
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // len(self.pattern)
+
+    @property
+    def tail_kinds(self) -> Tuple[str, ...]:
+        return self.pattern[: self.cfg.n_layers % len(self.pattern)]
+
+    # --- init ---------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        v, d = cfg.padded_vocab, cfg.d_model
+        keys = jax.random.split(key, 8)
+        params: Params = {
+            "embed": jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02,
+            "final_norm": norm_init(cfg, d),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = jax.random.normal(keys[1], (v, d),
+                                                  jnp.float32) * 0.02
+
+        def stacked(kind: str, key, n: int):
+            return jax.vmap(lambda k: _layer_params(cfg, kind, k))(
+                jax.random.split(key, n))
+
+        if self.n_groups > 0:
+            params["stack"] = {
+                f"{j}_{kind}": stacked(kind, jax.random.fold_in(keys[2], j),
+                                       self.n_groups)
+                for j, kind in enumerate(self.pattern)
+            }
+        if self.tail_kinds:
+            params["tail"] = {
+                f"{j}_{kind}": _layer_params(cfg, kind,
+                                             jax.random.fold_in(keys[3], j))
+                for j, kind in enumerate(self.tail_kinds)
+            }
+        if cfg.is_encoder_decoder:
+            ek = jax.random.split(keys[4], cfg.n_encoder_layers)
+            params["enc_stack"] = jax.vmap(
+                lambda k: _layer_params(cfg, "attn", k))(ek)
+            params["enc_norm"] = norm_init(cfg, d)
+            ck = jax.random.split(keys[5], cfg.n_layers)
+            params["cross_stack"] = jax.vmap(
+                lambda k: {"attn": _attn_params(cfg, k),
+                           "norm": norm_init(cfg, d)})(ck)
+        return params
+
+    def param_count(self, params: Optional[Params] = None) -> int:
+        tree = params if params is not None else jax.eval_shape(
+            self.init, jax.random.PRNGKey(0))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.is_moe:
+            return total
+        per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+        dead = cfg.n_layers * (cfg.n_experts - cfg.moe_top_k) * per_expert
+        return total - dead
+
+    # --- embedding / head ---------------------------------------------------
+    def _embed(self, params: Params, tokens, dt):
+        cfg = self.cfg
+        x = params["embed"].astype(dt)[tokens]
+        if cfg.scale_embeds:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+        return x
+
+    def _logits(self, params: Params, x):
+        w = params["embed"] if self.cfg.tie_embeddings else params["unembed"]
+        env = get_env()
+        if env is not None and env.mesh.size > 1 and env.tp_axis:
+            # vocab stays model-sharded (matches the logits constraint);
+            # the data-sharded feature dim gathers so the unembed dot
+            # does not partial-sum (B, S, V)-sized activations.
+            if w.shape[0] % env.tp_size == 0:
+                w = jax.lax.with_sharding_constraint(
+                    w, env.sharding(P(env.tp_axis, None)))
+            else:
+                w = jax.lax.with_sharding_constraint(
+                    w, env.sharding(P(None, None)))
+        return x @ w.astype(x.dtype).T
+
+    # --- stack application ---------------------------------------------------
+    def _run_stack(self, params: Params, x, env: MeshEnv, positions, *,
+                   causal: bool = True, remat: bool = True):
+        cfg = self.cfg
+        pattern = self.pattern
+
+        def group(x, p_slice):
+            p_slice = gather_for_compute(p_slice)
+            aux = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(pattern):
+                x, a = _layer_seq(cfg, kind, p_slice[f"{j}_{kind}"], x, env,
+                                  positions, causal=causal)
+                aux = aux + a
+            return x, aux
+
+        aux_total = jnp.zeros((), jnp.float32)
+        if self.n_groups > 0:
+            body = jax.checkpoint(group) if remat else group
+
+            def scan_fn(x, p_slice):
+                return body(x, p_slice)
+
+            x, auxs = jax.lax.scan(scan_fn, x, params["stack"])
+            aux_total = aux_total + auxs.sum()
+        for j, kind in enumerate(self.tail_kinds):
+            p_tail = gather_for_compute(params["tail"][f"{j}_{kind}"])
+            x, a = _layer_seq(cfg, kind, p_tail, x,
+                              env, positions, causal=causal)
+            aux_total = aux_total + a
+        return x, aux_total
+
+    def _run_encoder(self, params: Params, frames, env: MeshEnv):
+        """Whisper encoder: bidirectional attention over stub frame embeds."""
+        cfg = self.cfg
+        x = frames + sinusoidal_positions(frames.shape[1],
+                                          cfg.d_model).astype(frames.dtype)
+        x = constrain(x, "dp", "sp", None)
+
+        def layer(x, p):
+            p = gather_for_compute(p)
+            x, _ = _layer_seq(cfg, "attn", p, x, env, None, causal=False)
+            return x, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(layer), x, params["enc_stack"])
+        return norm_apply(cfg, x, params["enc_norm"])
+
+    def _cross_layer(self, cfg, p, x, enc_kv, env):
+        """Decoder cross-attention (memory precomputed as k/v)."""
+        h = norm_apply(cfg, x, p["norm"])
+        dt = h.dtype
+        b, s, _ = h.shape
+        q = (h @ p["attn"]["wq"].astype(dt)).reshape(b, s, cfg.n_heads, cfg.hd)
+        k, v = enc_kv
+        o = attn.cross_attention(q, k, v, env=env)
+        return x + o.reshape(b, s, cfg.q_dim) @ p["attn"]["wo"].astype(dt)
+
+    def _enc_kv(self, params: Params, enc_out):
+        """Precompute per-decoder-layer cross K/V from encoder output."""
+        cfg = self.cfg
+        dt = enc_out.dtype
+        b, f, _ = enc_out.shape
+
+        def kv(p):
+            k = (enc_out @ p["attn"]["wk"].astype(dt)).reshape(
+                b, f, cfg.n_kv_heads, cfg.hd)
+            v = (enc_out @ p["attn"]["wv"].astype(dt)).reshape(
+                b, f, cfg.n_kv_heads, cfg.hd)
+            return k, v
+
+        return jax.vmap(kv)(params["cross_stack"])   # (L, B, F, KVH, hd)
+
+    def _run_decoder_with_cross(self, params: Params, x, enc_out,
+                                env: MeshEnv, positions,
+                                cache_len: Optional[int] = None):
+        """Whisper decoder: self-attn layer + cross-attn, per layer.
+
+        With ``cache_len`` set, also returns the per-layer self-attn K/V
+        caches (prefill mode).
+        """
+        cfg = self.cfg
+        kv = self._enc_kv(params, enc_out)
+        collect = cache_len is not None
+
+        def layer(x, xs):
+            p_self, p_cross, k, v = xs
+            p_self = gather_for_compute(p_self)
+            p_cross = gather_for_compute(p_cross)
+            h = norm_apply(cfg, x, p_self["norm1"])
+            q, kk, vv = _attn_qkv(cfg, p_self["attn"], h, positions)
+            o = attn.ring_attention(q, kk, vv, env=env, causal=True)
+            b, s, _, _ = o.shape
+            x = x + o.reshape(b, s, cfg.q_dim) @ p_self["attn"]["wo"].astype(x.dtype)
+            x = self._cross_layer(cfg, p_cross, x, (k, v), env)
+            h2 = norm_apply(cfg, x, p_self["norm2"])
+            x = x + mlp_apply(cfg, p_self["mlp"], h2)
+            cache = ({"k": _pad_cache(kk, cache_len),
+                      "v": _pad_cache(vv, cache_len)} if collect else 0)
+            return x, cache
+
+        stack = params["stack"]["0_attn"]
+        body = layer if collect else jax.checkpoint(layer)
+        x, caches = jax.lax.scan(body, x,
+                                 (stack, params["cross_stack"], kv[0], kv[1]))
+        return (x, caches) if collect else x
+
+    # --- loss (train) --------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray],
+             env: MeshEnv, *, remat: bool = True):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        params = cast_params(params, dt)
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        x = self._embed(params, tokens, dt)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(dt)
+            x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+        x = constrain(x, "dp", "sp", None)
+        positions = jnp.arange(x.shape[1])
+        if cfg.is_encoder_decoder:
+            enc = self._run_encoder(params, batch["frames"].astype(dt), env)
+            x = self._run_decoder_with_cross(params, x, enc, env, positions)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            x, aux = self._run_stack(params, x, env, positions, remat=remat)
+        x = norm_apply(cfg, x, params["final_norm"])
+        logits = self._logits(params, x)
+        logits = constrain(logits, "dp", None, "tp")
+        logits = logits.astype(jnp.float32)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+        return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+    # --- prefill -------------------------------------------------------------
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray],
+                env: MeshEnv, cache_len: Optional[int] = None):
+        """Forward over the prompt; returns (last_logits, caches).
+
+        The decode caches returned are sized ``cache_len`` (default: the
+        prompt length) and hold the prompt K/V (attention kinds) or the
+        final recurrent state (rec/m/s kinds).
+        """
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        params = cast_params(params, dt)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or s
+        x = self._embed(params, tokens, dt)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(dt)
+            x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+        x = constrain(x, "dp", "sp", None)
+        positions = jnp.arange(s)
+
+        caches: Cache = {}
+        if cfg.is_encoder_decoder:
+            enc = self._run_encoder(params, batch["frames"].astype(dt), env)
+            caches["enc_kv"] = self._enc_kv(params, enc)
+            x, self_kv = self._run_decoder_with_cross(
+                params, x, enc, env, positions, cache_len=cache_len)
+            caches["stack"] = {"0_attn": self_kv}
+        else:
+            # run the stack while collecting per-layer caches
+            x, caches["stack"], caches["tail"] = self._run_stack_with_cache(
+                params, x, env, positions, cache_len)
+        x = norm_apply(cfg, x, params["final_norm"])
+        logits = self._logits(params, x[:, -1:])
+        return logits.astype(jnp.float32), caches
+
+    def _run_stack_with_cache(self, params: Params, x, env: MeshEnv,
+                              positions, cache_len):
+        cfg = self.cfg
+        pattern = self.pattern
+        b, s, _ = x.shape
+        dt = x.dtype
+
+        def layer_with_cache(kind, p, x):
+            """Sequence forward + the decode cache this layer leaves behind."""
+            if kind in ("attn", "local"):
+                h = norm_apply(cfg, x, p["norm1"])
+                q, k, v = _attn_qkv(cfg, p["attn"], h, positions)
+                window = cfg.window if kind == "local" else 0
+                o = attn.ring_attention(q, k, v, env=env, causal=True,
+                                        window=window)
+                x = x + o.reshape(b, s, cfg.q_dim) @ p["attn"]["wo"].astype(dt)
+                h2 = norm_apply(cfg, x, p["norm2"])
+                y, _ = _ffn(cfg, p, h2, env)
+                x = x + y
+                if kind == "attn":
+                    cache = {"k": _pad_cache(k, cache_len),
+                             "v": _pad_cache(v, cache_len)}
+                else:
+                    # rolling-window cache: keep the last min(w, s) keys at
+                    # their pos % w slots so decode writes continue the ring
+                    w = min(cfg.window, cache_len)
+                    keep = min(w, s)
+                    kpos = jnp.arange(s - keep, s)          # kept positions
+                    idx = kpos % w
+                    kw = jnp.zeros((b, w) + k.shape[2:], k.dtype
+                                   ).at[:, idx].set(k[:, s - keep:])
+                    vw = jnp.zeros((b, w) + v.shape[2:], v.dtype
+                                   ).at[:, idx].set(v[:, s - keep:])
+                    kp = jnp.full((w,), -1, jnp.int32).at[idx].set(kpos)
+                    cache = {"k": kw, "v": vw, "kpos": kp}
+                return x, cache
+            if kind == "rec":
+                h = norm_apply(cfg, x, p["norm1"])
+                gate = jax.nn.gelu(h @ p["proj_gate"].astype(dt))
+                xin = h @ p["proj_in"].astype(dt)
+                hr = rec.rglru_seq(xin, p["w_rg"], p["b_rg"], p["w_ig"],
+                                   p["b_ig"], p["conv_w"], p["conv_b"],
+                                   p["lam"], env=env)
+                x = x + (gate * hr) @ p["wo"].astype(dt)
+                h2 = norm_apply(cfg, x, p["norm2"])
+                x = x + mlp_apply(cfg, p["mlp"], h2)
+                cache = {"h": hr[:, -1].astype(jnp.float32),
+                         "tail": xin[:, -3:].astype(jnp.float32)}
+                return x, cache
+            if kind == "m":
+                hn, hdm = cfg.n_heads, cfg.d_model // cfg.n_heads
+                h = norm_apply(cfg, x, p["norm1"])
+                q = (h @ p["wq"].astype(dt)).reshape(b, s, hn, hdm)
+                k = (h @ p["wk"].astype(dt)).reshape(b, s, hn, hdm)
+                v = (h @ p["wv"].astype(dt)).reshape(b, s, hn, hdm)
+                gates = h @ p["w_if"].astype(dt) + p["b_if"].astype(dt)
+                i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+                o, (cT, nT) = _mlstm_with_state(q, k, v, i_raw, f_raw, env)
+                x = x + o.reshape(b, s, cfg.d_model) @ p["wo"].astype(dt)
+                return x, {"c": cT, "n": nT}
+            if kind == "s":
+                hn, hdm = cfg.n_heads, cfg.d_model // cfg.n_heads
+                h = norm_apply(cfg, x, p["norm1"])
+                pre = (h @ p["w_zifo"].astype(dt)).reshape(b, s, 4, hn, hdm)
+                pre = pre + p["b_zifo"].astype(dt)
+                o, st = _slstm_with_state(pre, p["r_mat"], env)
+                x = x + o.reshape(b, s, cfg.d_model) @ p["wo"].astype(dt)
+                return x, {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+            raise ValueError(kind)
+
+        stack_caches = None
+        if self.n_groups > 0:
+            def group(x, p_slice):
+                p_slice = gather_for_compute(p_slice)
+                caches = {}
+                for j, kind in enumerate(pattern):
+                    x, c = layer_with_cache(kind, p_slice[f"{j}_{kind}"], x)
+                    caches[f"{j}_{kind}"] = c
+                return x, caches
+
+            x, stack_caches = jax.lax.scan(group, x, params["stack"])
+        tail_caches = {}
+        for j, kind in enumerate(self.tail_kinds):
+            x, c = layer_with_cache(
+                kind, gather_for_compute(params["tail"][f"{j}_{kind}"]), x)
+            tail_caches[f"{j}_{kind}"] = c
+        return x, stack_caches, tail_caches
+
+    # --- decode ----------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int) -> Cache:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        caches: Cache = {}
+        if self.n_groups > 0:
+            caches["stack"] = {
+                f"{j}_{kind}": jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x, (self.n_groups,) + x.shape).copy(),
+                    _layer_cache(cfg, kind, batch, cache_len, dt))
+                for j, kind in enumerate(self.pattern)
+            }
+        if self.tail_kinds:
+            caches["tail"] = {
+                f"{j}_{kind}": _layer_cache(cfg, kind, batch, cache_len, dt)
+                for j, kind in enumerate(self.tail_kinds)
+            }
+        if cfg.is_encoder_decoder:
+            f = _round_up(cfg.encoder_seq, 256)
+            caches["enc_kv"] = (
+                jnp.zeros((cfg.n_layers, batch, f, cfg.n_kv_heads, cfg.hd), dt),
+                jnp.zeros((cfg.n_layers, batch, f, cfg.n_kv_heads, cfg.hd), dt),
+            )
+        return caches
+
+    def decode_step(self, params: Params, caches: Cache, token, pos,
+                    env: MeshEnv):
+        """token: (B, 1) int32; pos: () int32.  Returns (logits, caches')."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        params = cast_params(params, dt)
+        x = self._embed(params, token, dt)
+        pattern = self.pattern
+
+        new_caches: Cache = {}
+        if cfg.is_encoder_decoder:
+            kv = caches["enc_kv"]
+            new_caches["enc_kv"] = kv
+
+            def cross_step(x, p_cross, k, v):
+                h = norm_apply(cfg, x, p_cross["norm"])
+                b = x.shape[0]
+                g = cfg.n_heads // cfg.n_kv_heads
+                q = (h @ p_cross["attn"]["wq"].astype(dt)).reshape(
+                    b, 1, cfg.n_kv_heads, g, cfg.hd)
+                s = jnp.einsum("bqkgd,bskd->bqkgs", q, k,
+                               preferred_element_type=jnp.float32)
+                s = s * (cfg.hd ** -0.5)
+                pr = jax.nn.softmax(s, axis=-1).astype(dt)
+                o = jnp.einsum("bqkgs,bskd->bqkgd", pr, v)
+                return x + o.reshape(b, 1, cfg.q_dim) @ \
+                    p_cross["attn"]["wo"].astype(dt)
+
+            def dec_layer(x, xs):
+                # faithful whisper order: self-attn -> cross-attn -> FFN
+                p_self, p_cross, k, v, c = xs
+                b = x.shape[0]
+                h = norm_apply(cfg, x, p_self["norm1"])
+                posv = jnp.full((1,), pos, jnp.int32)
+                q, kk, vv = _attn_qkv(cfg, p_self["attn"], h, posv)
+                o, kc, vc = attn.decode_attention(
+                    q, c["k"], c["v"], kk, vv, pos, env=env)
+                x = x + o.reshape(b, 1, cfg.q_dim) @ \
+                    p_self["attn"]["wo"].astype(dt)
+                x = cross_step(x, p_cross, k, v)
+                h2 = norm_apply(cfg, x, p_self["norm2"])
+                x = x + mlp_apply(cfg, p_self["mlp"], h2)
+                return x, {"k": kc, "v": vc}
+
+            x, nc = jax.lax.scan(
+                dec_layer, x,
+                (params["stack"]["0_attn"], params["cross_stack"],
+                 kv[0], kv[1], caches["stack"]["0_attn"]))
+            new_caches["stack"] = {"0_attn": nc}
+        else:
+            if self.n_groups > 0:
+                def group(x, xs):
+                    # decode stays weight-stationary: one token cannot
+                    # amortize a per-layer weight gather; the sharded
+                    # dots' small activation psums are cheaper.
+                    p_slice, c_slice = xs
+                    out = {}
+                    for j, kind in enumerate(pattern):
+                        key = f"{j}_{kind}"
+                        x, c = _layer_decode(cfg, kind, p_slice[key], x,
+                                             c_slice[key], pos, env)
+                        out[key] = c
+                    return x, out
+
+                x, nc = jax.lax.scan(group, x,
+                                     (params["stack"], caches["stack"]))
+                new_caches["stack"] = nc
+            if self.tail_kinds:
+                new_caches["tail"] = {}
+                for j, kind in enumerate(self.tail_kinds):
+                    key = f"{j}_{kind}"
+                    x, c = _layer_decode(cfg, kind, params["tail"][key],
+                                         x, caches["tail"][key], pos, env)
+                    new_caches["tail"][key] = c
+        x = norm_apply(cfg, x, params["final_norm"])
+        logits = self._logits(params, x)
+        logits = constrain(logits, "dp", None, "tp")
+        return logits.astype(jnp.float32), new_caches
+
+
+def _pad_cache(k, cache_len: int):
+    s = k.shape[1]
+    if s == cache_len:
+        return k
+    if s > cache_len:
+        return k[:, :cache_len]
+    pad = [(0, 0)] * k.ndim
+    pad[1] = (0, cache_len - s)
+    return jnp.pad(k, pad)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _mlstm_with_state(q, k, v, i_raw, f_raw, env: MeshEnv):
+    """mlstm_seq + final (C, n) state for prefill->decode handoff."""
+    out = rec.mlstm_seq(q, k, v, i_raw, f_raw, env=env)
+    # recompute the final state from the summaries (cheap, no attention)
+    hd = q.shape[-1]
+    kf = k.astype(jnp.float32) * (hd ** -0.5)
+    vf = v.astype(jnp.float32)
+    logi = -jax.nn.softplus(-i_raw.astype(jnp.float32))
+    logf = -jax.nn.softplus(-f_raw.astype(jnp.float32))
+    cum = jnp.cumsum(logf, axis=1)
+    wend = jnp.exp(cum[:, -1:, :] - cum + logi)
+    cT = jnp.einsum("bshd,bshv,bsh->bhdv", kf, vf, wend)
+    nT = jnp.einsum("bshd,bsh->bhd", kf, wend)
+    return out, (cT, nT)
+
+
+def _slstm_with_state(pre, r_mat, env: MeshEnv):
+    """slstm_seq + final state (rerun the last step locally)."""
+    out = rec.slstm_seq(pre, r_mat, env=env)
+    b, s, _, hn, hd = pre.shape
+    z = jnp.zeros((b, hn, hd), jnp.float32)
+    st = (z, z, z, jnp.full((b, hn, hd), -1e30, jnp.float32))
+    # exact final state requires the full scan; decode handoff re-derives
+    # it from the last position's output (approximation documented in
+    # DESIGN.md; exact for the smoke-scale tests via single-rank scan).
+    _, carry = rec._slstm_local_scan(pre.astype(jnp.float32), r_mat, st)
+    return out, carry
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,233 @@
+"""Mixture-of-Experts layer with expert parallelism.
+
+Two execution modes, both exact w.r.t. routing (capacity drops aside):
+
+  * ``moe_dispatch``   (train / prefill): tokens are sharded over
+    (dp..., model) [SP layout]; experts are sharded over `model` (EP)
+    with their contraction dim FSDP-sharded over `data`.  Tokens are
+    scatter-packed into per-expert capacity buffers, exchanged with a
+    single ``all_to_all`` over `model`, processed with dense per-expert
+    matmuls (true active-FLOPs only — no one-hot einsum dispatch), and
+    exchanged back.
+
+  * ``moe_decode``     (single-token decode): the token batch is tiny,
+    so tokens are all-gathered over dp; each `model` rank gathers only
+    the tokens routed to its local experts (capacity buffer), computes
+    the expert FFN with d_ff TP-sharded over `data` (partial-sum psum),
+    and contributions are psum-combined over `model`.  Expert weights
+    stay fully sharded (E over model × d_ff over data) — resident
+    memory per device is E/16 x d x f/16.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import MeshEnv
+from repro.models.layers import act_fn, dense_init
+
+
+def moe_init(cfg: ArchConfig, key):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e),
+        "expert_w_gate": jax.random.normal(ks[1], (e, d, f)) * (d ** -0.5),
+        "expert_w_up": jax.random.normal(ks[2], (e, d, f)) * (d ** -0.5),
+        "expert_w_down": jax.random.normal(ks[3], (e, f, d)) * (f ** -0.5),
+    }
+    return p
+
+
+def _route(x_f32, router_w, top_k: int):
+    """x: (t, d) f32.  Returns gates (t,k) f32, ids (t,k) int32, probs (t,E)."""
+    logits = x_f32 @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids, probs
+
+
+def _aux_loss(probs, ids, n_experts: int, axes) -> jnp.ndarray:
+    """Switch-style load-balance loss, psum-averaged over all mesh axes."""
+    t = probs.shape[0]
+    frac = jnp.zeros((n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    p_sum = probs.sum(0)
+    t_tot = jnp.asarray(t * ids.shape[1], jnp.float32)
+    if axes:
+        frac = jax.lax.psum(frac, axes)
+        p_sum = jax.lax.psum(p_sum, axes)
+        t_tot = jax.lax.psum(t_tot, axes)
+    return n_experts * jnp.sum((frac / t_tot) * (p_sum / (t_tot / ids.shape[1])))
+
+
+def _expert_ffn(cfg: ArchConfig, tokens, w_gate, w_up, w_down):
+    """tokens: (E_loc, C, d); weights (E_loc, d, f)/(E_loc, f, d)."""
+    act = act_fn(cfg.act)
+    dt = tokens.dtype
+    h = act(jnp.einsum("ecd,edf->ecf", tokens, w_gate.astype(dt))) * jnp.einsum(
+        "ecd,edf->ecf", tokens, w_up.astype(dt))
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# train / prefill: scatter -> all_to_all -> expert FFN -> all_to_all -> gather
+# ---------------------------------------------------------------------------
+
+def moe_dispatch(cfg: ArchConfig, p, x, *, env: MeshEnv):
+    """x: (B, S, d) sharded (dp, model, None).  Returns (y, aux_loss)."""
+    tp, n_tp = env.tp_axis, env.tp_size
+    dp = env.dp_axes
+    e, k = cfg.n_experts, cfg.moe_top_k
+    e_loc = max(e // max(n_tp, 1), 1)
+    has_data = "data" in env.axis_names
+
+    def local(x_l, router_w, wg, wu, wd):
+        b, s, d = x_l.shape
+        t = b * s
+        xt = x_l.reshape(t, d)
+        gates, ids, probs = _route(xt.astype(jnp.float32), router_w, k)
+        all_axes = tuple(a for a in env.axis_names)
+        aux = _aux_loss(probs, ids, e, all_axes if n_tp > 1 or env.dp_size > 1 else ())
+
+        cap = int(max(4, round(t * k / e * cfg.capacity_factor)))
+        flat_ids = ids.reshape(-1)                       # (t*k,)
+        # position-within-expert via sort-based ranking: O(n log n) and
+        # O(n+E) memory, vs the one-hot cumsum formulation whose
+        # (t·k, E) running sum lowers to an O(t·k·E) reduce-window —
+        # the dominant HBM term of the MoE cells before this change
+        # (EXPERIMENTS.md §Perf, qwen3-moe iteration 1).
+        order = jnp.argsort(flat_ids, stable=True)       # grouped by expert
+        counts = jnp.zeros((e,), jnp.int32).at[flat_ids].add(1)
+        starts = jnp.cumsum(counts) - counts             # exclusive prefix
+        pos_sorted = jnp.arange(t * k) - starts[flat_ids[order]]
+        pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+        src = jnp.repeat(jnp.arange(t), k)
+        buf = jnp.zeros((e, cap, d), xt.dtype)
+        buf = buf.at[flat_ids, pos].set(xt[src], mode="drop")
+
+        if n_tp > 1:
+            # (n_tp, E_loc, cap, d) -> exchange expert-owner blocks
+            buf = buf.reshape(n_tp, e_loc, cap, d)
+            recv = jax.lax.all_to_all(buf, tp, split_axis=0, concat_axis=0,
+                                      tiled=True)       # (n_tp_src, E_loc, cap, d)
+            tokens_e = recv.transpose(1, 0, 2, 3).reshape(e_loc, n_tp * cap, d)
+        else:
+            tokens_e = buf                                # (E, cap, d)
+
+        # FSDP weight gather in COMPUTE dtype: tokens are data-parallel
+        # (each data rank owns a batch shard), so expert weights must be
+        # gathered over `data` — but gathering the f32 master copies
+        # doubles the wire and HBM cost vs casting first.  (A tokens-stay
+        # /weights-stay F-TP over `data` is unsound here: different data
+        # ranks hold different tokens, their partial sums must not mix.)
+        dt_ = tokens_e.dtype
+        wg, wu, wd = (w.astype(dt_) for w in (wg, wu, wd))
+        if has_data and env.size("data") > 1:
+            wg = jax.lax.all_gather(wg, "data", axis=2, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=2, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=1, tiled=True)
+        y_e = _expert_ffn(cfg, tokens_e, wg, wu, wd)
+
+        if n_tp > 1:
+            y_e = y_e.reshape(e_loc, n_tp, cap, d).transpose(1, 0, 2, 3)
+            back = jax.lax.all_to_all(y_e, tp, split_axis=0, concat_axis=0,
+                                      tiled=True)
+            back = back.reshape(e, cap, d)
+        else:
+            back = y_e
+
+        vals = back[flat_ids, jnp.clip(pos, 0, cap - 1)]
+        vals = jnp.where((pos < cap)[:, None], vals, 0.0)
+        y = (vals.reshape(t, k, d) * gates[..., None].astype(vals.dtype)).sum(1)
+        return y.reshape(b, s, d), aux
+
+    if tp is None:
+        return local(x, p["router"], p["expert_w_gate"], p["expert_w_up"],
+                     p["expert_w_down"])
+
+    xspec = P(dp, tp, None)
+    dspec = "data" if has_data else None
+    wspec_gu = P(tp, None, dspec)     # (E, d, f): f over data
+    wspec_d = P(tp, dspec, None)      # (E, f, d): f over data
+    return jax.shard_map(
+        local, mesh=env.mesh,
+        in_specs=(xspec, P(None, None), wspec_gu, wspec_gu, wspec_d),
+        out_specs=(xspec, P()),
+        check_vma=False,
+    )(x, p["router"], p["expert_w_gate"], p["expert_w_up"], p["expert_w_down"])
+
+
+# ---------------------------------------------------------------------------
+# decode: gather tokens -> capacity gather per model rank -> F-TP over data
+# ---------------------------------------------------------------------------
+
+def moe_decode(cfg: ArchConfig, p, x, *, env: MeshEnv):
+    """x: (B, 1, d) sharded (dp, None, None).  Returns y (B, 1, d)."""
+    tp, n_tp = env.tp_axis, env.tp_size
+    dp = env.dp_axes
+    e, k = cfg.n_experts, cfg.moe_top_k
+    e_loc = max(e // max(n_tp, 1), 1)
+    has_data = "data" in env.axis_names
+    dsz = env.size("data") if has_data else 1
+
+    def local(x_l, router_w, wg, wu, wd):
+        b_loc, _, d = x_l.shape
+        xt = x_l.reshape(b_loc, d)
+        if dp and env.dp_size > 1:
+            xt = jax.lax.all_gather(xt, dp, axis=0, tiled=True)  # (B_all, d)
+        b_all = xt.shape[0]
+        gates, ids, _ = _route(xt.astype(jnp.float32), router_w, k)
+
+        r = jax.lax.axis_index(tp) if n_tp > 1 else 0
+        lo = r * e_loc
+        # (token, choice) pairs routed to local experts
+        flat_ids = ids.reshape(-1)
+        flat_gates = gates.reshape(-1)
+        is_local = (flat_ids >= lo) & (flat_ids < lo + e_loc)
+        cap = int(max(4, round(b_all * k / max(n_tp, 1) * 2)))
+        order = jnp.argsort(~is_local)  # local pairs first (stable)
+        sel = order[:cap]
+        sel_valid = is_local[sel]
+        sel_tok = sel // k
+        sel_exp = jnp.clip(flat_ids[sel] - lo, 0, e_loc - 1)
+        sel_gate = jnp.where(sel_valid, flat_gates[sel], 0.0)
+
+        toks = xt[sel_tok]                        # (cap, d)
+        wg_l, wu_l, wd_l = (w.astype(toks.dtype) for w in (wg, wu, wd))
+        act = act_fn(cfg.act)
+        h = act(jnp.einsum("cd,cdf->cf", toks, wg_l[sel_exp])) * jnp.einsum(
+            "cd,cdf->cf", toks, wu_l[sel_exp])
+        y_pair = jnp.einsum("cf,cfd->cd", h, wd_l[sel_exp])  # partial over f-slice
+        if has_data and dsz > 1:
+            y_pair = jax.lax.psum(y_pair, "data")
+        y_pair = y_pair * sel_gate[:, None].astype(y_pair.dtype)
+        y_all = jnp.zeros((b_all, d), y_pair.dtype).at[sel_tok].add(
+            jnp.where(sel_valid[:, None], y_pair, 0.0))
+        if n_tp > 1:
+            y_all = jax.lax.psum(y_all, tp)
+        if dp and env.dp_size > 1:
+            idx = jax.lax.axis_index(dp[0])
+            if len(dp) > 1:
+                idx = idx * env.size(dp[1]) + jax.lax.axis_index(dp[1])
+            y_all = jax.lax.dynamic_slice_in_dim(y_all, idx * b_loc, b_loc, 0)
+        return y_all.reshape(b_loc, 1, d)
+
+    if tp is None:
+        return local(x, p["router"], p["expert_w_gate"], p["expert_w_up"],
+                     p["expert_w_down"])
+
+    xspec = P(dp, None, None)
+    dspec = "data" if has_data else None
+    return jax.shard_map(
+        local, mesh=env.mesh,
+        in_specs=(xspec, P(None, None), P(tp, None, dspec), P(tp, None, dspec),
+                  P(tp, dspec, None)),
+        out_specs=xspec,
+        check_vma=False,
+    )(x, p["router"], p["expert_w_gate"], p["expert_w_up"], p["expert_w_down"])

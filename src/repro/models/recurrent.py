@@ -1,0 +1,335 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and RG-LRU (Griffin).
+
+All three support the SP layout (sequence sharded over the `model` mesh
+axis).  Linear recurrences (mLSTM state, RG-LRU) cross the rank boundary
+with an exclusive ring prefix-scan over cheap segment summaries
+(Hillis–Steele doubling, log2(n) ppermutes); the genuinely sequential
+sLSTM (h-dependent gating) crosses ranks with a sequential carry chain.
+
+Numerical conventions (documented simplifications vs. arXiv:2405.04517):
+  * mLSTM input gate uses log-sigmoid (bounded) instead of the exp gate +
+    max-stabilizer pair; forget gate is log-sigmoid as in the paper.
+  * sLSTM keeps the exponential gating + (c, n, m) stabilizer state and
+    the per-head recurrent matrices R (the defining sLSTM trait).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MeshEnv
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _exclusive_ring_prefix(summary, combine, identity, tp: str, n: int):
+    """Exclusive prefix over mesh ranks of segment summaries.
+
+    ``combine(earlier, later)`` composes two adjacent segments.  Returns,
+    at rank r, the composition of ranks 0..r-1 (identity at rank 0).
+    """
+    r = jax.lax.axis_index(tp)
+    val = summary
+    d = 1
+    while d < n:
+        recv = jax.tree.map(
+            lambda x: jax.lax.ppermute(x, tp, [(i, (i + d) % n) for i in range(n)]),
+            val,
+        )
+        val = _tree_where(r >= d, combine(recv, val), val)
+        d *= 2
+    recv = jax.tree.map(
+        lambda x: jax.lax.ppermute(x, tp, [(i, (i + 1) % n) for i in range(n)]),
+        val,
+    )
+    return _tree_where(r == 0, identity, recv)
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def _mlstm_chunk_scan(q, k, v, logi, logf, c0, n0, chunk: int):
+    """Chunked-parallel mLSTM over a local sequence.
+
+    q,k,v: (B,S,H,hd) f32; logi,logf: (B,S,H) f32 (log gates, <= 0)
+    c0: (B,H,hd,hd); n0: (B,H,hd).  Returns h (B,S,H,hd), (cT, nT).
+    """
+    b, s, h, hd = q.shape
+    L = chunk
+    nc = s // L
+    resh = lambda x: x.reshape((b, nc, L) + x.shape[2:]).swapaxes(0, 1)
+    qs, ks, vs, lis, lfs = map(resh, (q, k, v, logi, logf))
+
+    def step(carry, xs):
+        with jax.named_scope("kernel_interior"):
+            return _mlstm_chunk_step(carry, xs)
+
+    def _mlstm_chunk_step(carry, xs):
+        C, nv = carry
+        qc, kc, vc, li, lf = xs  # (B,L,H,*)
+        cum = jnp.cumsum(lf, axis=1)  # (B,L,H)
+        dec = jnp.exp(cum)[..., None]  # (B,L,H,1)
+        qdec = qc * dec
+        h_inter = jnp.einsum("blhd,bhdv->blhv", qdec, C)
+        qn_inter = jnp.einsum("blhd,bhd->blh", qdec, nv)
+        # intra-chunk decay-weighted scores
+        diff = cum[:, :, None, :] - cum[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * w
+        h_intra = jnp.einsum("btsh,bshv->bthv", scores, vc)
+        qn = qn_inter + jnp.sum(scores, axis=2)
+        hc = (h_inter + h_intra) / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+        # carry update
+        dend = jnp.exp(cum[:, -1])  # (B,H)
+        wend = jnp.exp(cum[:, -1:, :] - cum + li)  # (B,L,H)
+        C = dend[..., None, None] * C + jnp.einsum("blhd,blhv,blh->bhdv", kc, vc, wend)
+        nv = dend[..., None] * nv + jnp.einsum("blhd,blh->bhd", kc, wend)
+        return (C, nv), hc
+
+    (cT, nT), hs = jax.lax.scan(step, (c0, n0), (qs, ks, vs, lis, lfs))
+    return hs.swapaxes(0, 1).reshape(b, s, h, hd), (cT, nT)
+
+
+def mlstm_seq(q, k, v, i_raw, f_raw, *, env: MeshEnv, chunk: int = 256):
+    """mLSTM over a (possibly seq-sharded) sequence.
+
+    q,k,v: (B,S,H,hd); i_raw,f_raw: (B,S,H).  B over dp, S over model.
+    """
+    tp, n = env.tp_axis, env.tp_size
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+
+    def local(q_l, k_l, v_l, ir, fr):
+        b, s, h, _ = q_l.shape
+        qf = q_l.astype(jnp.float32) * scale
+        kf = k_l.astype(jnp.float32) * (hd ** -0.5)
+        vf = v_l.astype(jnp.float32)
+        logi = _logsig(ir.astype(jnp.float32))
+        logf = _logsig(fr.astype(jnp.float32))
+        L = min(chunk, s)
+        while s % L:
+            L -= 1
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        if n > 1:
+            # segment summaries (no q needed)
+            cum = jnp.cumsum(logf, axis=1)
+            dtot = jnp.exp(cum[:, -1])  # (B,H)
+            wend = jnp.exp(cum[:, -1:, :] - cum + logi)
+            c_delta = jnp.einsum("bshd,bshv,bsh->bhdv", kf, vf, wend)
+            n_delta = jnp.einsum("bshd,bsh->bhd", kf, wend)
+
+            def comb(e, l):  # earlier, later
+                de, ce, ne = e
+                dl, cl, nl = l
+                return (de * dl,
+                        dl[..., None, None] * ce + cl,
+                        dl[..., None] * ne + nl)
+
+            ident = (jnp.ones_like(dtot), jnp.zeros_like(c_delta), jnp.zeros_like(n_delta))
+            _, c0, n0 = _exclusive_ring_prefix(
+                (dtot, c_delta, n_delta), comb, ident, tp, n)
+        hs, _ = _mlstm_chunk_scan(qf, kf, vf, logi, logf, c0, n0, L)
+        return hs.astype(q_l.dtype)
+
+    if tp is None or n == 1:
+        return local(q, k, v, i_raw, f_raw)
+    s4 = P(env.dp_axes, tp, None, None)
+    s3 = P(env.dp_axes, tp, None)
+    return jax.shard_map(
+        local, mesh=env.mesh,
+        in_specs=(s4, s4, s4, s3, s3), out_specs=s4, check_vma=False,
+    )(q, k, v, i_raw, f_raw)
+
+
+def mlstm_decode_step(state, q, k, v, i_raw, f_raw):
+    """One decode step.  state = (C (B,H,hd,hd), n (B,H,hd)); q,k,v (B,H,hd)."""
+    C, nv = state
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    kf = k.astype(jnp.float32) * (hd ** -0.5)
+    vf = v.astype(jnp.float32)
+    i_g = jnp.exp(_logsig(i_raw.astype(jnp.float32)))[..., None]
+    f_g = jnp.exp(_logsig(f_raw.astype(jnp.float32)))[..., None]
+    C = f_g[..., None] * C + i_g[..., None] * (kf[..., :, None] * vf[..., None, :])
+    nv = f_g * nv + i_g * kf
+    qn = jnp.einsum("bhd,bhd->bh", qf, nv)
+    h = jnp.einsum("bhd,bhdv->bhv", qf, C) / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    return (C, nv), h.astype(q.dtype)
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def _slstm_local_scan(xpre, r_mat, state):
+    """xpre: (B,S,4,H,hd) f32; r_mat: (H,hd,4*hd); state=(c,n,h,m) (B,H,hd)."""
+    b, s, _, h, hd = xpre.shape
+
+    def step(carry, x_t):
+        # kernels/slstm_scan keeps R + state VMEM-resident on TPU; the
+        # scope tag lets the roofline report the kernelized memory term.
+        with jax.named_scope("kernel_interior"):
+            return _slstm_step(carry, x_t, r_mat, b, h, hd)
+
+    def _slstm_step(carry, x_t, r_mat, b, h, hd):
+        c, nrm, hprev, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", hprev, r_mat).reshape(b, h, 4, hd)
+        tot = x_t + rec.transpose(0, 2, 1, 3)  # (B,4,H,hd)
+        z = jnp.tanh(tot[:, 0])
+        logi = tot[:, 1]
+        logf = _logsig(tot[:, 2])
+        o = jax.nn.sigmoid(tot[:, 3])
+        m_new = jnp.maximum(logf + m, logi)
+        i_s = jnp.exp(logi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * z
+        nrm = f_s * nrm + i_s
+        hnew = o * c / jnp.maximum(nrm, 1e-6)
+        return (c, nrm, hnew, m_new), hnew
+
+    xs = xpre.transpose(1, 0, 2, 3, 4)  # (S,B,4,H,hd)
+    carry, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), carry  # (B,S,H,hd)
+
+
+def slstm_seq(xpre, r_mat, *, env: MeshEnv):
+    """sLSTM over a (possibly seq-sharded) sequence.
+
+    xpre: (B,S,4,H,hd) pre-activations (x @ W + b); r_mat (H,hd,4*hd).
+    Cross-rank: sequential carry chain (the recurrence is h-dependent).
+    """
+    tp, n = env.tp_axis, env.tp_size
+
+    def zeros_state(b, h, hd):
+        z = jnp.zeros((b, h, hd), jnp.float32)
+        return (z, z, z, jnp.full((b, h, hd), -1e30, jnp.float32))
+
+    def local(xp, rm):
+        b, s, _, h, hd = xp.shape
+        xp = xp.astype(jnp.float32)
+        st = zeros_state(b, h, hd)
+        if n == 1:
+            hs, _ = _slstm_local_scan(xp, rm, st)
+            return hs.astype(xpre.dtype)
+        r = jax.lax.axis_index(tp)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        h_out = jnp.zeros((b, s, h, hd), jnp.float32)
+        carry = st
+
+        def outer(loop_carry, step_idx):
+            carry, h_out = loop_carry
+            hs, cand = _slstm_local_scan(xp, rm, carry)
+            keep = r == step_idx
+            h_out = jnp.where(keep, hs, h_out)
+            carry_new = jax.tree.map(
+                lambda x: jax.lax.ppermute(x, tp, perm), cand)
+            carry = _tree_where(r == step_idx + 1, carry_new, carry)
+            return (carry, h_out), None
+
+        (carry, h_out), _ = jax.lax.scan(
+            outer, (carry, h_out), jnp.arange(n))
+        return h_out.astype(xpre.dtype)
+
+    if tp is None or n == 1:
+        return local(xpre, r_mat)
+    return jax.shard_map(
+        local, mesh=env.mesh,
+        in_specs=(P(env.dp_axes, tp, None, None, None), P(None, None, None)),
+        out_specs=P(env.dp_axes, tp, None, None), check_vma=False,
+    )(xpre, r_mat)
+
+
+def slstm_decode_step(state, xpre_t, r_mat):
+    """xpre_t: (B,4,H,hd); state (c,n,h,m) each (B,H,hd)."""
+    xp = xpre_t.astype(jnp.float32)[:, None]  # (B,1,4,H,hd)
+    hs, carry = _slstm_local_scan(xp, r_mat, state)
+    return carry, hs[:, 0].astype(xpre_t.dtype)
+
+
+# ===========================================================================
+# RG-LRU (Griffin recurrent block core)
+# ===========================================================================
+
+RGLRU_C = 8.0
+
+
+def _causal_conv4(x, w, b, tail):
+    """Depthwise causal conv, width 4.  x: (B,S,dr); w: (4,dr); tail (B,3,dr)."""
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = b
+    for j in range(4):
+        out = out + xp[:, 3 - j : xp.shape[1] - j] * w[j]
+    return out
+
+
+def rglru_seq(x_br, w_rg, b_rg, w_ig, b_ig, conv_w, conv_b, lam, *, env: MeshEnv):
+    """Conv4 + RG-LRU over a (possibly seq-sharded) sequence.
+
+    x_br: (B,S,dr) recurrent-branch input.  Returns h (B,S,dr).
+    """
+    tp, n = env.tp_axis, env.tp_size
+
+    def local(xb, wrg, brg, wig, big, cw, cb, lm):
+        b, s, dr = xb.shape
+        xf = xb.astype(jnp.float32)
+        if n > 1:
+            perm = [(i, (i + 1) % n) for i in range(n - 1)]  # rank0 gets zeros
+            tail = jax.lax.ppermute(xf[:, -3:], tp, perm)
+        else:
+            tail = jnp.zeros((b, 3, dr), jnp.float32)
+        y = _causal_conv4(xf, cw.astype(jnp.float32), cb.astype(jnp.float32), tail)
+        r_g = jax.nn.sigmoid(y @ wrg.astype(jnp.float32) + brg)
+        i_g = jax.nn.sigmoid(y @ wig.astype(jnp.float32) + big)
+        log_a = -RGLRU_C * jax.nn.softplus(lm.astype(jnp.float32)) * r_g
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_g * y)
+
+        def comb(e, l):
+            return (e[0] * l[0], l[0] * e[1] + l[1])
+
+        a_cum, h = jax.lax.associative_scan(comb, (a, gated), axis=1)
+        if n > 1:
+            summ = (a_cum[:, -1], h[:, -1])
+            ident = (jnp.ones_like(summ[0]), jnp.zeros_like(summ[1]))
+            _, h_in = _exclusive_ring_prefix(summ, comb, ident, tp, n)
+            h = h + a_cum * h_in[:, None]
+        return h.astype(xb.dtype)
+
+    if tp is None or n == 1:
+        return local(x_br, w_rg, b_rg, w_ig, b_ig, conv_w, conv_b, lam)
+    rep2 = P(None, None)
+    rep1 = P(None)
+    return jax.shard_map(
+        local, mesh=env.mesh,
+        in_specs=(P(env.dp_axes, tp, None), rep2, rep1, rep2, rep1, rep2, rep1, rep1),
+        out_specs=P(env.dp_axes, tp, None), check_vma=False,
+    )(x_br, w_rg, b_rg, w_ig, b_ig, conv_w, conv_b, lam)
+
+
+def rglru_decode_step(state, x_t, w_rg, b_rg, w_ig, b_ig, conv_w, conv_b, lam):
+    """state = (h (B,dr), conv_tail (B,3,dr)); x_t: (B,dr)."""
+    h_prev, tail = state
+    xf = x_t.astype(jnp.float32)
+    xp = jnp.concatenate([tail, xf[:, None]], axis=1)  # (B,4,dr)
+    y = conv_b.astype(jnp.float32)
+    for j in range(4):
+        y = y + xp[:, 3 - j] * conv_w[j].astype(jnp.float32)
+    r_g = jax.nn.sigmoid(y @ w_rg.astype(jnp.float32) + b_rg)
+    i_g = jax.nn.sigmoid(y @ w_ig.astype(jnp.float32) + b_ig)
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r_g)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_g * y)
+    new_tail = jnp.concatenate([tail[:, 1:], xf[:, None]], axis=1)
+    return (h, new_tail), h.astype(x_t.dtype)

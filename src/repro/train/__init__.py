@@ -1,0 +1,5 @@
+from repro.train.optim import OptimizerConfig, build_optimizer
+from repro.train.trainer import Trainer, TrainState, make_train_step
+
+__all__ = ["OptimizerConfig", "build_optimizer", "Trainer", "TrainState",
+           "make_train_step"]

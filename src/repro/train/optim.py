@@ -1,0 +1,160 @@
+"""Optimizers — AdamW and Adafactor, pure-pytree JAX implementations.
+
+AdamW keeps f32 (m, v) per parameter (2x param memory, FSDP-sharded by
+the same rules as the parameters).  Adafactor factors the second moment
+of matrices into row/col statistics (O(n+m) instead of O(nm)) — the
+memory-saving choice for the large dry-run cells.
+
+Both expose the same (init, update) pair:
+
+    state = init(params)
+    new_params, new_state, gnorm = update(grads, state, params, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # adafactor
+    decay_offset: float = 0.8    # beta2_t = 1 - step^-decay_offset
+    factored_min_dim: int = 128
+
+
+def schedule(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    """Linear warmup -> constant (the dry-run cells run a few hundred
+    steps; decay schedules are a config knob, not a structural need)."""
+    warm = jnp.minimum((step.astype(jnp.float32) + 1.0)
+                       / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def _map3(fn, params, grads, *states):
+    """tree-map ``fn(p, g, *s) -> (new_p, *new_s)`` over flattened leaves."""
+    p_flat, treedef = jax.tree_util.tree_flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    s_flats = [treedef.flatten_up_to(s) for s in states]
+    outs = [fn(p, g, *ss) for p, g, *ss in zip(p_flat, g_flat, *s_flats)]
+    n_out = len(outs[0])
+    return tuple(jax.tree_util.tree_unflatten(treedef, [o[i] for o in outs])
+                 for i in range(n_out))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(cfg: OptimizerConfig):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            step_ = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            if p.ndim >= 2:   # no decay on norms/biases
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        new_params, new_m, new_v = _map3(upd, params, grads,
+                                         state["m"], state["v"])
+        return new_params, {"m": new_m, "v": new_v}, gnorm
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# ---------------------------------------------------------------------------
+
+def _is_factored(p, min_dim: int) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def adafactor(cfg: OptimizerConfig):
+    def init(params):
+        def st(p):
+            if _is_factored(p, cfg.factored_min_dim):
+                return (jnp.zeros(p.shape[:-1], jnp.float32),        # vr
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                  jnp.float32))                      # vc
+            return (jnp.zeros(p.shape, jnp.float32),)                # v
+        return {"s": jax.tree.map(st, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-cfg.decay_offset)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if len(s) == 2:
+                vr = beta2 * s[0] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * s[1] + (1 - beta2) * g2.mean(-2)
+                denom = jnp.sqrt(
+                    vr[..., :, None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+                ns = (vr, vc)
+            else:
+                v = beta2 * s[0] + (1 - beta2) * g2
+                denom = jnp.sqrt(v)
+                ns = (v,)
+            step_ = g / jnp.maximum(denom, 1e-30)
+            # adafactor update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step_)) + 1e-30)
+            step_ = step_ / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), ns
+
+        p_flat, treedef = jax.tree_util.tree_flatten(params)
+        g_flat = treedef.flatten_up_to(grads)
+        s_flat = treedef.flatten_up_to(state["s"])
+        outs = [upd(p, g, s) for p, g, s in zip(p_flat, g_flat, s_flat)]
+        new_params = jax.tree_util.tree_unflatten(treedef,
+                                                  [o[0] for o in outs])
+        new_s = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return new_params, {"s": new_s}, gnorm
+
+    return init, update
+
+
+def build_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw(cfg)
+    if cfg.name == "adafactor":
+        return adafactor(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

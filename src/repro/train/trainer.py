@@ -1,0 +1,152 @@
+"""Training loop: train_step factory + fault-tolerant Trainer.
+
+``make_train_step`` composes model.loss + grad + optimizer update into
+one jit-able function — the exact function the multi-pod dry-run lowers
+with in/out shardings.  ``Trainer`` wraps it with the checkpoint
+manager (atomic save/restore of params, optimizer state, PRNG key and
+the data cursor) so a killed-and-restarted run continues bit-identically
+— the restart test in tests/test_checkpoint.py asserts this.
+
+Straggler/fault policy: training is synchronous SPMD inside a pod; the
+LDA side (the paper's workload) tolerates stragglers through the DSGS
+decay merge (distributed/merge_collective.py) and recovers failed
+partitions by retraining only the lost range (core/query.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.sharding import MeshEnv, infer_param_specs, set_env
+from repro.models.model import Model, build_model
+from repro.train.optim import OptimizerConfig, build_optimizer
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray            # () int32
+    rng: jnp.ndarray             # PRNGKey
+    data_cursor: int = 0         # host-side; checkpointed
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig, env: MeshEnv,
+                    *, remat: bool = True):
+    """(params, opt_state, step, batch) -> (params', opt_state', metrics)."""
+    _, opt_update = build_optimizer(opt_cfg)
+
+    from repro.models.model import _dtype, cast_params
+
+    def train_step(params, opt_state, step, batch):
+        with set_env(env):
+            # Differentiate wrt the COMPUTE-dtype copies: the per-layer
+            # gradient sync inside the backward scan then moves bf16
+            # instead of f32 (halves the dominant collective on the
+            # dense train cells).  Masters stay f32 for the update.
+            dt = _dtype(model.cfg)
+            p_compute = cast_params(params, dt)
+
+            def loss_fn(p):
+                loss, metrics = model.loss(p, batch, env, remat=remat)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p_compute)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            if env.mesh.size > 1:
+                # ZeRO gradient layout: pin grads to the master sharding
+                # (reduce-scatter where the partitioner honors it; the
+                # in-loop dW sync is carried full by GSPMD until the
+                # Shardy migration — documented in EXPERIMENTS.md §Perf).
+                from repro.distributed.sharding import param_shardings
+                grads = jax.tree.map(
+                    jax.lax.with_sharding_constraint, grads,
+                    param_shardings(grads, env))
+            new_params, new_opt, gnorm = opt_update(grads, opt_state,
+                                                    params, step)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return new_params, new_opt, step + 1, out_metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: OptimizerConfig, env: MeshEnv,
+                 *, ckpt_dir: Optional[str] = None, keep: int = 3,
+                 save_every: int = 50, remat: bool = True, seed: int = 0):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.env = env
+        self.save_every = save_every
+        self.ckpt = (CheckpointManager(ckpt_dir, keep=keep)
+                     if ckpt_dir else None)
+        opt_init, _ = build_optimizer(opt_cfg)
+        self._opt_init = opt_init
+        self._step_fn = jax.jit(make_train_step(model, opt_cfg, env,
+                                                remat=remat))
+        self._seed = seed
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> TrainState:
+        rng = jax.random.PRNGKey(self._seed)
+        params = self.model.init(rng)
+        return TrainState(params=params,
+                          opt_state=self._opt_init(params),
+                          step=jnp.zeros((), jnp.int32),
+                          rng=rng, data_cursor=0)
+
+    def restore_or_init(self) -> TrainState:
+        if self.ckpt is not None:
+            loaded = self.ckpt.restore_latest()
+            if loaded is not None:
+                tree, meta = loaded
+                return TrainState(params=tree["params"],
+                                  opt_state=tree["opt_state"],
+                                  step=jnp.asarray(meta["step"], jnp.int32),
+                                  rng=jnp.asarray(tree["rng"]),
+                                  data_cursor=int(meta["data_cursor"]))
+        return self.init_state()
+
+    def save(self, state: TrainState) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(
+            {"params": state.params, "opt_state": state.opt_state,
+             "rng": state.rng},
+            meta={"step": int(state.step),
+                  "data_cursor": int(state.data_cursor)},
+            step=int(state.step))
+
+    # ------------------------------------------------------------------
+    def fit(self, state: TrainState, batches: Iterator[Dict[str, Any]],
+            n_steps: int, log_every: int = 10,
+            log_fn: Callable[[str], None] = print) -> TrainState:
+        t0 = time.perf_counter()
+        for i in range(n_steps):
+            batch = next(batches)
+            params, opt_state, step, metrics = self._step_fn(
+                state.params, state.opt_state, state.step, batch)
+            state = TrainState(params=params, opt_state=opt_state,
+                               step=step, rng=state.rng,
+                               data_cursor=state.data_cursor + 1)
+            if log_every and (i + 1) % log_every == 0:
+                dt = time.perf_counter() - t0
+                log_fn(f"step {int(state.step):5d} "
+                       f"loss {float(metrics['loss']):.4f} "
+                       f"gnorm {float(metrics['grad_norm']):.3f} "
+                       f"({dt / (i + 1):.3f}s/step)")
+            if self.ckpt is not None and int(state.step) % self.save_every == 0:
+                self.save(state)
+        if self.ckpt is not None:
+            self.save(state)
+        return state

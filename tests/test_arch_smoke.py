@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a
+REDUCED same-family config, runs one train step and one prefill+decode
+step on CPU, asserting shapes + finiteness.  Also checks the
+prefill->decode handoff agrees with the full forward pass (exact for
+every layer kind, including the recurrent state re-derivations)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ALL_SHAPES
+from repro.data.lm import make_batch
+from repro.distributed.sharding import single_device_env, set_env
+from repro.models.model import build_model
+from repro.train.optim import OptimizerConfig
+from repro.train.trainer import make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def env():
+    return single_device_env()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch, env):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.train.optim import build_optimizer
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=2)
+    opt_state = build_optimizer(opt_cfg)[0](params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, env, remat=False))
+    batch = make_batch(cfg, 2, 32, seed=0, cursor=0)
+    p2, o2, step, metrics = step_fn(params, opt_state,
+                                    jnp.zeros((), jnp.int32), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(step) == 1
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+    # loss decreases over a few steps on a FIXED batch (memorization)
+    p, o, s = p2, o2, step
+    first = float(metrics["loss"])
+    for _ in range(3):
+        p, o, s, metrics = step_fn(p, o, s, batch)
+    assert float(metrics["loss"]) < first
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_consistency(arch, env):
+    """decode_step(prefill(t[:S])) logits == prefill(t[:S+1]) logits."""
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 24
+    full = make_batch(cfg, B, S + 1, seed=1, cursor=0)
+    full.pop("labels")
+    prompt = dict(full)
+    prompt["tokens"] = full["tokens"][:, :S]
+    if "patch_embeds" in prompt:
+        p = prompt["patch_embeds"].shape[1]
+        assert p <= S
+    with set_env(env):
+        lg_dec_src, caches = model.prefill(params, prompt, env,
+                                           cache_len=S + 4)
+        lg_dec, _ = model.decode_step(params, caches,
+                                      full["tokens"][:, S:S + 1],
+                                      jnp.asarray(S, jnp.int32), env)
+        lg_full, _ = model.prefill(params, full, env)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0]),
+                               np.asarray(lg_full[:, 0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_loop_finite(arch, env):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    B, S = 2, 8
+    batch = make_batch(cfg, B, S, seed=2, cursor=0)
+    batch.pop("labels")
+    with set_env(env):
+        lg, caches = model.prefill(params, batch, env, cache_len=S + 8)
+        tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+        for i in range(4):
+            lg, caches = model.decode_step(params, caches, tok,
+                                           jnp.asarray(S + i, jnp.int32),
+                                           env)
+            assert bool(jnp.isfinite(lg).all()), (arch, i)
+            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+def test_cell_matrix_accounting():
+    """40 assigned cells; long_500k runs only for sub-quadratic archs;
+    the runnable count matches DESIGN.md §Arch-applicability."""
+    from repro.configs import all_cells
+    cells = list(all_cells())
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    skipped = [c for c in cells if not c[2]]
+    assert len(skipped) == 8          # 8 full-attention archs skip long_500k
+    for arch, shape, _ in skipped:
+        assert shape.name == "long_500k"
+        assert not arch.sub_quadratic
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_formula_sane(arch):
+    """configs/base param accounting within 25% of the real tree."""
+    cfg = ARCHS[arch]
+    model = build_model(cfg)
+    actual = model.param_count()
+    formula = cfg.param_count()
+    assert 0.6 < formula / actual < 1.67, (arch, formula, actual)

@@ -1,0 +1,61 @@
+"""Batch query optimization (Alg. 4, Thm. 5/6 problem)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batch_opt import (
+    batch_optimize,
+    batch_oracle,
+    shared_time_and_benefit,
+)
+from repro.core.cost import CostModel
+from repro.core.plans import Interval
+from repro.core.search import psoa_search
+from tests.conftest import build_store
+
+
+def _setup(seed, n_models=6):
+    from repro.data.corpus import DataIndex, make_corpus
+    corpus, _ = make_corpus(250, 64, 4, mean_doc_len=10, seed=13)
+    index = DataIndex(corpus)
+    store = build_store(index, n_models=n_models, seed=seed,
+                        span=(0.0, 250.0), k=4, v=64)
+    cost = CostModel(max_iters=8, n_topics=4)
+    return index, store, cost
+
+
+QUERIES = [Interval(5.0, 120.0), Interval(60.0, 200.0), Interval(0.0, 90.0)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_heuristic_no_worse_than_default(seed):
+    index, store, cost = _setup(seed)
+    h = batch_optimize(store.models(), QUERIES, index, cost)
+    default = [psoa_search(store.models(), q, index, cost, 0.0).plan
+               for q in QUERIES]
+    t_def, _, _ = shared_time_and_benefit(default, QUERIES, index, cost)
+    assert h.total_time <= t_def + 1e-12
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 1000))
+def test_oracle_no_worse_than_heuristic(seed):
+    index, store, cost = _setup(seed, n_models=5)
+    h = batch_optimize(store.models(), QUERIES, index, cost)
+    o = batch_oracle(store.models(), QUERIES, index, cost)
+    assert o.total_time <= h.total_time + 1e-12
+
+
+def test_benefit_is_naive_minus_shared():
+    index, store, cost = _setup(1)
+    h = batch_optimize(store.models(), QUERIES, index, cost)
+    t, naive, b = shared_time_and_benefit(h.plans, QUERIES, index, cost)
+    assert b == pytest.approx(naive - t, rel=1e-9)
+    assert b >= 0.0
+
+
+def test_single_query_batch_degenerates():
+    index, store, cost = _setup(2)
+    h = batch_optimize(store.models(), [QUERIES[0]], index, cost)
+    assert h.benefit == pytest.approx(0.0, abs=1e-12)

@@ -1,0 +1,80 @@
+"""Elastic repartition + failure recovery over the model store."""
+import numpy as np
+import pytest
+
+from repro.configs.lda_default import LDAConfig
+from repro.core.lda import MaterializedModel
+from repro.core.merge import merge_vb
+from repro.core.plans import Interval
+from repro.core.store import ModelStore
+from repro.distributed.elastic import (
+    partition_ranges,
+    plan_repartition,
+    apply_repartition,
+    recover_failed,
+)
+
+CFG = LDAConfig(n_topics=4, vocab_size=32, eta=0.05)
+
+
+def _store(rng, ranges):
+    store = ModelStore()
+    for lo, hi in ranges:
+        store.add(Interval(lo, hi), 10, 100, "vb",
+                  {"lam": rng.gamma(1.0, 1.0, (4, 32)).astype(np.float32)})
+    return store
+
+
+def test_partition_ranges_tile_universe():
+    spans = partition_ranges(Interval(0.0, 100.0), 4)
+    assert len(spans) == 4
+    assert spans[0].lo == 0.0 and spans[-1].hi == 100.0
+    for a, b in zip(spans, spans[1:]):
+        assert a.hi == b.lo
+
+
+def test_repartition_covers_everything():
+    rng = np.random.default_rng(0)
+    store = _store(rng, [(0, 20), (20, 45), (50, 75), (80, 100)])
+    parts = plan_repartition(store, Interval(0.0, 100.0), 2)
+    for part in parts:
+        covered = [store.get(m).o for m in part.model_ids]
+        total = sum(iv.length for iv in covered) + \
+            sum(g.length for g in part.missing)
+        assert total == pytest.approx(part.span.length)
+
+
+def test_apply_repartition_merges_exactly():
+    rng = np.random.default_rng(1)
+    store = _store(rng, [(0, 25), (25, 50), (50, 75), (75, 100)])
+    parts = plan_repartition(store, Interval(0.0, 100.0), 2)
+    trained = []
+
+    def train_fn(lo, hi):
+        trained.append((lo, hi))
+        m = MaterializedModel(1000 + len(trained), Interval(lo, hi), 5, 50,
+                              "vb", {"lam": np.ones((4, 32), np.float32)})
+        return m
+
+    out = apply_repartition(parts, store, CFG, train_fn)
+    assert not trained, "fully covered universe must not retrain"
+    assert set(out) == {0, 1}
+    # worker 0 model == direct merge of its two range models
+    w0_models = [store.get(mid) for mid in parts[0].model_ids]
+    np.testing.assert_allclose(out[0].theta["lam"],
+                               merge_vb(w0_models, CFG), rtol=1e-6)
+
+
+def test_recover_failed_trains_only_lost():
+    rng = np.random.default_rng(2)
+    store = _store(rng, [(0, 30), (60, 100)])
+    trained = []
+
+    def train_fn(lo, hi):
+        trained.append((lo, hi))
+        return MaterializedModel(-1, Interval(lo, hi), 1, 10, "vb",
+                                 {"lam": np.ones((4, 32), np.float32)})
+
+    fresh = recover_failed(store, [Interval(0.0, 100.0)], train_fn)
+    assert trained == [(30.0, 60.0)]
+    assert len(fresh) == 1

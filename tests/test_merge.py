@@ -1,0 +1,116 @@
+"""Model-merging properties (paper Alg. 1/2): order independence,
+associativity, and equivalence of the host / kernel / collective forms."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.lda_default import LDAConfig
+from repro.core.lda import MaterializedModel
+from repro.core.merge import merge_gs, merge_models, merge_vb, merged_theta
+from repro.core.plans import Interval
+
+CFG = LDAConfig(n_topics=4, vocab_size=32, eta=0.05)
+
+
+def _models(arrays, kind):
+    out = []
+    for i, a in enumerate(arrays):
+        theta = {"lam": a} if kind == "vb" else {"delta_nkv": a}
+        out.append(MaterializedModel(i, Interval(float(i), float(i) + 1.0),
+                                     10, 100, kind, theta))
+    return out
+
+
+ARRS = st.lists(
+    st.integers(0, 2 ** 31 - 1).map(
+        lambda s: np.random.default_rng(s).gamma(
+            1.0, 1.0, (CFG.n_topics, CFG.vocab_size)).astype(np.float32)),
+    min_size=1, max_size=5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ARRS, st.randoms(use_true_random=False))
+def test_merge_vb_order_independent(arrays, rnd):
+    ms = _models(arrays, "vb")
+    a = merge_vb(ms, CFG)
+    shuffled = list(ms)
+    rnd.shuffle(shuffled)
+    b = merge_vb(shuffled, CFG)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ARRS, st.randoms(use_true_random=False))
+def test_merge_gs_order_independent(arrays, rnd):
+    ms = _models(arrays, "gs")
+    a = merge_gs(ms, CFG)
+    shuffled = list(ms)
+    rnd.shuffle(shuffled)
+    b = merge_gs(shuffled, CFG)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ARRS)
+def test_merge_vb_associative(arrays):
+    """merge(A ∪ B) == merge(merge(A) ∪ B) in Θ-space (Eq. 6)."""
+    ms = _models(arrays, "vb")
+    if len(ms) < 2:
+        return
+    direct = merge_vb(ms, CFG)
+    left_theta, kind = merged_theta(ms[:2], CFG)
+    left = MaterializedModel(99, Interval(0, 2), 20, 200, kind, left_theta)
+    nested = merge_vb([left] + ms[2:], CFG)
+    np.testing.assert_allclose(direct, nested, rtol=1e-5)
+
+
+def test_merge_gs_decay_staleness():
+    a = np.ones((4, 32), np.float32)
+    ms = _models([a, a], "gs")
+    out = merge_gs(ms, CFG, staleness=[0, 2], decay=0.5)
+    np.testing.assert_allclose(out, a * (1.0 + 0.25), rtol=1e-6)
+
+
+def test_merge_rejects_mixed_kinds():
+    a = np.ones((4, 32), np.float32)
+    mixed = _models([a], "vb") + _models([a], "gs")
+    with pytest.raises(ValueError):
+        merge_models(mixed, CFG)
+
+
+def test_kernel_matches_host_merge():
+    """kernels/merge_topics == core/merge on the same inputs."""
+    import jax.numpy as jnp
+    from repro.kernels.merge_topics.ops import merge_vb_stats
+
+    rng = np.random.default_rng(3)
+    lams = rng.gamma(1.0, 1.0, (4, CFG.n_topics, CFG.vocab_size)).astype(
+        np.float32)
+    ms = _models(list(lams), "vb")
+    host = merge_vb(ms, CFG)
+    kern = np.asarray(merge_vb_stats(jnp.asarray(lams),
+                                     jnp.ones((4,), jnp.float32),
+                                     CFG.eta, interpret=True))
+    np.testing.assert_allclose(host, kern, rtol=1e-5, atol=1e-5)
+
+
+def test_delta_merge_lm_params():
+    """Eq. 6 analogue for LM trees: order-independent, exact for one
+    model, and equal to the weighted average of deltas."""
+    import jax
+    from repro.core.delta_merge import merge_param_deltas
+
+    rng = np.random.default_rng(0)
+    base = {"w": rng.normal(size=(4, 4)).astype(np.float32),
+            "b": rng.normal(size=(4,)).astype(np.float32)}
+    t1 = jax.tree.map(lambda x: x + 1.0, base)
+    t2 = jax.tree.map(lambda x: x - 3.0, base)
+    # single model, weight 1 -> exact recovery
+    out1 = merge_param_deltas(base, [t1], [1.0])
+    np.testing.assert_allclose(out1["w"], t1["w"], rtol=1e-6)
+    # order independence
+    a = merge_param_deltas(base, [t1, t2], [0.25, 0.75])
+    b = merge_param_deltas(base, [t2, t1], [0.75, 0.25])
+    np.testing.assert_allclose(a["w"], b["w"], rtol=1e-6)
+    # weighted delta arithmetic: base + 0.25*1 + 0.75*(-3)
+    np.testing.assert_allclose(a["b"], base["b"] + 0.25 - 2.25, rtol=1e-5)

@@ -1,0 +1,99 @@
+"""Interval algebra + plan generation properties (paper §V.B.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plans import (
+    Interval,
+    all_plans,
+    children,
+    plan_key,
+    rl_plans,
+    subtract,
+    union_length,
+    usable,
+)
+
+
+def ivs(draw_lo, draw_len):
+    return st.builds(lambda lo, ln: Interval(lo, lo + ln), draw_lo, draw_len)
+
+
+INTERVALS = ivs(st.floats(0, 90), st.floats(0.5, 30))
+
+
+class FakeModel:
+    _next = [0]
+
+    def __init__(self, o):
+        self.o = o
+        self.model_id = FakeModel._next[0]
+        FakeModel._next[0] += 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(INTERVALS, min_size=0, max_size=6), INTERVALS)
+def test_subtract_partitions_universe(pieces, universe):
+    """uncovered ∪ (pieces ∩ universe) tiles the universe exactly."""
+    gaps = subtract(universe, pieces)
+    covered = union_length(
+        [p.intersect(universe) for p in pieces
+         if p.intersect(universe) is not None])
+    gap_len = sum(g.length for g in gaps)
+    assert gap_len + covered == pytest.approx(universe.length, abs=1e-6)
+    for g in gaps:
+        assert universe.contains(g)
+        for p in pieces:
+            assert not g.overlaps(p)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(INTERVALS, min_size=1, max_size=7))
+def test_rl_plans_are_maximal_antichains(ranges):
+    query = Interval(0.0, 200.0)
+    models = [FakeModel(o) for o in ranges]
+    roots = rl_plans(models, query)
+    cand = usable(models, query)
+    keys = set()
+    for p in roots:
+        k = plan_key(p)
+        assert k not in keys, "duplicate RL plan"
+        keys.add(k)
+        # pairwise disjoint
+        for i in range(len(p)):
+            for j in range(i + 1, len(p)):
+                assert not p[i].o.overlaps(p[j].o)
+        # maximal: no candidate extends it
+        for m in cand:
+            if m in p:
+                continue
+            assert any(m.o.overlaps(x.o) for x in p), (
+                "RL plan is extendable — not maximal")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(INTERVALS, min_size=1, max_size=6))
+def test_theorem1_every_plan_from_rl_plans(ranges):
+    """Thm. 1: every candidate plan is a subset of some RL plan."""
+    query = Interval(0.0, 200.0)
+    models = [FakeModel(o) for o in ranges]
+    roots = rl_plans(models, query)
+    root_sets = [set(plan_key(p)) for p in roots]
+    for p in all_plans(models, query):
+        k = set(plan_key(p))
+        assert any(k <= r for r in root_sets), (k, root_sets)
+
+
+def test_children_removes_exactly_one():
+    ms = [FakeModel(Interval(i * 10.0, i * 10.0 + 5)) for i in range(4)]
+    plan = tuple(ms)
+    kids = children(plan)
+    assert len(kids) == 4
+    for kid in kids:
+        assert len(kid) == 3
+        assert set(plan_key(kid)) < set(plan_key(plan))
+
+
+def test_interval_rejects_inverted():
+    with pytest.raises(ValueError):
+        Interval(5.0, 1.0)

@@ -1,0 +1,89 @@
+"""Plan-search correctness: PSOA finds the NAI optimum (Def. 2) with a
+fraction of the evaluations; PSOA++/GRA agree in the coverage regime."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, plan_stats
+from repro.core.plans import Interval
+from repro.core.search import gra_search, nai_search, psoa_search
+from tests.conftest import build_store
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.0, 0.2, 0.5, 0.8, 0.99]),
+       st.integers(4, 12))
+def test_psoa_matches_nai(small_index_seed, alpha, n_models):
+    # hypothesis can't take fixtures in @given; rebuild the index inline
+    from repro.configs.lda_default import LDAConfig
+    from repro.data.corpus import DataIndex, make_corpus
+    corpus, _ = make_corpus(300, 64, 4, mean_doc_len=12, seed=11)
+    index = DataIndex(corpus)
+    store = build_store(index, n_models=n_models, seed=small_index_seed,
+                        span=(0.0, 300.0), k=4, v=64)
+    cost = CostModel(max_iters=10, n_topics=4)
+    q = Interval(10.0, 280.0)
+    nai = nai_search(store.models(), q, index, cost, alpha)
+    psoa = psoa_search(store.models(), q, index, cost, alpha,
+                       use_plus=False)
+    assert psoa.score == pytest.approx(nai.score, rel=1e-9), (
+        alpha, psoa.model_ids, nai.model_ids)
+
+
+def test_psoa_scores_fewer_plans_than_nai(small_index):
+    store = build_store(small_index, n_models=14, seed=5)
+    cost = CostModel(max_iters=10, n_topics=8)
+    q = Interval(0.0, 390.0)
+    nai = nai_search(store.models(), q, small_index, cost, 0.3)
+    psoa = psoa_search(store.models(), q, small_index, cost, 0.3)
+    assert psoa.score == pytest.approx(nai.score, rel=1e-9)
+    assert psoa.n_scored < nai.n_scored
+
+
+def test_psoa_plus_plus_coverage_regime(small_index, cost_model):
+    """Below the Thm. 3/4 critical point, PSOA++ = max coverage = GRA."""
+    store = build_store(small_index, n_models=8, seed=2)
+    q = Interval(0.0, 390.0)
+    plus = psoa_search(store.models(), q, small_index, cost_model, 0.0,
+                       use_plus=True)
+    gra = gra_search(store.models(), q, small_index, cost_model)
+    # same uncovered data (the objective in this regime), tolerance = the
+    # merge-cost slack the theorems allow
+    _, unc_plus = plan_stats(plus.plan, q, small_index)
+    _, unc_gra = plan_stats(gra.plan, q, small_index)
+    assert unc_plus == unc_gra
+    if plus.method == "PSOA++":
+        slack = cost_model.t_merge * max(len(plus.plan), len(gra.plan), 1)
+        denom = max(cost_model.c_train(
+            small_index.tokens_in(q.lo, q.hi)), 1e-30)
+        assert abs(plus.score - gra.score) <= slack / denom + 1e-12
+
+
+def test_alpha_one_maximizes_reuse(small_index, cost_model):
+    store = build_store(small_index, n_models=10, seed=3)
+    q = Interval(0.0, 390.0)
+    r = psoa_search(store.models(), q, small_index, cost_model, 1.0)
+    # Alg. 3 line 5: the a=1 plan has the most models among RL plans
+    from repro.core.plans import rl_plans, usable
+    cand = [m for m in usable(store.models(), q)
+            if small_index.tokens_in(m.o.lo, m.o.hi) > 0]
+    width = max(len(p) for p in rl_plans(cand, q))
+    assert len(r.plan) == width
+
+
+def test_empty_store_trains_from_scratch(small_index, cost_model):
+    from repro.core.store import ModelStore
+    q = Interval(0.0, 100.0)
+    r = psoa_search(ModelStore().models(), q, small_index, cost_model, 0.5)
+    assert r.plan == ()
+    assert r.score > 0
+
+
+def test_score_constraint_positive(small_index, cost_model):
+    """Def. 2: sc(p) > 0 — a full-coverage single model scores 0 at
+    alpha=1 and must not be returned there."""
+    store = build_store(small_index, n_models=6, seed=4)
+    q = Interval(0.0, 390.0)
+    for alpha in (0.0, 0.5):
+        r = psoa_search(store.models(), q, small_index, cost_model, alpha)
+        assert r.score > 0
