@@ -8,9 +8,9 @@ from typing import Callable, List, Tuple
 import jax
 import numpy as np
 
+from repro.api import get_trainer, resolve_kind
 from repro.configs.lda_default import LDAConfig
 from repro.core.cost import CostModel
-from repro.core.gibbs import cgs_fit
 from repro.core.lda import log_predictive_probability, topics_from_vb
 from repro.core.plans import Interval
 from repro.core.store import ModelStore
@@ -52,17 +52,13 @@ def train_vb_range(corpus: Corpus, cfg: LDAConfig, lo, hi, seed=0):
 
 def materialize_partitions(corpus: Corpus, cfg: LDAConfig, store: ModelStore,
                            edges: List[float], kind: str = "vb") -> None:
+    kind = resolve_kind(kind)     # store tags must be canonical ("gibbs"->"gs")
+    trainer = get_trainer(kind)
     for lo, hi in zip(edges, edges[1:]):
         sub = corpus.subset(lo, hi)
         if sub.n_docs == 0:
             continue
-        if kind == "vb":
-            x = doc_term_matrix(sub)
-            lam = np.asarray(vb_fit(x, jax.random.PRNGKey(0), cfg))
-            theta = {"lam": lam}
-        else:
-            theta = {"delta_nkv": cgs_fit(sub.tokens, sub.doc_ids, cfg,
-                                          jax.random.PRNGKey(0))}
+        theta = trainer(sub, cfg, jax.random.PRNGKey(0))
         store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens, kind, theta)
 
 

@@ -11,8 +11,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import BENCH_CFG, bench_world, lpp_of, timed
-from repro.core.plans import Interval
-from repro.core.query import QueryEngine
+from repro.api import Interval, MLegoSession, QuerySpec
 from repro.core.store import ModelStore
 from repro.core.vb import vb_fit
 from repro.data.corpus import doc_term_matrix
@@ -33,14 +32,15 @@ def run(n_docs=1500, coverages=(0.0, 0.25, 0.5, 0.75, 1.0), seed=0):
         # cover [lo, lo + cov*(hi-lo)) with 4 materialized pieces
         edge = lo + cov * (hi - lo)
         if cov > 0:
-            engine0 = QueryEngine(train, store, cfg, kind="vb")
+            warm = MLegoSession(train, cfg, store=store, kind="vb")
             for a, b in zip(np.linspace(lo, edge, 5),
                             np.linspace(lo, edge, 5)[1:]):
-                engine0.train_range(float(a), float(b))
-        engine = QueryEngine(train, store, cfg, kind="vb")
-        t_mlego, res = timed(engine.execute, Interval(lo, hi), 0.0)
+                warm.train_range(float(a), float(b))
+        session = MLegoSession(train, cfg, store=store, kind="vb")
+        t_mlego, rep = timed(session.submit,
+                             QuerySpec(sigma=Interval(lo, hi), alpha=0.0))
         rows.append((cov, t_orig, t_mlego, t_orig / t_mlego,
-                     res.search_s, lpp_of(res.beta, test)))
+                     rep.search_s, lpp_of(rep.beta, test)))
     return rows
 
 

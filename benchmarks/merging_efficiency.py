@@ -27,11 +27,10 @@ from benchmarks.common import (
     materialize_partitions,
     timed,
 )
+from repro.api import Interval, MLegoSession, QuerySpec
 from repro.core.cost import CostModel
 from repro.core.lda import topics_from_vb
 from repro.core.merge import merge_vb
-from repro.core.plans import Interval
-from repro.core.query import QueryEngine
 from repro.core.store import ModelStore
 from repro.core.vb import vb_fit, vb_estep, _exp_dirichlet_expectation
 from repro.data.corpus import doc_term_matrix
@@ -87,9 +86,10 @@ def run(n_docs=1500, n_partitions=8, seed=0):
     lpp_ogs = lpp_of(topics_from_vb(lam_ogs), test)
 
     # MLego: full-coverage query -> plan search + merge only
-    engine = QueryEngine(train, store, cfg, kind="vb")
-    t_mlego, res = timed(engine.execute, Interval(lo, hi), 0.0)
-    lpp_mlego = lpp_of(res.beta, test)
+    session = MLegoSession(train, cfg, store=store, kind="vb")
+    t_mlego, rep = timed(session.submit,
+                         QuerySpec(sigma=Interval(lo, hi), alpha=0.0))
+    lpp_mlego = lpp_of(rep.beta, test)
 
     rows = [
         ("ORIG", t_orig, lpp_orig, t_orig / t_mlego),

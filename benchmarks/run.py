@@ -6,8 +6,13 @@
   coverage            Fig. 9     SR vs coverage ratio
   plan_search         Fig. 10-12 NAI/GRA/PSOA/PSOA++ times, alpha sweep
   batch_opt           Fig. 13/14 Alg. 4 cost & benefit
+  session             (ours)     unified submit/submit_many API latency
   kernels             (ours)     Pallas kernel parity timings
   roofline            (ours)     table from dry-run artifacts, if present
+
+All sections drive MLego through the ``repro.api`` session surface
+(QuerySpec -> MLegoSession.submit); none construct the deprecated
+``QueryEngine`` directly.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
 """
@@ -98,6 +103,19 @@ def main() -> None:
         for r in batch_opt_bench.run(batch_sizes=bs, models_per=mp):
             print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
                            for x in r))
+
+    if want("session"):
+        _section("session (unified API latency)")
+        from benchmarks import session_bench
+        rows, batch_row = session_bench.run(
+            n_docs=600 if args.quick else 1200)
+        print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens")
+        for label, s, t, m, nr, nt in rows:
+            print(f"{label},{s:.4f},{t:.4f},{m:.4f},{nr},{nt}")
+        print("# batch: shared_search_s,shared_train_s,merge_s,benefit,n")
+        print("batch," + ",".join(
+            f"{v:.4f}" if isinstance(v, float) else str(v)
+            for v in batch_row))
 
     if want("kernels"):
         _section("kernels (interpret-mode parity timings)")

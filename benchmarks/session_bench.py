@@ -1,0 +1,55 @@
+"""Session-API latency: the unified submit/submit_many path.
+
+Measures what an interactive client sees through ``repro.api``:
+per-query cost breakdown (search / train / merge) over a warming
+store, a union-of-intervals query, and a batch with Alg. 4 shared
+training — shared costs read from the ``BatchReport`` (batch-level),
+per-query latencies from the individual reports.
+"""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_CFG, bench_world
+from repro.api import Interval, MLegoSession, QuerySpec
+
+
+def run(n_docs=1200, seed=0):
+    cfg = BENCH_CFG
+    train, test, index, _ = bench_world(n_docs=n_docs, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    session = MLegoSession(train, cfg, kind="vb")
+
+    rows = []
+    sequence = [
+        ("cold_full", QuerySpec(sigma=Interval(0.0, hi), alpha=0.0)),
+        ("warm_full", QuerySpec(sigma=Interval(0.0, hi), alpha=0.0)),
+        ("warm_half", QuerySpec(sigma=Interval(0.0, hi / 2), alpha=0.5)),
+        ("union", QuerySpec(sigma=[Interval(0.0, hi / 4),
+                                   Interval(hi / 2, 0.75 * hi)], alpha=0.5)),
+    ]
+    for label, spec in sequence:
+        rep = session.submit(spec)
+        rows.append((label, rep.search_s, rep.train_s, rep.merge_s,
+                     rep.n_reused, rep.n_trained_tokens))
+
+    batch = session.submit_many([
+        QuerySpec(sigma=Interval(0.0, 0.6 * hi)),
+        QuerySpec(sigma=Interval(0.3 * hi, 0.9 * hi)),
+        QuerySpec(sigma=Interval(0.1 * hi, hi)),
+    ])
+    batch_row = (batch.shared_search_s, batch.shared_train_s,
+                 batch.merge_s, batch.benefit, len(batch))
+    return rows, batch_row
+
+
+def main():
+    rows, batch_row = run()
+    print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens")
+    for label, s, t, m, nr, nt in rows:
+        print(f"{label},{s:.4f},{t:.4f},{m:.4f},{nr},{nt}")
+    print("# batch: shared_search_s,shared_train_s,merge_s,benefit,n")
+    print("batch," + ",".join(f"{v:.4f}" if isinstance(v, float) else str(v)
+                              for v in batch_row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,14 @@
 """End-to-end interactive topic-exploration session (the paper's §VI.C
-usage scenario, driver form).
+usage scenario, driver form) — on the unified session API.
 
 Simulates an analyst (Oliver) exploring a geo-tagged review corpus:
 a sequence of ad-hoc range queries with different latency/accuracy
-preferences (alpha), a batch of queries optimized together (Alg. 4),
-a node failure recovered by local retraining, and an elastic
-repartition — all against one growing model store, with every query
-answered at interactive speed once coverage builds up.
+preferences (alpha), a union-of-intervals query over two disjoint
+districts, a batch of queries optimized together (Alg. 4, with
+shared costs reported at the batch level), a node failure recovered
+by local retraining, and an elastic repartition — all against one
+growing model store, with every query answered at interactive speed
+once coverage builds up.
 
     PYTHONPATH=src python examples/interactive_analysis.py
 """
@@ -14,11 +16,9 @@ import time
 
 import numpy as np
 
+from repro.api import Interval, MLegoSession, QuerySpec
 from repro.configs.lda_default import LDAConfig
 from repro.core.lda import log_predictive_probability
-from repro.core.plans import Interval
-from repro.core.query import QueryEngine
-from repro.core.store import ModelStore
 from repro.data.corpus import doc_term_matrix, make_corpus, train_test_split
 from repro.distributed.elastic import (
     apply_repartition,
@@ -34,51 +34,60 @@ def main():
                             mean_doc_len=40, seed=42)
     train, test = train_test_split(corpus, test_frac=0.1)
     x_test = doc_term_matrix(test)
-    engine = QueryEngine(train, ModelStore(), cfg, kind="vb")
+    session = MLegoSession(train, cfg, kind="vb")
     lpp = lambda beta: log_predictive_probability(beta, x_test)
 
     print("== session: exploratory range queries ==")
-    session = [
+    script = [
         (Interval(0.0, 400.0), 0.0, "first look at district A (speed)"),
         (Interval(300.0, 900.0), 0.0, "pan east"),
         (Interval(0.0, 900.0), 0.5, "zoom out, balanced"),
         (Interval(100.0, 800.0), 0.8, "re-check, accuracy-leaning"),
         (Interval(0.0, 2000.0), 0.0, "whole city, fast"),
     ]
-    for q, alpha, label in session:
+    for q, alpha, label in script:
         t0 = time.perf_counter()
-        res = engine.execute(q, alpha=alpha)
+        rep = session.submit(QuerySpec(sigma=q, alpha=alpha))
         dt = time.perf_counter() - t0
         print(f"  [{label:34s}] q={q.lo:6.0f}..{q.hi:6.0f} a={alpha}: "
-              f"{dt*1e3:7.1f}ms  plan={len(res.plan.plan)} models "
-              f"+{res.n_trained_tokens:6d} tok  lpp={lpp(res.beta):.3f}")
-    print(f"  store: {len(engine.store)} models")
+              f"{dt*1e3:7.1f}ms  plan={rep.n_reused} models "
+              f"+{rep.n_trained_tokens:6d} tok  lpp={lpp(rep.beta):.3f}")
+    print(f"  store: {len(session.store)} models")
+
+    print("\n== union predicate: districts A and C, one query ==")
+    rep = session.submit(QuerySpec(
+        sigma=[Interval(0.0, 400.0), Interval(1400.0, 1800.0)], alpha=0.5))
+    print(f"  components={len(rep.plans)} merged={rep.n_merged} parts "
+          f"+{rep.n_trained_tokens} tok  lpp={lpp(rep.beta):.3f}")
 
     print("\n== batch of three queries (Alg. 4 shared training) ==")
     batch = [Interval(900.0, 1500.0), Interval(1200.0, 1900.0),
              Interval(1000.0, 1700.0)]
     t0 = time.perf_counter()
-    results, opt = engine.execute_batch(batch)
+    br = session.submit_many([QuerySpec(sigma=q) for q in batch])
     dt = time.perf_counter() - t0
-    print(f"  {len(batch)} queries in {dt*1e3:.1f}ms; "
-          f"benefit={opt.benefit:.4f} (saved training), "
-          f"naive={opt.naive_time:.4f} shared={opt.total_time:.4f}")
+    print(f"  {len(br)} queries in {dt*1e3:.1f}ms; "
+          f"benefit={br.benefit:.4f} (saved training), "
+          f"naive={br.opt.naive_time:.4f} shared={br.opt.total_time:.4f}")
+    print(f"  batch costs: search {br.shared_search_s*1e3:.1f}ms + train "
+          f"{br.shared_train_s*1e3:.1f}ms shared; per-query merges "
+          + " ".join(f"{r.merge_s*1e3:.1f}ms" for r in br))
 
     print("\n== node failure: range [400, 800) models lost ==")
-    lost = [m for m in engine.store.models()
+    lost = [m for m in session.store.models()
             if Interval(400.0, 800.0).contains(m.o)]
     for m in lost:
-        engine.store.remove(m.model_id)
+        session.store.remove(m.model_id)
     t0 = time.perf_counter()
-    fresh = recover_failed(engine.store, [Interval(400.0, 800.0)],
-                           engine.train_range)
+    fresh = recover_failed(session.store, [Interval(400.0, 800.0)],
+                           session.train_range)
     print(f"  retrained {len(fresh)} gap models in "
           f"{time.perf_counter()-t0:.2f}s (only the lost ranges)")
 
     print("\n== elastic scale-out: repartition store to 4 workers ==")
-    parts = plan_repartition(engine.store, Interval(0.0, 2000.0), 4)
-    worker_models = apply_repartition(parts, engine.store, cfg,
-                                      engine.train_range)
+    parts = plan_repartition(session.store, Interval(0.0, 2000.0), 4)
+    worker_models = apply_repartition(parts, session.store, cfg,
+                                      session.train_range)
     for w, m in sorted(worker_models.items()):
         print(f"  worker {w}: span {m.o.lo:6.0f}..{m.o.hi:6.0f} "
               f"({m.n_docs} docs merged, lpp covered)")

@@ -1,0 +1,43 @@
+"""MLego public API — typed queries against a session (see README.md).
+
+    from repro.api import MLegoSession, QuerySpec, Interval
+
+    session = MLegoSession(corpus, cfg)
+    report  = session.submit(QuerySpec(sigma=Interval(0.0, 500.0),
+                                       alpha=0.5))
+
+Everything else in ``repro.core`` is machinery behind this surface;
+``repro.core.query.QueryEngine`` is a deprecated shim over it.
+"""
+from repro.api.reports import BatchReport, QueryReport
+from repro.api.session import MLegoSession
+from repro.api.spec import (
+    MATERIALIZE_POLICIES,
+    PERSIST,
+    VOLATILE,
+    QuerySpec,
+    normalize_sigma,
+)
+from repro.api.trainers import (
+    available_trainers,
+    get_trainer,
+    register_trainer,
+    resolve_kind,
+)
+from repro.core.plans import Interval
+
+__all__ = [
+    "BatchReport",
+    "Interval",
+    "MATERIALIZE_POLICIES",
+    "MLegoSession",
+    "PERSIST",
+    "QueryReport",
+    "QuerySpec",
+    "VOLATILE",
+    "available_trainers",
+    "get_trainer",
+    "normalize_sigma",
+    "register_trainer",
+    "resolve_kind",
+]

@@ -1,0 +1,57 @@
+"""Executor internals — the Fig. 2 "gap training" + "merge" stages.
+
+One trainer body for every model kind (via the trainer registry) and
+one materialization switch, replacing the seed repo's four copy-pasted
+``train_range`` / ``_train_volatile`` bodies.  ``persist=True`` adds
+the fresh model to the store (the reuse-capital flywheel);
+``persist=False`` returns an unregistered model (id −1) and leaves the
+store untouched.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.api.trainers import get_merge, get_trainer, resolve_kind
+from repro.configs.lda_default import LDAConfig
+from repro.core.lda import MaterializedModel
+from repro.core.plans import Interval
+from repro.core.store import ModelStore
+from repro.data.corpus import Corpus
+
+
+class Executor:
+    def __init__(self, corpus: Corpus, cfg: LDAConfig, store: ModelStore,
+                 next_key: Callable[[], object]):
+        self.corpus = corpus
+        self.cfg = cfg
+        self.store = store
+        self._next_key = next_key
+
+    def train_gap(self, lo: float, hi: float, kind: str,
+                  *, persist: bool = True) -> Optional[MaterializedModel]:
+        """Train one fresh model on [lo, hi); None if the range is empty."""
+        d0, d1 = self.corpus.doc_slice(lo, hi)
+        if d1 <= d0:
+            return None
+        kind = resolve_kind(kind)
+        sub = self.corpus.subset(lo, hi)
+        theta = get_trainer(kind)(sub, self.cfg, self._next_key())
+        if persist:
+            return self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
+                                  kind, theta)
+        return MaterializedModel(-1, Interval(lo, hi), sub.n_docs,
+                                 sub.n_tokens, kind, theta)
+
+    def merge(self, parts: Sequence[MaterializedModel]) -> np.ndarray:
+        """Merge a homogeneous part list -> β (K, V), dispatching to the
+        kind's registered merge family (Alg. 1 for vb, Alg. 2 for gs).
+        Kinds are compared after alias resolution, so legacy stores
+        tagged "gibbs" merge with fresh "gs" models."""
+        if not parts:
+            raise ValueError("nothing to merge")
+        kinds = {resolve_kind(m.kind) for m in parts}
+        if len(kinds) != 1:
+            raise ValueError(f"cannot merge mixed kinds {kinds}")
+        return get_merge(kinds.pop())(list(parts), self.cfg)

@@ -1,0 +1,41 @@
+"""Planner internals — the Fig. 2 "plan search" stage behind the session.
+
+Thin, stateful-only-in-inputs wrapper over the §V.B searchers and the
+§V.C Alg. 4 batch optimizer, so the session (and any future scheduler)
+talks to one object instead of reaching into ``repro.core.search`` /
+``repro.core.batch_opt`` directly.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.batch_opt import BatchResult, batch_optimize
+from repro.core.cost import CostModel
+from repro.core.plans import Interval, subtract
+from repro.core.search import SEARCHERS, SearchResult
+
+
+class Planner:
+    def __init__(self, index, cost: CostModel):
+        self.index = index
+        self.cost = cost
+
+    def plan(self, models: Sequence, sigma: Interval, alpha: float,
+             method: str = "psoa++") -> SearchResult:
+        """Best plan for one interval (Def. 2 score-based search)."""
+        try:
+            searcher = SEARCHERS[method]
+        except KeyError:
+            raise ValueError(f"unknown plan-search method {method!r}; "
+                             f"one of {sorted(SEARCHERS)}") from None
+        return searcher(models, sigma, self.index, self.cost, alpha)
+
+    def plan_batch(self, models: Sequence,
+                   sigmas: Sequence[Interval]) -> BatchResult:
+        """Alg. 4 joint plan combination for a batch of intervals."""
+        return batch_optimize(models, list(sigmas), self.index, self.cost)
+
+    @staticmethod
+    def gaps(sigma: Interval, plan: Sequence) -> List[Interval]:
+        """Uncovered ranges of ``sigma`` under ``plan`` (to be trained)."""
+        return subtract(sigma, [m.o for m in plan])

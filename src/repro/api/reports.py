@@ -1,0 +1,96 @@
+"""Query/batch result types returned by ``MLegoSession``.
+
+``QueryReport`` is the single-query answer (Fig. 2 output): the merged
+topic matrix plus the per-stage cost breakdown.  ``BatchReport`` is the
+§V.C batch answer and fixes the seed repo's cost-attribution bug: the
+shared plan-search and gap-training costs live **on the batch report**
+(``shared_search_s`` / ``shared_train_s``), not smeared onto the first
+query's result, so per-query latency stats stay meaningful.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+from repro.api.spec import QuerySpec
+from repro.core.batch_opt import BatchResult
+from repro.core.lda import MaterializedModel
+from repro.core.search import SearchResult
+
+
+@dataclass
+class QueryReport:
+    """Answer to one ``QuerySpec``.
+
+    ``plans`` holds one ``SearchResult`` per predicate component (a
+    single-interval σ has exactly one).  Inside a batch, ``train_s``
+    and ``search_s`` are 0.0 — those costs are shared and reported on
+    the ``BatchReport``.
+    """
+
+    beta: np.ndarray                 # merged topic-word matrix (K, V)
+    spec: QuerySpec
+    plans: Tuple[SearchResult, ...]
+    n_trained_tokens: int
+    n_merged: int
+    train_s: float
+    merge_s: float
+    search_s: float
+    materialized: List[MaterializedModel] = field(default_factory=list)
+
+    @property
+    def plan(self) -> SearchResult:
+        """The (first) component plan — the whole plan for interval σ."""
+        return self.plans[0]
+
+    @property
+    def model_ids(self) -> Tuple[int, ...]:
+        return tuple(sorted(m.model_id for p in self.plans for m in p.plan))
+
+    @property
+    def n_reused(self) -> int:
+        return sum(len(p.plan) for p in self.plans)
+
+    @property
+    def total_s(self) -> float:
+        return self.train_s + self.merge_s + self.search_s
+
+
+@dataclass
+class BatchReport:
+    """Answer to ``submit_many``: per-query reports + batch-level costs.
+
+    Invariant (regression-tested): ``total_s`` equals what the legacy
+    ``execute_batch`` path reported in aggregate —
+    ``shared_search_s + shared_train_s + Σ per-query merge_s`` — but
+    without corrupting ``reports[0]``'s own timings.
+    """
+
+    reports: List[QueryReport]
+    opt: BatchResult                 # Alg. 4 plan combination + benefit
+    shared_search_s: float
+    shared_train_s: float
+    materialized: List[MaterializedModel] = field(default_factory=list)
+
+    @property
+    def merge_s(self) -> float:
+        return sum(r.merge_s for r in self.reports)
+
+    @property
+    def total_s(self) -> float:
+        return self.shared_search_s + self.shared_train_s + self.merge_s
+
+    @property
+    def benefit(self) -> float:
+        return self.opt.benefit
+
+    def __len__(self) -> int:
+        return len(self.reports)
+
+    def __iter__(self) -> Iterator[QueryReport]:
+        return iter(self.reports)
+
+    def __getitem__(self, i: int) -> QueryReport:
+        return self.reports[i]

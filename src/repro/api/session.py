@@ -1,0 +1,200 @@
+"""``MLegoSession`` — the canonical entry point to MLego.
+
+The session owns the Def. 1 members that are *not* per-query: the
+dataset D (corpus + range index), the analysis function F (LDAConfig +
+default trainer kind), the materialized-model store, the plan cost
+model, and the RNG state.  Queries arrive as typed ``QuerySpec``s
+through a single ``submit`` path:
+
+    session = MLegoSession(corpus, cfg)
+    report  = session.submit(QuerySpec(sigma=Interval(0, 500), alpha=0.5))
+    batch   = session.submit_many([spec1, spec2, spec3])
+
+``submit`` runs the Fig. 2 pipeline per predicate component (plan
+search -> gap training -> merge); union-of-intervals predicates are
+planned per component and merged into one model.  ``submit_many`` runs
+the §V.C Alg. 4 batch path: one joint plan combination, every shared
+gap segment trained exactly once, and the shared search/train costs
+reported at the batch level (``BatchReport``), not on the first query.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.api.executor import Executor
+from repro.api.planner import Planner
+from repro.api.reports import BatchReport, QueryReport
+from repro.api.spec import QuerySpec
+from repro.api.trainers import resolve_kind
+from repro.configs.lda_default import LDAConfig
+from repro.core.batch_opt import _gaps, _segments
+from repro.core.cost import CostModel
+from repro.core.lda import MaterializedModel
+from repro.core.plans import Interval
+from repro.core.search import SearchResult
+from repro.core.store import ModelStore
+from repro.data.corpus import Corpus, DataIndex
+
+
+class MLegoSession:
+    """One corpus + one model store + one RNG stream; many queries."""
+
+    def __init__(self, corpus: Corpus, cfg: LDAConfig, *,
+                 store: Optional[ModelStore] = None,
+                 cost: Optional[CostModel] = None,
+                 kind: str = "vb", seed: int = 0):
+        self.corpus = corpus
+        self.index = DataIndex(corpus)
+        self.store = store if store is not None else ModelStore()
+        self.cfg = cfg
+        self.cost = cost or CostModel(max_iters=cfg.max_iters,
+                                      n_topics=cfg.n_topics)
+        self.kind = resolve_kind(kind)       # default backend for train_range
+        self._key = jax.random.PRNGKey(seed)
+        self.planner = Planner(self.index, self.cost)
+        self.executor = Executor(corpus, cfg, self.store, self._next_key)
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _models(self, kind: str) -> List[MaterializedModel]:
+        """Store models of ``kind``, matching alias tags too — stores
+        persisted by the legacy engine may carry e.g. "gibbs" verbatim."""
+        out = []
+        for m in self.store.models():
+            try:
+                mk = resolve_kind(m.kind)
+            except ValueError:
+                mk = m.kind
+            if mk == kind:
+                out.append(m)
+        return out
+
+    def train_range(self, lo: float, hi: float,
+                    kind: Optional[str] = None) -> Optional[MaterializedModel]:
+        """Materialize one model on [lo, hi) (offline capital building)."""
+        return self.executor.train_gap(lo, hi, kind or self.kind, persist=True)
+
+    # ------------------------------------------------------------------
+    def submit(self, spec: QuerySpec) -> QueryReport:
+        """One analytic query: plan search, gap training, merge.
+
+        ``spec.kind=None`` (the default) uses the session's kind.
+        """
+        kind = spec.kind or self.kind
+        plans: List[SearchResult] = []
+        fresh: List[MaterializedModel] = []
+        parts: List[MaterializedModel] = []
+        n_tok = 0
+        search_s = train_s = 0.0
+        models = self._models(kind)
+        for sigma in spec.sigma:
+            t0 = time.perf_counter()
+            res = self.planner.plan(models, sigma, spec.alpha, spec.method)
+            search_s += time.perf_counter() - t0
+            plans.append(res)
+            parts.extend(res.plan)
+
+            t1 = time.perf_counter()
+            for gap in self.planner.gaps(sigma, res.plan):
+                m = self.executor.train_gap(gap.lo, gap.hi, kind,
+                                            persist=spec.persist)
+                if m is not None:
+                    fresh.append(m)
+                    n_tok += m.n_tokens
+            train_s += time.perf_counter() - t1
+
+        parts += fresh
+        if not parts:
+            raise ValueError(f"query {spec.sigma} selects no data")
+        t2 = time.perf_counter()
+        beta = self.executor.merge(parts)
+        merge_s = time.perf_counter() - t2
+        return QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
+                           train_s, merge_s, search_s, materialized=fresh)
+
+    # ------------------------------------------------------------------
+    def submit_many(self, specs: Sequence[QuerySpec]) -> BatchReport:
+        """§V.C batch path: Alg. 4 plan combination, shared gap training.
+
+        All specs must use one backend kind (shared segments are merged
+        into every covering query, so their Θ must be homogeneous).
+        Union predicates are supported: each component interval enters
+        the joint optimization as its own range, and the owning query
+        merges parts from all its components.
+
+        Alg. 4 plans the whole batch jointly in the time-cost (α = 0)
+        regime and supersedes per-query plan search, so specs with
+        α > 0 are rejected (submit them individually instead) and
+        ``spec.method`` is not consulted.
+        """
+        specs = list(specs)
+        if not specs:
+            return BatchReport([], self.planner.plan_batch([], []), 0.0, 0.0)
+        for s in specs:
+            if s.alpha != 0.0:
+                raise ValueError(
+                    f"batch planning (Alg. 4) is the alpha=0 regime; got "
+                    f"alpha={s.alpha} for {s.sigma} — submit accuracy-"
+                    f"weighted queries individually via submit()")
+        kinds = {s.kind or self.kind for s in specs}
+        if len(kinds) != 1:
+            raise ValueError(f"submit_many requires one backend kind per "
+                             f"batch, got {sorted(kinds)}")
+        kind = kinds.pop()
+
+        # flatten union predicates: one planning range per component
+        owner: List[int] = []
+        sigmas: List[Interval] = []
+        for i, s in enumerate(specs):
+            for sigma in s.sigma:
+                owner.append(i)
+                sigmas.append(sigma)
+
+        t0 = time.perf_counter()
+        opt = self.planner.plan_batch(self._models(kind), sigmas)
+        shared_search_s = time.perf_counter() - t0
+
+        # train every atomic shared gap segment exactly once
+        gap_lists = [_gaps(p, q) for p, q in zip(opt.plans, sigmas)]
+        seg_models = {}
+        t1 = time.perf_counter()
+        for lo, hi, _ in _segments(gap_lists):
+            persist = any(
+                specs[owner[j]].persist
+                for j, gaps in enumerate(gap_lists)
+                if any(g.lo <= lo and hi <= g.hi for g in gaps))
+            m = self.executor.train_gap(lo, hi, kind, persist=persist)
+            if m is not None:
+                seg_models[(lo, hi)] = m
+        shared_train_s = time.perf_counter() - t1
+
+        reports: List[QueryReport] = []
+        for i, spec in enumerate(specs):
+            t2 = time.perf_counter()
+            parts: List[MaterializedModel] = []
+            plans: List[SearchResult] = []
+            n_tok = 0
+            for j, (own, gaps) in enumerate(zip(owner, gap_lists)):
+                if own != i:
+                    continue
+                plans.append(SearchResult(opt.plans[j], 0.0, 0.0,
+                                          method="ALG4"))
+                parts.extend(opt.plans[j])
+                for (lo, hi), m in seg_models.items():
+                    if any(g.lo <= lo and hi <= g.hi for g in gaps):
+                        parts.append(m)
+                        n_tok += m.n_tokens
+            if not parts:
+                raise ValueError(f"query {spec.sigma} selects no data")
+            beta = self.executor.merge(parts)
+            merge_s = time.perf_counter() - t2
+            reports.append(QueryReport(beta, spec, tuple(plans), n_tok,
+                                       len(parts), 0.0, merge_s, 0.0))
+        return BatchReport(reports, opt, shared_search_s, shared_train_s,
+                           materialized=list(seg_models.values()))

@@ -1,0 +1,125 @@
+"""Pluggable trainer registry — one place that knows how to fit Θ.
+
+The paper's materialized-model tuple ⟨o, N, Θ⟩ is agnostic to the
+inference algorithm that produced Θ; only the *merge* (Alg. 1 vs
+Alg. 2) and the trainer differ per kind.  The seed repo hard-coded the
+two trainer bodies twice each inside ``QueryEngine`` — this registry
+collapses them and lets a new model kind plug in without touching the
+planner or the session:
+
+    register_trainer("my_kind", my_fit_fn)
+
+A trainer maps a sub-corpus to the mergeable parameter dict:
+
+    fn(corpus: Corpus, cfg: LDAConfig, key: jax PRNG key) -> Dict[str, np.ndarray]
+
+Each kind also carries its *merge family* — how a homogeneous list of
+its models combines into a topic matrix β.  Pass ``merge=`` a callable
+``(models, cfg) -> β`` or the name of a built-in family (``"vb"``:
+Alg. 1 natural-parameter addition over ``theta["lam"]``; ``"gs"``:
+Alg. 2 count addition over ``theta["delta_nkv"]``).
+
+Built-ins: ``"vb"`` (variational Bayes, Alg. 1 family) and ``"gs"``
+(collapsed Gibbs, Alg. 2 family; alias ``"gibbs"``).  Kinds are
+canonicalized through :func:`resolve_kind` so the store tags models
+consistently regardless of which alias the caller used.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.configs.lda_default import LDAConfig
+from repro.core.gibbs import cgs_fit
+from repro.core.lda import (
+    MaterializedModel,
+    topics_from_gs,
+    topics_from_vb,
+)
+from repro.core.merge import merge_gs, merge_vb
+from repro.core.vb import vb_fit
+from repro.data.corpus import Corpus, doc_term_matrix
+
+TrainerFn = Callable[[Corpus, LDAConfig, object], Dict[str, np.ndarray]]
+MergeFn = Callable[[Sequence[MaterializedModel], LDAConfig], np.ndarray]
+
+
+def _merge_vb_family(models: Sequence[MaterializedModel],
+                     cfg: LDAConfig) -> np.ndarray:
+    return topics_from_vb(merge_vb(models, cfg))
+
+
+def _merge_gs_family(models: Sequence[MaterializedModel],
+                     cfg: LDAConfig) -> np.ndarray:
+    return topics_from_gs(merge_gs(models, cfg), cfg.eta)
+
+
+_MERGE_FAMILIES: Dict[str, MergeFn] = {
+    "vb": _merge_vb_family,
+    "gs": _merge_gs_family,
+}
+
+_TRAINERS: Dict[str, TrainerFn] = {}
+_MERGES: Dict[str, MergeFn] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_trainer(kind: str, fn: TrainerFn,
+                     *, merge: Union[str, MergeFn] = "vb",
+                     aliases: Tuple[str, ...] = ()) -> None:
+    """Register (or replace) the trainer (and merge family) for a kind."""
+    if not kind or not isinstance(kind, str):
+        raise ValueError(f"trainer kind must be a non-empty string, got {kind!r}")
+    if isinstance(merge, str):
+        if merge not in _MERGE_FAMILIES:
+            raise ValueError(f"unknown merge family {merge!r}; one of "
+                             f"{sorted(_MERGE_FAMILIES)} or a callable")
+        merge = _MERGE_FAMILIES[merge]
+    for a in aliases:
+        if a in _TRAINERS and a != kind:
+            raise ValueError(f"alias {a!r} would shadow the registered "
+                             f"kind {a!r}")
+    _TRAINERS[kind] = fn
+    _MERGES[kind] = merge
+    _ALIASES.pop(kind, None)     # explicit registration wins over an alias
+    for a in aliases:
+        _ALIASES[a] = kind
+
+
+def resolve_kind(kind: str) -> str:
+    """Canonical kind name (follows aliases); raises on unknown kinds."""
+    kind = _ALIASES.get(kind, kind)
+    if kind not in _TRAINERS:
+        raise ValueError(
+            f"unknown model kind {kind!r}; registered: "
+            f"{sorted(_TRAINERS)} (aliases: {sorted(_ALIASES)}). "
+            "Use repro.api.register_trainer to add one.")
+    return kind
+
+
+def get_trainer(kind: str) -> TrainerFn:
+    return _TRAINERS[resolve_kind(kind)]
+
+
+def get_merge(kind: str) -> MergeFn:
+    return _MERGES[resolve_kind(kind)]
+
+
+def available_trainers() -> Tuple[str, ...]:
+    return tuple(sorted(_TRAINERS))
+
+
+# --- built-ins -------------------------------------------------------------
+
+def _train_vb(corpus: Corpus, cfg: LDAConfig, key) -> Dict[str, np.ndarray]:
+    x = doc_term_matrix(corpus)
+    return {"lam": np.asarray(vb_fit(x, key, cfg))}
+
+
+def _train_gibbs(corpus: Corpus, cfg: LDAConfig, key) -> Dict[str, np.ndarray]:
+    return {"delta_nkv": cgs_fit(corpus.tokens, corpus.doc_ids, cfg, key)}
+
+
+register_trainer("vb", _train_vb, merge="vb")
+register_trainer("gs", _train_gibbs, merge="gs", aliases=("gibbs",))

@@ -1,39 +1,42 @@
-"""Analytic query execution (paper Def. 1: q = {F, alpha, D, sigma, M}).
+"""DEPRECATED query facade — use ``repro.api.MLegoSession`` instead.
 
-The executor is the end-to-end path of Fig. 2: predicate -> plan search
--> online training of uncovered ranges -> model merge -> approximate
-model m*.  Freshly trained gap models are materialized back into the
-store, so the system's reuse capital grows with every query — the
-interactivity flywheel the paper describes.
+The canonical implementation of the Fig. 2 pipeline (plan search ->
+gap training -> merge) lives in ``repro.api`` (session / planner /
+executor); this module keeps the seed repo's ``QueryEngine`` surface
+alive as a thin shim so old call sites keep working:
 
-Batch path (§V.C): one plan per query from Alg. 4, shared gap segments
-trained once, every query merged from its plan + the shared segment
-models.
+  * ``execute(sigma, alpha, method)``  -> ``session.submit(QuerySpec(...))``
+  * ``execute_batch(sigmas)``          -> ``session.submit_many([...])``,
+    re-applying the legacy cost attribution (shared search/train time
+    dumped onto ``results[0]``) for bug-for-bug compatibility.  New
+    code should read those costs from ``BatchReport`` instead — they
+    are also stashed on ``self.last_batch_report``.
 """
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-import jax
 import numpy as np
 
+from repro.api.reports import BatchReport, QueryReport
+from repro.api.session import MLegoSession
+from repro.api.spec import PERSIST, VOLATILE, QuerySpec
+from repro.api.trainers import resolve_kind
 from repro.configs.lda_default import LDAConfig
-from repro.core import merge as merge_mod
-from repro.core.batch_opt import BatchResult, batch_optimize, _gaps, _segments
-from repro.core.cost import CostModel, plan_stats
-from repro.core.gibbs import cgs_fit
-from repro.core.lda import MaterializedModel, topics_from_gs, topics_from_vb
-from repro.core.plans import Interval, subtract
-from repro.core.search import SearchResult, psoa_search, SEARCHERS
+from repro.core.batch_opt import BatchResult
+from repro.core.cost import CostModel
+from repro.core.lda import MaterializedModel
+from repro.core.plans import Interval
+from repro.core.search import SearchResult
 from repro.core.store import ModelStore
-from repro.core.vb import vb_fit
-from repro.data.corpus import Corpus, DataIndex, doc_term_matrix
+from repro.data.corpus import Corpus
 
 
 @dataclass
 class QueryResult:
+    """Legacy result shape (kept for old call sites; see QueryReport)."""
     beta: np.ndarray             # merged topic-word matrix (K, V)
     plan: SearchResult
     n_trained_tokens: int
@@ -48,125 +51,109 @@ class QueryResult:
         return self.train_s + self.merge_s + self.search_s
 
 
+def _legacy(report: QueryReport) -> QueryResult:
+    return QueryResult(report.beta, report.plan, report.n_trained_tokens,
+                       report.n_merged, report.train_s, report.merge_s,
+                       report.search_s, materialized=list(report.materialized))
+
+
 class QueryEngine:
-    """Executes analytic queries against a corpus + model store."""
+    """Deprecated: a positional-argument facade over ``MLegoSession``."""
 
     def __init__(self, corpus: Corpus, store: ModelStore, cfg: LDAConfig,
                  cost: Optional[CostModel] = None, kind: str = "vb",
                  *, materialize_results: bool = True, seed: int = 0):
-        self.corpus = corpus
-        self.index = DataIndex(corpus)
-        self.store = store
-        self.cfg = cfg
-        self.cost = cost or CostModel(max_iters=cfg.max_iters,
-                                      n_topics=cfg.n_topics)
-        self.kind = kind
+        warnings.warn(
+            "QueryEngine is deprecated; use repro.api.MLegoSession.submit "
+            "with a QuerySpec", DeprecationWarning, stacklevel=2)
+        self.session = MLegoSession(corpus, cfg, store=store, cost=cost,
+                                    kind=kind, seed=seed)
         self.materialize_results = materialize_results
-        self._key = jax.random.PRNGKey(seed)
+        self.last_batch_report: Optional[BatchReport] = None
+
+    # --- delegated session state (old attribute surface, r/w) ----------
+    # Setters mimic the seed engine's plain attributes: assignment
+    # swaps the object used from then on, nothing else is recomputed
+    # (e.g. setting corpus leaves index stale, exactly as before).
+    @property
+    def corpus(self) -> Corpus:
+        return self.session.corpus
+
+    @corpus.setter
+    def corpus(self, v: Corpus) -> None:
+        self.session.corpus = v
+        self.session.executor.corpus = v
+
+    @property
+    def index(self):
+        return self.session.index
+
+    @index.setter
+    def index(self, v) -> None:
+        self.session.index = v
+        self.session.planner.index = v
+
+    @property
+    def store(self) -> ModelStore:
+        return self.session.store
+
+    @store.setter
+    def store(self, v: ModelStore) -> None:
+        self.session.store = v
+        self.session.executor.store = v
+
+    @property
+    def cfg(self) -> LDAConfig:
+        return self.session.cfg
+
+    @cfg.setter
+    def cfg(self, v: LDAConfig) -> None:
+        self.session.cfg = v
+        self.session.executor.cfg = v
+
+    @property
+    def cost(self) -> CostModel:
+        return self.session.cost
+
+    @cost.setter
+    def cost(self, v: CostModel) -> None:
+        self.session.cost = v
+        self.session.planner.cost = v
+
+    @property
+    def kind(self) -> str:
+        return self.session.kind
+
+    @kind.setter
+    def kind(self, v: str) -> None:
+        self.session.kind = resolve_kind(v)
+
+    def _spec(self, sigma, alpha: float, method: str = "psoa++") -> QuerySpec:
+        return QuerySpec(sigma=sigma, alpha=alpha, kind=self.kind,
+                         method=method,
+                         materialize=PERSIST if self.materialize_results
+                         else VOLATILE)
 
     # ------------------------------------------------------------------
-    def _next_key(self):
-        self._key, k = jax.random.split(self._key)
-        return k
-
     def train_range(self, lo: float, hi: float) -> Optional[MaterializedModel]:
         """Train one fresh model on [lo, hi) and materialize it."""
-        d0, d1 = self.corpus.doc_slice(lo, hi)
-        if d1 <= d0:
-            return None
-        sub = self.corpus.subset(lo, hi)
-        if self.kind == "vb":
-            x = doc_term_matrix(sub)
-            lam = np.asarray(vb_fit(x, self._next_key(), self.cfg))
-            theta = {"lam": lam}
-        else:
-            nkv = cgs_fit(sub.tokens, sub.doc_ids, self.cfg, self._next_key())
-            theta = {"delta_nkv": nkv}
-        return self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
-                              self.kind, theta)
+        return self.session.train_range(lo, hi)
 
-    # ------------------------------------------------------------------
     def execute(self, sigma: Interval, alpha: float,
                 method: str = "psoa++") -> QueryResult:
         """One analytic query: search, train gaps, merge."""
-        t0 = time.perf_counter()
-        searcher = SEARCHERS[method]
-        res = searcher(self.store.models(self.kind), sigma, self.index,
-                       self.cost, alpha)
-        t_search = time.perf_counter() - t0
+        return _legacy(self.session.submit(self._spec(sigma, alpha, method)))
 
-        t1 = time.perf_counter()
-        fresh: List[MaterializedModel] = []
-        n_tok = 0
-        for gap in subtract(sigma, [m.o for m in res.plan]):
-            m = self.train_range(gap.lo, gap.hi) if self.materialize_results \
-                else self._train_volatile(gap.lo, gap.hi)
-            if m is not None:
-                fresh.append(m)
-                n_tok += m.n_tokens
-        t_train = time.perf_counter() - t1
-
-        t2 = time.perf_counter()
-        parts = list(res.plan) + fresh
-        if not parts:
-            raise ValueError(f"query {sigma} selects no data")
-        beta = merge_mod.merge_models(parts, self.cfg)
-        t_merge = time.perf_counter() - t2
-        return QueryResult(beta, res, n_tok, len(parts), t_train, t_merge,
-                           t_search, materialized=fresh)
-
-    def _train_volatile(self, lo: float, hi: float) -> Optional[MaterializedModel]:
-        d0, d1 = self.corpus.doc_slice(lo, hi)
-        if d1 <= d0:
-            return None
-        sub = self.corpus.subset(lo, hi)
-        if self.kind == "vb":
-            x = doc_term_matrix(sub)
-            lam = np.asarray(vb_fit(x, self._next_key(), self.cfg))
-            theta = {"lam": lam}
-        else:
-            nkv = cgs_fit(sub.tokens, sub.doc_ids, self.cfg, self._next_key())
-            theta = {"delta_nkv": nkv}
-        return MaterializedModel(-1, Interval(lo, hi), sub.n_docs,
-                                 sub.n_tokens, self.kind, theta)
-
-    # ------------------------------------------------------------------
     def execute_batch(self, sigmas: Sequence[Interval]
                       ) -> Tuple[List[QueryResult], BatchResult]:
         """§V.C batch path: Alg. 4 plan combination, shared gap training."""
-        t0 = time.perf_counter()
-        opt = batch_optimize(self.store.models(self.kind), list(sigmas),
-                             self.index, self.cost)
-        t_search = time.perf_counter() - t0
-
-        # train every atomic shared segment exactly once
-        gap_lists = [_gaps(p, q) for p, q in zip(opt.plans, sigmas)]
-        seg_models: Dict[Tuple[float, float], MaterializedModel] = {}
-        t1 = time.perf_counter()
-        for lo, hi, _ in _segments(gap_lists):
-            m = self.train_range(lo, hi) if self.materialize_results \
-                else self._train_volatile(lo, hi)
-            if m is not None:
-                seg_models[(lo, hi)] = m
-        t_train = time.perf_counter() - t1
-
-        results: List[QueryResult] = []
-        for qi, (plan, gaps, sigma) in enumerate(
-                zip(opt.plans, gap_lists, sigmas)):
-            t2 = time.perf_counter()
-            parts = list(plan)
-            n_tok = 0
-            for (lo, hi), m in seg_models.items():
-                if any(g.lo <= lo and hi <= g.hi for g in gaps):
-                    parts.append(m)
-                    n_tok += m.n_tokens
-            beta = merge_mod.merge_models(parts, self.cfg)
-            t_merge = time.perf_counter() - t2
-            sr = SearchResult(plan, 0.0, 0.0, method="ALG4")
-            results.append(QueryResult(beta, sr, n_tok, len(parts),
-                                       0.0, t_merge, 0.0))
-        # attribute shared costs once (on the batch result)
+        br = self.session.submit_many(
+            [self._spec(s, 0.0) for s in sigmas])
+        self.last_batch_report = br
+        results = [_legacy(r) for r in br.reports]
+        # legacy attribution: shared costs dumped on the first result
+        # (BatchReport carries them properly — prefer it in new code)
         if results:
-            results[0].train_s = t_train
-            results[0].search_s = t_search
-        return results, opt
+            results[0].train_s = br.shared_train_s
+            results[0].search_s = br.shared_search_s
+        return results, br.opt

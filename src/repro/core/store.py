@@ -10,6 +10,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import tempfile
 import threading
 from typing import Dict, List, Optional, Sequence
@@ -18,6 +19,9 @@ import numpy as np
 
 from repro.core.lda import MaterializedModel
 from repro.core.plans import Interval
+
+
+_BLOB_RE = re.compile(r"model_(-?\d+)\.npz")
 
 
 class ModelStore:
@@ -80,6 +84,17 @@ class ModelStore:
             json.dump(manifest, f, indent=1)
             tmp = f.name
         os.replace(tmp, mf)
+        # prune blobs of models removed since the last save.  Only ids
+        # this store has allocated (< next_id) are candidates — a fresh
+        # or stale store saving into a shared directory must not delete
+        # blobs it never knew about.
+        live = {e["file"] for e in manifest["models"]}
+        for name in os.listdir(path):
+            m = _BLOB_RE.fullmatch(name)
+            if m is None or name in live:
+                continue
+            if 0 <= int(m.group(1)) < self._next_id:
+                os.remove(os.path.join(path, name))
 
     @classmethod
     def load(cls, path: str, verify: bool = True) -> "ModelStore":

@@ -68,7 +68,7 @@ def apply_repartition(parts: Sequence[Partition], store: ModelStore,
     """Build each worker's model: retrain missing ranges, then merge.
 
     ``train_fn(lo, hi)`` trains + materializes one range (the
-    QueryEngine.train_range signature).  Returns worker -> merged model.
+    MLegoSession.train_range signature).  Returns worker -> merged model.
     """
     out: Dict[int, MaterializedModel] = {}
     for part in parts:

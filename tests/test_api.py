@@ -1,0 +1,346 @@
+"""The unified session API: QuerySpec validation, submit/submit_many
+equivalence with the legacy QueryEngine paths, union predicates,
+materialization policy, trainer registry, batch cost attribution."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    Interval,
+    MLegoSession,
+    QuerySpec,
+    available_trainers,
+    get_trainer,
+    normalize_sigma,
+    register_trainer,
+    resolve_kind,
+)
+from repro.configs.lda_default import LDAConfig
+from repro.core.query import QueryEngine
+from repro.core.store import ModelStore
+from repro.data.corpus import make_corpus, train_test_split
+
+CFG = LDAConfig(n_topics=6, vocab_size=150, alpha=0.5, eta=0.05,
+                max_iters=12, e_step_iters=8, gibbs_sweeps=8)
+
+
+@pytest.fixture(scope="module")
+def train():
+    corpus, _ = make_corpus(350, CFG.vocab_size, CFG.n_topics,
+                            mean_doc_len=40, seed=3)
+    train, _ = train_test_split(corpus, test_frac=0.15, seed=1)
+    return train
+
+
+def _session(train, kind="vb"):
+    return MLegoSession(train, CFG, kind=kind, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# QuerySpec validation / normalization
+# ---------------------------------------------------------------------------
+
+def test_spec_normalizes_union():
+    spec = QuerySpec(sigma=[Interval(200.0, 300.0), Interval(0.0, 100.0),
+                            Interval(90.0, 150.0)])
+    assert spec.sigma == (Interval(0.0, 150.0), Interval(200.0, 300.0))
+    assert spec.is_union
+    assert spec.span == Interval(0.0, 300.0)
+
+
+def test_spec_coalesces_touching_intervals():
+    spec = QuerySpec(sigma=[Interval(0.0, 100.0), Interval(100.0, 200.0)])
+    assert spec.sigma == (Interval(0.0, 200.0),)
+    assert not spec.is_union
+
+
+@pytest.mark.parametrize("bad", [
+    dict(sigma=[]),
+    dict(sigma=Interval(0.0, 100.0), alpha=1.5),
+    dict(sigma=Interval(0.0, 100.0), alpha=-0.1),
+    dict(sigma=Interval(0.0, 100.0), method="magic"),
+    dict(sigma=Interval(0.0, 100.0), materialize="maybe"),
+    dict(sigma=Interval(50.0, 50.0)),
+])
+def test_spec_rejects_invalid(bad):
+    with pytest.raises((ValueError, TypeError)):
+        QuerySpec(**bad)
+
+
+def test_spec_canonicalizes_gibbs_alias():
+    spec = QuerySpec(sigma=Interval(0.0, 10.0), kind="gibbs")
+    assert spec.kind == "gs"
+
+
+def test_alias_tagged_legacy_store_is_reused(train):
+    """Stores persisted by the old engine may tag models with an alias
+    ("gibbs") — the session must still find and merge that capital."""
+    sess = _session(train, kind="gs")
+    m = sess.train_range(0.0, 350.0)
+    # simulate a legacy store entry: same Θ, alias kind tag
+    sess.store.remove(m.model_id)
+    legacy = sess.store.add(m.o, m.n_docs, m.n_tokens, "gibbs", m.theta)
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 350.0), alpha=1.0))
+    assert rep.n_trained_tokens == 0, "alias-tagged capital was orphaned"
+    assert rep.model_ids == (legacy.model_id,)
+    assert np.isfinite(rep.beta).all()
+
+
+def test_submit_defaults_to_session_kind(train):
+    """A spec with no explicit kind must use the session's backend —
+    including consulting that backend's reuse capital."""
+    sess = _session(train, kind="gs")
+    m = sess.train_range(0.0, 350.0)
+    assert m.kind == "gs"
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 350.0), alpha=1.0))
+    assert rep.n_trained_tokens == 0, "session-kind capital must be reused"
+    assert rep.model_ids == (m.model_id,)
+    assert all(mm.kind == "gs" for mm in sess.store.models())
+    # batch path too
+    br = sess.submit_many([QuerySpec(sigma=Interval(0.0, 200.0))])
+    assert all(mm.kind == "gs" for mm in br.materialized)
+
+
+# ---------------------------------------------------------------------------
+# trainer registry
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown model kind"):
+        resolve_kind("not-a-trainer")
+    with pytest.raises(ValueError, match="unknown model kind"):
+        get_trainer("not-a-trainer")
+    with pytest.raises(ValueError, match="unknown model kind"):
+        QuerySpec(sigma=Interval(0.0, 10.0), kind="not-a-trainer")
+
+
+def test_registry_builtin_kinds():
+    assert {"vb", "gs"} <= set(available_trainers())
+    assert resolve_kind("gibbs") == "gs"
+
+
+def test_registered_trainer_plugs_into_submit(train):
+    calls = []
+
+    def fake_vb(corpus, cfg, key):
+        calls.append(corpus.n_docs)
+        return get_trainer("vb")(corpus, cfg, key)
+
+    register_trainer("fake_vb", fake_vb)
+    try:
+        sess = _session(train, kind="fake_vb")
+        rep = sess.submit(QuerySpec(sigma=Interval(0.0, 120.0),
+                                    kind="fake_vb"))
+        assert calls, "custom trainer was never invoked"
+        assert np.isfinite(rep.beta).all()
+        assert all(m.kind == "fake_vb" for m in sess.store.models())
+    finally:
+        from repro.api import trainers as tr
+        tr._TRAINERS.pop("fake_vb", None)
+        tr._MERGES.pop("fake_vb", None)
+
+
+# ---------------------------------------------------------------------------
+# submit vs legacy execute equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["vb", "gs"])
+def test_submit_matches_legacy_execute(train, kind):
+    sess = _session(train, kind=kind)
+    sess.train_range(0.0, 170.0)
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 350.0), alpha=0.5,
+                                kind=kind))
+
+    engine = QueryEngine(train, ModelStore(), CFG, kind=kind, seed=0)
+    engine.train_range(0.0, 170.0)
+    res = engine.execute(Interval(0.0, 350.0), alpha=0.5)
+
+    np.testing.assert_array_equal(rep.beta, res.beta)
+    assert rep.n_trained_tokens == res.n_trained_tokens
+    assert rep.n_merged == res.n_merged
+    assert rep.plan.model_ids == res.plan.model_ids
+
+
+def test_submit_many_matches_legacy_execute_batch(train):
+    queries = [Interval(0.0, 200.0), Interval(100.0, 300.0)]
+
+    sess = _session(train)
+    sess.train_range(0.0, 120.0)
+    br = sess.submit_many([QuerySpec(sigma=q) for q in queries])
+
+    engine = QueryEngine(train, ModelStore(), CFG, kind="vb", seed=0)
+    engine.train_range(0.0, 120.0)
+    results, opt = engine.execute_batch(queries)
+
+    assert len(br) == len(results) == 2
+    for rep, res in zip(br, results):
+        np.testing.assert_array_equal(rep.beta, res.beta)
+        assert rep.n_merged == res.n_merged
+    assert br.opt.benefit == pytest.approx(opt.benefit)
+
+
+# ---------------------------------------------------------------------------
+# union-of-intervals predicates
+# ---------------------------------------------------------------------------
+
+def test_union_predicate_merges_the_right_parts(train):
+    sess = _session(train)
+    m_left = sess.train_range(0.0, 100.0)
+    m_mid = sess.train_range(150.0, 250.0)    # inside the union's hole
+    m_right = sess.train_range(260.0, 350.0)
+
+    rep = sess.submit(QuerySpec(
+        sigma=[Interval(0.0, 100.0), Interval(260.0, 350.0)], alpha=1.0))
+
+    assert rep.n_trained_tokens == 0, "both components fully covered"
+    assert rep.model_ids == tuple(sorted(
+        (m_left.model_id, m_right.model_id)))
+    assert m_mid.model_id not in rep.model_ids, \
+        "model inside the predicate hole must not be merged"
+    assert len(rep.plans) == 2
+    np.testing.assert_allclose(rep.beta.sum(1), 1.0, rtol=1e-4)
+
+
+def test_union_predicate_trains_only_inside_components(train):
+    sess = _session(train)
+    rep = sess.submit(QuerySpec(
+        sigma=[Interval(0.0, 80.0), Interval(200.0, 280.0)]))
+    for m in rep.materialized:
+        assert (Interval(0.0, 80.0).contains(m.o)
+                or Interval(200.0, 280.0).contains(m.o)), m.o
+    # the hole stays untrained
+    assert all(not m.o.overlaps(Interval(80.0, 200.0))
+               for m in sess.store.models())
+
+
+def test_union_predicate_in_batch(train):
+    sess = _session(train)
+    specs = [
+        QuerySpec(sigma=[Interval(0.0, 80.0), Interval(200.0, 280.0)]),
+        QuerySpec(sigma=Interval(50.0, 250.0)),
+    ]
+    br = sess.submit_many(specs)
+    assert len(br) == 2
+    assert len(br.reports[0].plans) == 2      # one plan per component
+    assert len(br.reports[1].plans) == 1
+    for rep in br:
+        assert np.isfinite(rep.beta).all()
+
+
+# ---------------------------------------------------------------------------
+# materialization policy
+# ---------------------------------------------------------------------------
+
+def test_volatile_policy_leaves_store_unchanged(train):
+    sess = _session(train)
+    sess.train_range(0.0, 100.0)
+    n0 = len(sess.store)
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 200.0),
+                                materialize="volatile"))
+    assert len(sess.store) == n0, "volatile query must not grow the store"
+    assert rep.n_trained_tokens > 0, "the gap was still trained"
+    assert all(m.model_id == -1 for m in rep.materialized)
+
+
+def test_persist_policy_grows_store(train):
+    sess = _session(train)
+    n0 = len(sess.store)
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 200.0)))
+    assert len(sess.store) > n0
+    assert all(m.model_id >= 0 for m in rep.materialized)
+
+
+def test_mixed_kind_batch_rejected(train):
+    sess = _session(train)
+    with pytest.raises(ValueError, match="one backend kind"):
+        sess.submit_many([QuerySpec(sigma=Interval(0.0, 100.0), kind="vb"),
+                          QuerySpec(sigma=Interval(0.0, 100.0), kind="gs")])
+
+
+def test_batch_rejects_accuracy_weighted_specs(train):
+    """Alg. 4 plans in the alpha=0 regime; a spec's alpha must not be
+    silently dropped."""
+    sess = _session(train)
+    with pytest.raises(ValueError, match="alpha=0 regime"):
+        sess.submit_many([QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5)])
+
+
+def test_alias_cannot_shadow_registered_kind():
+    with pytest.raises(ValueError, match="shadow"):
+        register_trainer("other", get_trainer("vb"), aliases=("vb",))
+    assert resolve_kind("vb") == "vb"
+    from repro.api import trainers as tr
+    tr._TRAINERS.pop("other", None)
+    tr._MERGES.pop("other", None)
+
+
+# ---------------------------------------------------------------------------
+# batch cost attribution (regression for the results[0] smearing bug)
+# ---------------------------------------------------------------------------
+
+def test_batch_costs_live_on_the_batch_report(train):
+    sess = _session(train)
+    sess.train_range(0.0, 120.0)
+    br = sess.submit_many([QuerySpec(sigma=Interval(0.0, 200.0)),
+                           QuerySpec(sigma=Interval(100.0, 300.0))])
+    # per-query reports carry only their own merge time
+    for rep in br:
+        assert rep.train_s == 0.0
+        assert rep.search_s == 0.0
+        assert rep.merge_s > 0.0
+    assert br.shared_train_s > 0.0
+    assert br.total_s == pytest.approx(
+        br.shared_search_s + br.shared_train_s
+        + sum(r.merge_s for r in br))
+
+
+def test_legacy_batch_totals_preserved(train):
+    """The shim's old-style attribution (shared costs on results[0])
+    must aggregate to exactly BatchReport.total_s — the fix relocates
+    the shared terms, it does not change totals."""
+    engine = QueryEngine(train, ModelStore(), CFG, kind="vb", seed=0)
+    engine.train_range(0.0, 120.0)
+    results, _ = engine.execute_batch([Interval(0.0, 200.0),
+                                       Interval(100.0, 300.0)])
+    br = engine.last_batch_report
+    assert results[0].train_s == br.shared_train_s
+    assert results[0].search_s == br.shared_search_s
+    assert results[1].train_s == 0.0 and results[1].search_s == 0.0
+    legacy_total = sum(r.total_s for r in results)
+    assert legacy_total == pytest.approx(
+        br.shared_train_s + br.shared_search_s
+        + sum(r.merge_s for r in br))
+    assert legacy_total == pytest.approx(br.total_s)
+
+
+# ---------------------------------------------------------------------------
+# misc session behavior
+# ---------------------------------------------------------------------------
+
+def test_shim_attributes_stay_assignable(train):
+    """The seed engine exposed plain attributes; legacy code assigns
+    them (e.g. swapping in a loaded store)."""
+    engine = QueryEngine(train, ModelStore(), CFG, kind="vb", seed=0)
+    other = ModelStore()
+    engine.store = other
+    assert engine.store is other
+    m = engine.train_range(0.0, 100.0)
+    assert m.model_id in {mm.model_id for mm in other.models()}, \
+        "assigned store must be the one training materializes into"
+    engine.kind = "gibbs"
+    assert engine.kind == "gs"
+    engine.cost = engine.cost
+    engine.cfg = engine.cfg
+    engine.corpus = engine.corpus
+    engine.index = engine.index
+
+
+def test_empty_query_raises(train):
+    sess = _session(train)
+    hi = float(train.attr[-1])
+    with pytest.raises(ValueError, match="selects no data"):
+        sess.submit(QuerySpec(sigma=Interval(hi + 10.0, hi + 20.0)))
+
+
+def test_normalize_sigma_rejects_non_interval():
+    with pytest.raises(TypeError):
+        normalize_sigma([(0.0, 1.0)])

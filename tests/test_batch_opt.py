@@ -1,6 +1,14 @@
-"""Batch query optimization (Alg. 4, Thm. 5/6 problem)."""
+"""Batch query optimization (Alg. 4, Thm. 5/6 problem).
+
+The property tests use ``hypothesis``, an *optional* dev dependency
+(see .github/workflows/ci.yml for the pinned version).  On
+environments without it this module is skipped instead of erroring the
+whole collection.
+"""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.batch_opt import (

@@ -2,6 +2,7 @@
 associativity, and equivalence of the host / kernel / collective forms."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (see ci.yml)
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.lda_default import LDAConfig

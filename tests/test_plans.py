@@ -1,6 +1,7 @@
 """Interval algebra + plan generation properties (paper §V.B.3)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (see ci.yml)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.plans import (

@@ -2,6 +2,7 @@
 fraction of the evaluations; PSOA++/GRA agree in the coverage regime."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (see ci.yml)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost import CostModel, plan_stats

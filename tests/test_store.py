@@ -1,0 +1,99 @@
+"""ModelStore persistence: atomic save/load and stale-blob pruning."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.plans import Interval
+from repro.core.store import ModelStore
+
+
+def _add(store, lo, hi, k=4, v=32):
+    return store.add(Interval(lo, hi), 10, 100, "vb",
+                     {"lam": np.random.default_rng(int(lo)).random(
+                         (k, v)).astype(np.float32)})
+
+
+def test_save_load_round_trip(tmp_path):
+    store = ModelStore()
+    m1 = _add(store, 0.0, 100.0)
+    m2 = _add(store, 100.0, 200.0)
+    store.save(str(tmp_path))
+
+    loaded = ModelStore.load(str(tmp_path))
+    assert len(loaded) == 2
+    for m in (m1, m2):
+        got = loaded.get(m.model_id)
+        assert got.o == m.o and got.kind == m.kind
+        np.testing.assert_array_equal(got.theta["lam"], m.theta["lam"])
+    # ids keep advancing after reload (no collision with pruned models)
+    m3 = _add(loaded, 200.0, 300.0)
+    assert m3.model_id > max(m1.model_id, m2.model_id)
+
+
+def test_save_prunes_stale_blobs(tmp_path):
+    """save -> remove -> save -> load: the removed model's blob must be
+    pruned from disk, and the reloaded store must match exactly."""
+    path = str(tmp_path)
+    store = ModelStore()
+    keep = _add(store, 0.0, 100.0)
+    dead = _add(store, 100.0, 200.0)
+    store.save(path)
+    assert os.path.exists(os.path.join(path, f"model_{dead.model_id}.npz"))
+
+    store.remove(dead.model_id)
+    store.save(path)
+
+    files = sorted(os.listdir(path))
+    assert f"model_{dead.model_id}.npz" not in files, \
+        "stale blob of a removed model leaked on disk"
+    assert files == ["manifest.json", f"model_{keep.model_id}.npz"]
+
+    loaded = ModelStore.load(path)
+    assert len(loaded) == 1
+    np.testing.assert_array_equal(loaded.get(keep.model_id).theta["lam"],
+                                  keep.theta["lam"])
+
+
+def test_save_prune_ignores_foreign_files(tmp_path):
+    """Only our own model_*.npz blobs are pruned — user files survive."""
+    path = str(tmp_path)
+    store = ModelStore()
+    _add(store, 0.0, 100.0)
+    foreign = os.path.join(path, "notes.txt")
+    os.makedirs(path, exist_ok=True)
+    with open(foreign, "w") as f:
+        f.write("keep me")
+    other_npz = os.path.join(path, "embedding.npz")
+    np.savez(other_npz, x=np.zeros(3))
+    store.save(path)
+    assert os.path.exists(foreign)
+    assert os.path.exists(other_npz)
+
+
+def test_fresh_store_save_keeps_unknown_blobs(tmp_path):
+    """A store that never saw a model id must not prune its blob: a
+    fresh (or stale) store saving into a shared/snapshot directory is
+    not allowed to destroy other snapshots' data."""
+    path = str(tmp_path)
+    old = ModelStore()
+    kept = _add(old, 0.0, 100.0)
+    old.save(path)
+
+    ModelStore().save(path)   # fresh store, knows nothing
+    assert os.path.exists(os.path.join(path, f"model_{kept.model_id}.npz")), \
+        "fresh store pruned a blob it never allocated"
+
+
+def test_repeated_save_remove_cycles(tmp_path):
+    path = str(tmp_path)
+    store = ModelStore()
+    ids = [_add(store, 100.0 * i, 100.0 * (i + 1)).model_id
+           for i in range(4)]
+    store.save(path)
+    for mid in ids[:3]:
+        store.remove(mid)
+        store.save(path)
+    blobs = [f for f in os.listdir(path) if f.endswith(".npz")]
+    assert blobs == [f"model_{ids[3]}.npz"]
+    assert len(ModelStore.load(path)) == 1
