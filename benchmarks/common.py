@@ -26,6 +26,16 @@ from repro.data.corpus import (
 BENCH_CFG = LDAConfig(n_topics=16, vocab_size=512, alpha=0.5, eta=0.05,
                       max_iters=20, e_step_iters=10, gibbs_sweeps=10)
 
+# Quick mode: small enough that the full bench harness finishes in
+# under ~2 min on a CPU runner (the CI smoke job and local spot checks
+# share this config via ``bench_cfg(quick=True)``).
+QUICK_CFG = LDAConfig(n_topics=8, vocab_size=256, alpha=0.5, eta=0.05,
+                      max_iters=8, e_step_iters=5, gibbs_sweeps=5)
+
+
+def bench_cfg(quick: bool = False) -> LDAConfig:
+    return QUICK_CFG if quick else BENCH_CFG
+
 
 def timed(fn: Callable, *args, repeat: int = 1, **kw) -> Tuple[float, object]:
     out = None

@@ -59,6 +59,20 @@ def run(quick=False):
     rows.append(("merge_topics", us, err,
                  f"tpu_us~{bts / 819e9 * 1e6:.2f}(hbm-bound)"))
 
+    # merge_topics_batch (the submit_many one-launch path)
+    from repro.kernels.merge_topics.ops import merge_topics_batch
+    from repro.kernels.merge_topics.ref import merge_topics_batched_ref
+    nb = 2 if quick else 4
+    stb = jnp.asarray(rng.normal(size=(nb, n, mk, mv)), jnp.float32)
+    wb = jnp.ones((nb, n), jnp.float32)
+    ref = jax.jit(lambda s, w: merge_topics_batched_ref(s, w, 0.01, 0.01))
+    us = _t(ref, stb, wb)
+    a = merge_topics_batch(stb, wb, bias=0.01, base=0.01, interpret=True)
+    err = float(jnp.abs(a - ref(stb, wb)).max())
+    bts = nb * (n + 1) * mk * mv * 4
+    rows.append(("merge_topics_batch", us, err,
+                 f"tpu_us~{bts / 819e9 * 1e6:.2f}(hbm-bound)"))
+
     # flash attention
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.flash_attention.ref import flash_attention_ref

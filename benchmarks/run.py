@@ -7,6 +7,7 @@
   plan_search         Fig. 10-12 NAI/GRA/PSOA/PSOA++ times, alpha sweep
   batch_opt           Fig. 13/14 Alg. 4 cost & benefit
   session             (ours)     unified submit/submit_many API latency
+                                 + device-backend cache hit rates
   kernels             (ours)     Pallas kernel parity timings
   roofline            (ours)     table from dry-run artifacts, if present
 
@@ -14,14 +15,20 @@ All sections drive MLego through the ``repro.api`` session surface
 (QuerySpec -> MLegoSession.submit); none construct the deprecated
 ``QueryEngine`` directly.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+``--quick`` shrinks every section so the whole harness finishes in
+under ~2 min on CPU (the CI smoke job runs this).  ``--json PATH``
+additionally dumps every section's rows as one JSON document — CI
+uploads these as ``BENCH_*.json`` artifacts so the perf trajectory
+accumulates across commits.
+
+Usage: PYTHONPATH=src python -m benchmarks.run
+           [--quick] [--only SECTION[,SECTION...]] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
 import time
-import traceback
 
 
 def _section(name):
@@ -30,14 +37,19 @@ def _section(name):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names (default: all)")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write section rows as JSON to PATH")
     args = ap.parse_args()
 
-    sections = []
+    only = None if args.only is None else {
+        s.strip() for s in args.only.split(",") if s.strip()}
+    out = {}
 
     def want(name):
-        return args.only is None or args.only == name
+        return only is None or name in only
 
     t_start = time.perf_counter()
 
@@ -52,6 +64,8 @@ def main() -> None:
             print(",".join(f"{v:.4f}" if isinstance(v, float) else str(v)
                            for v in r))
         print(f"# fitted PerformanceLoss rho = {ploss.rho:.5f}")
+        out["merging_effect"] = {"rows": [list(r) for r in rows],
+                                 "rho": ploss.rho}
 
     if want("merging_efficiency"):
         _section("merging_efficiency (Fig. 7)")
@@ -62,22 +76,29 @@ def main() -> None:
         for name, t, lpp, sr in rows:
             print(f"{name},{t:.4f},{lpp:.4f},{sr:.2f}")
         print(f"# materialization {t_mat:.2f}s (offline)")
+        out["merging_efficiency"] = {"rows": [list(r) for r in rows],
+                                     "t_materialize_s": t_mat}
 
     if want("scalability"):
         _section("scalability (Fig. 8)")
         from benchmarks import merging_efficiency
         print("n_docs,method,time_s,SR")
+        scal = []
         for n in ((400, 1000) if args.quick else (500, 1500, 4000)):
             rows, _ = merging_efficiency.run(n_docs=n)
             for name, t, _, sr in rows:
                 print(f"{n},{name},{t:.4f},{sr:.2f}")
+                scal.append([n, name, t, sr])
+        out["scalability"] = {"rows": scal}
 
     if want("coverage"):
         _section("coverage (Fig. 9)")
         from benchmarks import coverage
         print("coverage,t_orig_s,t_mlego_s,SR,t_search_s,lpp")
-        for r in coverage.run(n_docs=600 if args.quick else 1500):
+        rows = list(coverage.run(n_docs=600 if args.quick else 1500))
+        for r in rows:
             print(",".join(f"{v:.4f}" for v in r))
+        out["coverage"] = {"rows": [list(r) for r in rows]}
 
     if want("plan_search"):
         _section("plan_search (Fig. 10/11/12)")
@@ -85,13 +106,17 @@ def main() -> None:
         print("n_models,alpha,nai_s,nai_scored,gra_s,gra_scored,"
               "psoa_s,psoa_scored,psoa++_s,psoa++_scored")
         sizes = (6, 10, 14) if args.quick else (6, 10, 14, 18, 22)
-        for r in plan_search.run_sizes(sizes=sizes):
+        size_rows = list(plan_search.run_sizes(sizes=sizes))
+        for r in size_rows:
             print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
                            for x in r))
         print("alpha,psoa_s,n_scored,n_layers,method")
-        for r in plan_search.run_alpha():
+        alpha_rows = list(plan_search.run_alpha())
+        for r in alpha_rows:
             print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
                            for x in r))
+        out["plan_search"] = {"sizes": [list(r) for r in size_rows],
+                              "alpha": [list(r) for r in alpha_rows]}
 
     if want("batch_opt"):
         _section("batch_opt (Fig. 13/14)")
@@ -100,15 +125,17 @@ def main() -> None:
               "oracle_time")
         bs = (2, 3) if args.quick else (2, 3, 4, 6)
         mp = (8, 16) if args.quick else (8, 16, 24)
-        for r in batch_opt_bench.run(batch_sizes=bs, models_per=mp):
+        rows = list(batch_opt_bench.run(batch_sizes=bs, models_per=mp))
+        for r in rows:
             print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
                            for x in r))
+        out["batch_opt"] = {"rows": [list(r) for r in rows]}
 
     if want("session"):
         _section("session (unified API latency)")
         from benchmarks import session_bench
-        rows, batch_row = session_bench.run(
-            n_docs=600 if args.quick else 1200)
+        n_docs = 600 if args.quick else 1200
+        rows, batch_row = session_bench.run(n_docs=n_docs, quick=args.quick)
         print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens")
         for label, s, t, m, nr, nt in rows:
             print(f"{label},{s:.4f},{t:.4f},{m:.4f},{nr},{nt}")
@@ -116,6 +143,16 @@ def main() -> None:
         print("batch," + ",".join(
             f"{v:.4f}" if isinstance(v, float) else str(v)
             for v in batch_row))
+        dev_rows, hit_rate = session_bench.run_device_cache(
+            n_docs=n_docs, quick=args.quick)
+        print("label,cache_hits,cache_misses,merge_device_ms,merge_s")
+        for label, h, mi, dms, ms in dev_rows:
+            print(f"{label},{h},{mi},{dms:.3f},{ms:.4f}")
+        print(f"# device cache hit-rate {hit_rate:.3f}")
+        out["session"] = {"rows": [list(r) for r in rows],
+                          "batch": list(batch_row),
+                          "device_cache": [list(r) for r in dev_rows],
+                          "device_cache_hit_rate": hit_rate}
 
     if want("kernels"):
         _section("kernels (interpret-mode parity timings)")
@@ -134,7 +171,14 @@ def main() -> None:
             print("# no artifacts; run: PYTHONPATH=src python -m "
                   "repro.launch.dryrun")
 
-    print(f"\n# total bench time {time.perf_counter() - t_start:.1f}s")
+    elapsed = time.perf_counter() - t_start
+    print(f"\n# total bench time {elapsed:.1f}s")
+
+    if args.json:
+        doc = {"quick": args.quick, "sections": out, "elapsed_s": elapsed}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -5,18 +5,23 @@ per-query cost breakdown (search / train / merge) over a warming
 store, a union-of-intervals query, and a batch with Alg. 4 shared
 training — shared costs read from the ``BatchReport`` (batch-level),
 per-query latencies from the individual reports.
+
+The device-backend pass replays a repeated-query workload against the
+Pallas execution backend and reports the device cache hit rate plus
+the fused-launch wall time (``merge_device_ms``) — the counters the
+tentpole acceptance criteria track.
 """
 from __future__ import annotations
 
-from benchmarks.common import BENCH_CFG, bench_world
+from benchmarks.common import bench_cfg, bench_world
 from repro.api import Interval, MLegoSession, QuerySpec
 
 
-def run(n_docs=1200, seed=0):
-    cfg = BENCH_CFG
-    train, test, index, _ = bench_world(n_docs=n_docs, seed=seed)
+def run(n_docs=1200, seed=0, quick=False, backend="host"):
+    cfg = bench_cfg(quick)
+    train, test, index, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
     hi = float(train.attr[-1]) + 1.0
-    session = MLegoSession(train, cfg, kind="vb")
+    session = MLegoSession(train, cfg, kind="vb", backend=backend)
 
     rows = []
     sequence = [
@@ -41,6 +46,34 @@ def run(n_docs=1200, seed=0):
     return rows, batch_row
 
 
+def run_device_cache(n_docs=1200, seed=0, quick=False, repeats=3):
+    """Repeated-query workload on the device backend.
+
+    Warms the store once, then replays the same full-range query
+    ``repeats`` times: the first replay uploads every plan model into
+    the device cache, the rest must hit.  Returns per-replay rows
+    (hits, misses, merge_device_ms) plus the backend's cumulative
+    hit rate.
+    """
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    session = MLegoSession(train, cfg, kind="vb", backend="device")
+
+    # build capital so replays are pure merges
+    edges = [i * hi / 4 for i in range(5)]
+    for lo, hi_e in zip(edges, edges[1:]):
+        session.train_range(lo, hi_e)
+
+    spec = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+    rows = []
+    for i in range(repeats):
+        rep = session.submit(spec)
+        rows.append((f"replay_{i}", rep.cache_hits, rep.cache_misses,
+                     rep.merge_device_ms, rep.merge_s))
+    return rows, session.backend.stats.hit_rate
+
+
 def main():
     rows, batch_row = run()
     print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens")
@@ -49,6 +82,11 @@ def main():
     print("# batch: shared_search_s,shared_train_s,merge_s,benefit,n")
     print("batch," + ",".join(f"{v:.4f}" if isinstance(v, float) else str(v)
                               for v in batch_row))
+    dev_rows, hit_rate = run_device_cache()
+    print("label,cache_hits,cache_misses,merge_device_ms,merge_s")
+    for label, h, mi, dms, ms in dev_rows:
+        print(f"{label},{h},{mi},{dms:.3f},{ms:.4f}")
+    print(f"# device cache hit-rate {hit_rate:.3f}")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,14 @@
 Everything else in ``repro.core`` is machinery behind this surface;
 ``repro.core.query.QueryEngine`` is a deprecated shim over it.
 """
+from repro.api.backend import (
+    BACKEND_NAMES,
+    BackendStats,
+    DeviceBackend,
+    ExecutionBackend,
+    HostBackend,
+    make_backend,
+)
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.session import MLegoSession
 from repro.api.spec import (
@@ -27,8 +35,14 @@ from repro.api.trainers import (
 from repro.core.plans import Interval
 
 __all__ = [
+    "BACKEND_NAMES",
+    "BackendStats",
     "BatchReport",
+    "DeviceBackend",
+    "ExecutionBackend",
+    "HostBackend",
     "Interval",
+    "make_backend",
     "MATERIALIZE_POLICIES",
     "MLegoSession",
     "PERSIST",

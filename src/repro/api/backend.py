@@ -1,0 +1,290 @@
+"""Pluggable execution backends for the query hot path.
+
+The Fig. 2 pipeline bottoms out in two data-plane operations: merging
+a plan's materialized models (Alg. 1/2 — pure bandwidth) and training
+scratch gaps (the VB E-step — pure MXU).  ``HostBackend`` runs both on
+host NumPy exactly as the seed repo did and is the parity reference.
+``DeviceBackend`` keeps hot model parameters device-resident in an
+LRU cache keyed by store model id (invalidated through the store's
+change notifications), executes merges through the fused Pallas
+``merge_topics`` kernel — one padded ``(n, K, V)`` launch per query,
+and one ``(b, n', K, V)`` launch for a whole ``submit_many`` batch —
+and routes scratch-gap VB training through the fused E-step kernel
+(``vb_estep(..., use_kernel=True)``).
+
+On CPU hosts the kernels execute in Pallas interpret mode (the CI
+correctness path); on TPU they compile to Mosaic.  Selection flows
+through ``QuerySpec.backend`` / ``MLegoSession(backend=...)``.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.trainers import (
+    TrainerFn,
+    get_merge,
+    get_trainer,
+    merge_family_name,
+)
+from repro.configs.lda_default import LDAConfig
+from repro.core.lda import MaterializedModel
+from repro.core.merge import device_merge_params
+from repro.core.store import ModelStore
+from repro.data.corpus import Corpus, doc_term_matrix
+from repro.kernels.merge_topics.ops import merge_topics, merge_topics_batch
+
+BACKEND_NAMES = ("host", "device")
+
+
+@dataclass(frozen=True)
+class BackendStats:
+    """Monotonic counters; diff two snapshots for per-query attribution."""
+
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    cache_invalidations: int = 0
+    merges: int = 0
+    device_launches: int = 0
+    host_fallbacks: int = 0
+    merge_device_ms: float = 0.0
+
+    def delta(self, since: "BackendStats") -> "BackendStats":
+        return BackendStats(
+            self.cache_hits - since.cache_hits,
+            self.cache_misses - since.cache_misses,
+            self.cache_evictions - since.cache_evictions,
+            self.cache_invalidations - since.cache_invalidations,
+            self.merges - since.merges,
+            self.device_launches - since.device_launches,
+            self.host_fallbacks - since.host_fallbacks,
+            self.merge_device_ms - since.merge_device_ms,
+        )
+
+    @property
+    def hit_rate(self) -> float:
+        seen = self.cache_hits + self.cache_misses
+        return self.cache_hits / seen if seen else 0.0
+
+
+class ExecutionBackend:
+    """Interface the session/executor program against."""
+
+    name: str = "?"
+
+    def __init__(self):
+        self.stats = BackendStats()
+
+    # -- lifecycle -------------------------------------------------------
+    def bind_store(self, store: ModelStore) -> None:
+        """Attach to the session's store (cache invalidation hookup)."""
+
+    @property
+    def bound_store(self) -> Optional[ModelStore]:
+        """The store this backend caches against; None if stateless.
+
+        Sessions refuse to adopt a backend whose ``bound_store`` is a
+        *different* live store — the cache is keyed by model id alone,
+        and ids from two stores collide silently."""
+        return None
+
+    # -- data plane ------------------------------------------------------
+    def merge(self, parts: Sequence[MaterializedModel], kind: str,
+              cfg: LDAConfig) -> np.ndarray:
+        raise NotImplementedError
+
+    def merge_many(self, part_lists: Sequence[Sequence[MaterializedModel]],
+                   kind: str, cfg: LDAConfig) -> List[np.ndarray]:
+        return [self.merge(p, kind, cfg) for p in part_lists]
+
+    def trainer(self, kind: str) -> TrainerFn:
+        return get_trainer(kind)
+
+    # -- bookkeeping -----------------------------------------------------
+    def _count(self, **kw) -> None:
+        self.stats = replace(
+            self.stats, **{k: getattr(self.stats, k) + v
+                           for k, v in kw.items()})
+
+
+class HostBackend(ExecutionBackend):
+    """Today's NumPy semantics — the parity reference for DeviceBackend."""
+
+    name = "host"
+
+    def merge(self, parts, kind, cfg):
+        self._count(merges=1)
+        return get_merge(kind)(list(parts), cfg)
+
+
+class _DeviceModelCache:
+    """LRU of device-resident merge statistics, keyed by store model id.
+
+    Volatile models (id −1, never in the store) pass through without
+    being cached — there is no id under which an invalidation for them
+    could ever arrive.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[int, jax.Array]" = OrderedDict()
+        self.hits = self.misses = self.evictions = self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, model_id: int) -> bool:
+        return model_id in self._entries
+
+    def get(self, model: MaterializedModel, stat_key: str) -> jax.Array:
+        mid = model.model_id
+        if mid >= 0 and mid in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(mid)
+            return self._entries[mid]
+        self.misses += 1
+        arr = jnp.asarray(model.theta[stat_key], jnp.float32)
+        if mid >= 0:
+            self._entries[mid] = arr
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        return arr
+
+    def invalidate(self, model_id: int) -> None:
+        if self._entries.pop(model_id, None) is not None:
+            self.invalidations += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+class DeviceBackend(ExecutionBackend):
+    """Device-resident merges + kernel E-step training.
+
+    capacity   : max cached models (LRU-evicted beyond it)
+    interpret  : Pallas interpret override (None = auto: interpret off
+                 TPU or when MLEGO_KERNEL_INTERPRET=1)
+    kernel_estep : route "vb" gap training through the fused E-step
+                 kernel (True by default; the host trainer registry is
+                 used for every other kind)
+    """
+
+    name = "device"
+
+    def __init__(self, capacity: int = 64, *,
+                 interpret: Optional[bool] = None,
+                 kernel_estep: bool = True):
+        super().__init__()
+        self.cache = _DeviceModelCache(capacity)
+        self.interpret = interpret
+        self.kernel_estep = kernel_estep
+        self._store: Optional[ModelStore] = None
+
+    # -- lifecycle -------------------------------------------------------
+    def bind_store(self, store: ModelStore) -> None:
+        if store is self._store:
+            return
+        if self._store is not None:
+            self._store.unsubscribe(self._on_store_event)
+        self._store = store
+        self.cache.clear()
+        store.subscribe(self._on_store_event)
+
+    @property
+    def bound_store(self) -> Optional[ModelStore]:
+        return self._store
+
+    def _on_store_event(self, event: str, model_id: int) -> None:
+        # "remove" drops stale device copies; "add" defends against id
+        # collisions from a store that was swapped or reloaded in place.
+        self.cache.invalidate(model_id)
+        self._sync_cache_counters()
+
+    # -- merge -----------------------------------------------------------
+    def merge(self, parts, kind, cfg):
+        fam = merge_family_name(kind)
+        if fam is None:                  # custom merge callable: host only
+            self._count(merges=1, host_fallbacks=1)
+            return get_merge(kind)(list(parts), cfg)
+        stat_key, bias, base, finish = device_merge_params(fam, cfg)
+        t0 = time.perf_counter()
+        stats = jnp.stack([self.cache.get(m, stat_key) for m in parts])
+        w = jnp.ones((len(parts),), jnp.float32)
+        merged = merge_topics(stats, w, bias=bias, base=base,
+                              interpret=self.interpret)
+        merged.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        self._sync_cache_counters()
+        self._count(merges=1, device_launches=1, merge_device_ms=ms)
+        return finish(np.asarray(merged))
+
+    def merge_many(self, part_lists, kind, cfg):
+        fam = merge_family_name(kind)
+        if fam is None:
+            # per-list self.merge counts the merges and fallbacks
+            return super().merge_many(part_lists, kind, cfg)
+        if len(part_lists) == 1:
+            return [self.merge(part_lists[0], kind, cfg)]
+        stat_key, bias, base, finish = device_merge_params(fam, cfg)
+        t0 = time.perf_counter()
+        n_max = max(len(p) for p in part_lists)
+        rows, weights = [], []
+        for parts in part_lists:
+            stack = jnp.stack([self.cache.get(m, stat_key) for m in parts])
+            pad = n_max - len(parts)
+            if pad:
+                # zero-weight rows: 0·(0 − base) contributes nothing
+                stack = jnp.pad(stack, ((0, pad), (0, 0), (0, 0)))
+            rows.append(stack)
+            weights.append([1.0] * len(parts) + [0.0] * pad)
+        stats = jnp.stack(rows)                       # (b, n_max, K, V)
+        w = jnp.asarray(weights, jnp.float32)         # (b, n_max)
+        merged = merge_topics_batch(stats, w, bias=bias, base=base,
+                                    interpret=self.interpret)
+        merged.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        self._sync_cache_counters()
+        self._count(merges=len(part_lists), device_launches=1,
+                    merge_device_ms=ms)
+        return [finish(np.asarray(row)) for row in merged]
+
+    def _sync_cache_counters(self) -> None:
+        c = self.cache
+        self.stats = replace(self.stats, cache_hits=c.hits,
+                             cache_misses=c.misses,
+                             cache_evictions=c.evictions,
+                             cache_invalidations=c.invalidations)
+
+    # -- training --------------------------------------------------------
+    def trainer(self, kind: str) -> TrainerFn:
+        if kind == "vb" and self.kernel_estep:
+            return self._train_vb_kernel
+        return get_trainer(kind)
+
+    @staticmethod
+    def _train_vb_kernel(corpus: Corpus, cfg: LDAConfig,
+                         key) -> Dict[str, np.ndarray]:
+        from repro.core.vb import vb_fit
+        x = doc_term_matrix(corpus)
+        return {"lam": np.asarray(vb_fit(x, key, cfg, use_kernel=True))}
+
+
+_FACTORIES = {"host": HostBackend, "device": DeviceBackend}
+
+
+def make_backend(name: str) -> ExecutionBackend:
+    try:
+        return _FACTORIES[name]()
+    except KeyError:
+        raise ValueError(f"unknown execution backend {name!r}; one of "
+                         f"{BACKEND_NAMES}") from None

@@ -6,19 +6,39 @@ one materialization switch, replacing the seed repo's four copy-pasted
 the fresh model to the store (the reuse-capital flywheel);
 ``persist=False`` returns an unregistered model (id −1) and leaves the
 store untouched.
+
+Both stages execute through a pluggable ``ExecutionBackend``
+(``repro.api.backend``): the host backend preserves the seed's NumPy
+semantics; the device backend runs merges as fused Pallas launches
+over a device-resident model cache.  ``backend=None`` falls back to
+host semantics so direct callers (tests, schedulers) need no wiring.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-from repro.api.trainers import get_merge, get_trainer, resolve_kind
+from repro.api.backend import ExecutionBackend, HostBackend
+from repro.api.trainers import get_trainer, resolve_kind
 from repro.configs.lda_default import LDAConfig
 from repro.core.lda import MaterializedModel
 from repro.core.plans import Interval
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
+
+
+def _parts_kind(parts: Sequence[MaterializedModel]) -> str:
+    """Single canonical kind of a homogeneous part list (validated).
+
+    Kinds are compared after alias resolution, so legacy stores tagged
+    "gibbs" merge with fresh "gs" models."""
+    if not parts:
+        raise ValueError("nothing to merge")
+    kinds = {resolve_kind(m.kind) for m in parts}
+    if len(kinds) != 1:
+        raise ValueError(f"cannot merge mixed kinds {kinds}")
+    return kinds.pop()
 
 
 class Executor:
@@ -28,30 +48,44 @@ class Executor:
         self.cfg = cfg
         self.store = store
         self._next_key = next_key
+        self._host = HostBackend()
 
     def train_gap(self, lo: float, hi: float, kind: str,
-                  *, persist: bool = True) -> Optional[MaterializedModel]:
+                  *, persist: bool = True,
+                  backend: Optional[ExecutionBackend] = None
+                  ) -> Optional[MaterializedModel]:
         """Train one fresh model on [lo, hi); None if the range is empty."""
         d0, d1 = self.corpus.doc_slice(lo, hi)
         if d1 <= d0:
             return None
         kind = resolve_kind(kind)
         sub = self.corpus.subset(lo, hi)
-        theta = get_trainer(kind)(sub, self.cfg, self._next_key())
+        trainer = backend.trainer(kind) if backend is not None \
+            else get_trainer(kind)
+        theta = trainer(sub, self.cfg, self._next_key())
         if persist:
             return self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
                                   kind, theta)
         return MaterializedModel(-1, Interval(lo, hi), sub.n_docs,
                                  sub.n_tokens, kind, theta)
 
-    def merge(self, parts: Sequence[MaterializedModel]) -> np.ndarray:
+    def merge(self, parts: Sequence[MaterializedModel],
+              backend: Optional[ExecutionBackend] = None) -> np.ndarray:
         """Merge a homogeneous part list -> β (K, V), dispatching to the
-        kind's registered merge family (Alg. 1 for vb, Alg. 2 for gs).
-        Kinds are compared after alias resolution, so legacy stores
-        tagged "gibbs" merge with fresh "gs" models."""
-        if not parts:
-            raise ValueError("nothing to merge")
-        kinds = {resolve_kind(m.kind) for m in parts}
+        kind's merge family (Alg. 1 for vb, Alg. 2 for gs) on the given
+        execution backend (host semantics when None)."""
+        kind = _parts_kind(parts)
+        return (backend or self._host).merge(list(parts), kind, self.cfg)
+
+    def merge_many(self, part_lists: Sequence[Sequence[MaterializedModel]],
+                   backend: Optional[ExecutionBackend] = None
+                   ) -> List[np.ndarray]:
+        """Merge several plans at once (the submit_many hot path).
+
+        All lists must share one kind; the device backend turns the
+        whole batch into a single padded kernel launch."""
+        kinds = {_parts_kind(p) for p in part_lists}
         if len(kinds) != 1:
-            raise ValueError(f"cannot merge mixed kinds {kinds}")
-        return get_merge(kinds.pop())(list(parts), self.cfg)
+            raise ValueError(f"cannot batch-merge mixed kinds {kinds}")
+        return (backend or self._host).merge_many(
+            [list(p) for p in part_lists], kinds.pop(), self.cfg)

@@ -28,6 +28,13 @@ class QueryReport:
     single-interval σ has exactly one).  Inside a batch, ``train_s``
     and ``search_s`` are 0.0 — those costs are shared and reported on
     the ``BatchReport``.
+
+    ``backend`` names the execution backend that answered the query.
+    On the device backend, ``merge_device_ms`` is the wall time of the
+    fused kernel launch (upload + launch + sync; 0.0 on host) and
+    ``cache_hits``/``cache_misses`` count device-cache traffic for this
+    query's parts.  Inside a batch the launch is shared, so these
+    three live on the ``BatchReport`` and stay zero here.
     """
 
     beta: np.ndarray                 # merged topic-word matrix (K, V)
@@ -39,6 +46,10 @@ class QueryReport:
     merge_s: float
     search_s: float
     materialized: List[MaterializedModel] = field(default_factory=list)
+    backend: str = "host"
+    merge_device_ms: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     @property
     def plan(self) -> SearchResult:
@@ -73,6 +84,10 @@ class BatchReport:
     shared_search_s: float
     shared_train_s: float
     materialized: List[MaterializedModel] = field(default_factory=list)
+    backend: str = "host"
+    merge_device_ms: float = 0.0     # one shared launch for the batch
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     @property
     def merge_s(self) -> float:

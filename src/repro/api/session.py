@@ -3,8 +3,8 @@
 The session owns the Def. 1 members that are *not* per-query: the
 dataset D (corpus + range index), the analysis function F (LDAConfig +
 default trainer kind), the materialized-model store, the plan cost
-model, and the RNG state.  Queries arrive as typed ``QuerySpec``s
-through a single ``submit`` path:
+model, the RNG state, and the execution backend.  Queries arrive as
+typed ``QuerySpec``s through a single ``submit`` path:
 
     session = MLegoSession(corpus, cfg)
     report  = session.submit(QuerySpec(sigma=Interval(0, 500), alpha=0.5))
@@ -16,14 +16,22 @@ planned per component and merged into one model.  ``submit_many`` runs
 the §V.C Alg. 4 batch path: one joint plan combination, every shared
 gap segment trained exactly once, and the shared search/train costs
 reported at the batch level (``BatchReport``), not on the first query.
+
+The data plane (merge + gap training) executes on a pluggable backend:
+``backend="host"`` (default) is the NumPy reference; ``"device"``
+keeps hot model parameters device-resident and merges through the
+fused Pallas kernel — including one batched launch for the whole
+``submit_many`` merge stage.  A ``QuerySpec.backend`` overrides the
+session default per query.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import jax
 
+from repro.api.backend import ExecutionBackend, make_backend
 from repro.api.executor import Executor
 from repro.api.planner import Planner
 from repro.api.reports import BatchReport, QueryReport
@@ -45,9 +53,11 @@ class MLegoSession:
     def __init__(self, corpus: Corpus, cfg: LDAConfig, *,
                  store: Optional[ModelStore] = None,
                  cost: Optional[CostModel] = None,
-                 kind: str = "vb", seed: int = 0):
+                 kind: str = "vb", seed: int = 0,
+                 backend: Union[str, ExecutionBackend] = "host"):
         self.corpus = corpus
         self.index = DataIndex(corpus)
+        self._backends = {}
         self.store = store if store is not None else ModelStore()
         self.cfg = cfg
         self.cost = cost or CostModel(max_iters=cfg.max_iters,
@@ -56,11 +66,47 @@ class MLegoSession:
         self._key = jax.random.PRNGKey(seed)
         self.planner = Planner(self.index, self.cost)
         self.executor = Executor(corpus, cfg, self.store, self._next_key)
+        self.backend = self._register_backend(
+            make_backend(backend) if isinstance(backend, str) else backend)
 
     # ------------------------------------------------------------------
+    @property
+    def store(self) -> ModelStore:
+        return self._store
+
+    @store.setter
+    def store(self, v: ModelStore) -> None:
+        # swapping the store (the legacy-shim path) must re-home every
+        # backend cache — stale subscriptions would miss invalidations
+        self._store = v
+        for b in self._backends.values():
+            b.bind_store(v)
+        if hasattr(self, "executor"):       # unset during __init__
+            self.executor.store = v
+
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
         return k
+
+    def _register_backend(self, inst: ExecutionBackend) -> ExecutionBackend:
+        bound = inst.bound_store
+        if bound is not None and bound is not self.store:
+            raise ValueError(
+                "execution backend is already bound to another session's "
+                "store; its device cache is keyed by model id and ids "
+                "collide across stores — create one backend per session")
+        inst.bind_store(self.store)
+        self._backends[inst.name] = inst
+        return inst
+
+    def _backend_for(self, spec: QuerySpec) -> ExecutionBackend:
+        """Spec's backend (session default when unset), one instance per
+        name so device caches survive across queries."""
+        if spec.backend is None:
+            return self.backend
+        if spec.backend not in self._backends:
+            self._register_backend(make_backend(spec.backend))
+        return self._backends[spec.backend]
 
     def _models(self, kind: str) -> List[MaterializedModel]:
         """Store models of ``kind``, matching alias tags too — stores
@@ -78,15 +124,18 @@ class MLegoSession:
     def train_range(self, lo: float, hi: float,
                     kind: Optional[str] = None) -> Optional[MaterializedModel]:
         """Materialize one model on [lo, hi) (offline capital building)."""
-        return self.executor.train_gap(lo, hi, kind or self.kind, persist=True)
+        return self.executor.train_gap(lo, hi, kind or self.kind,
+                                       persist=True, backend=self.backend)
 
     # ------------------------------------------------------------------
     def submit(self, spec: QuerySpec) -> QueryReport:
         """One analytic query: plan search, gap training, merge.
 
-        ``spec.kind=None`` (the default) uses the session's kind.
+        ``spec.kind=None`` (the default) uses the session's kind;
+        ``spec.backend=None`` the session's execution backend.
         """
         kind = spec.kind or self.kind
+        backend = self._backend_for(spec)
         plans: List[SearchResult] = []
         fresh: List[MaterializedModel] = []
         parts: List[MaterializedModel] = []
@@ -103,7 +152,8 @@ class MLegoSession:
             t1 = time.perf_counter()
             for gap in self.planner.gaps(sigma, res.plan):
                 m = self.executor.train_gap(gap.lo, gap.hi, kind,
-                                            persist=spec.persist)
+                                            persist=spec.persist,
+                                            backend=backend)
                 if m is not None:
                     fresh.append(m)
                     n_tok += m.n_tokens
@@ -112,21 +162,28 @@ class MLegoSession:
         parts += fresh
         if not parts:
             raise ValueError(f"query {spec.sigma} selects no data")
+        snap = backend.stats
         t2 = time.perf_counter()
-        beta = self.executor.merge(parts)
+        beta = self.executor.merge(parts, backend=backend)
         merge_s = time.perf_counter() - t2
+        d = backend.stats.delta(snap)
         return QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
-                           train_s, merge_s, search_s, materialized=fresh)
+                           train_s, merge_s, search_s, materialized=fresh,
+                           backend=backend.name,
+                           merge_device_ms=d.merge_device_ms,
+                           cache_hits=d.cache_hits,
+                           cache_misses=d.cache_misses)
 
     # ------------------------------------------------------------------
     def submit_many(self, specs: Sequence[QuerySpec]) -> BatchReport:
         """§V.C batch path: Alg. 4 plan combination, shared gap training.
 
-        All specs must use one backend kind (shared segments are merged
-        into every covering query, so their Θ must be homogeneous).
-        Union predicates are supported: each component interval enters
-        the joint optimization as its own range, and the owning query
-        merges parts from all its components.
+        All specs must use one trainer kind (shared segments are merged
+        into every covering query, so their Θ must be homogeneous) and
+        one execution backend (the merge stage is a single batched
+        launch).  Union predicates are supported: each component
+        interval enters the joint optimization as its own range, and
+        the owning query merges parts from all its components.
 
         Alg. 4 plans the whole batch jointly in the time-cost (α = 0)
         regime and supersedes per-query plan search, so specs with
@@ -147,6 +204,12 @@ class MLegoSession:
             raise ValueError(f"submit_many requires one backend kind per "
                              f"batch, got {sorted(kinds)}")
         kind = kinds.pop()
+        backends = {self._backend_for(s) for s in specs}
+        if len(backends) != 1:
+            raise ValueError(
+                f"submit_many requires one execution backend per batch, "
+                f"got {sorted(b.name for b in backends)}")
+        backend = backends.pop()
 
         # flatten union predicates: one planning range per component
         owner: List[int] = []
@@ -169,12 +232,18 @@ class MLegoSession:
                 specs[owner[j]].persist
                 for j, gaps in enumerate(gap_lists)
                 if any(g.lo <= lo and hi <= g.hi for g in gaps))
-            m = self.executor.train_gap(lo, hi, kind, persist=persist)
+            m = self.executor.train_gap(lo, hi, kind, persist=persist,
+                                        backend=backend)
             if m is not None:
                 seg_models[(lo, hi)] = m
         shared_train_s = time.perf_counter() - t1
 
-        reports: List[QueryReport] = []
+        # assemble every query's part list, then merge the whole batch
+        # through one backend call (a single padded device launch)
+        part_lists: List[List[MaterializedModel]] = []
+        plans_per_q: List[List[SearchResult]] = []
+        ntok_per_q: List[int] = []
+        gather_s: List[float] = []
         for i, spec in enumerate(specs):
             t2 = time.perf_counter()
             parts: List[MaterializedModel] = []
@@ -192,9 +261,26 @@ class MLegoSession:
                         n_tok += m.n_tokens
             if not parts:
                 raise ValueError(f"query {spec.sigma} selects no data")
-            beta = self.executor.merge(parts)
-            merge_s = time.perf_counter() - t2
-            reports.append(QueryReport(beta, spec, tuple(plans), n_tok,
-                                       len(parts), 0.0, merge_s, 0.0))
+            part_lists.append(parts)
+            plans_per_q.append(plans)
+            ntok_per_q.append(n_tok)
+            gather_s.append(time.perf_counter() - t2)
+
+        snap = backend.stats
+        t3 = time.perf_counter()
+        betas = self.executor.merge_many(part_lists, backend=backend)
+        launch_share = (time.perf_counter() - t3) / len(specs)
+        d = backend.stats.delta(snap)
+
+        reports = [
+            QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
+                        0.0, gather + launch_share, 0.0,
+                        backend=backend.name)
+            for beta, spec, plans, n_tok, parts, gather in zip(
+                betas, specs, plans_per_q, ntok_per_q, part_lists, gather_s)]
         return BatchReport(reports, opt, shared_search_s, shared_train_s,
-                           materialized=list(seg_models.values()))
+                           materialized=list(seg_models.values()),
+                           backend=backend.name,
+                           merge_device_ms=d.merge_device_ms,
+                           cache_hits=d.cache_hits,
+                           cache_misses=d.cache_misses)

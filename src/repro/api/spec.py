@@ -11,18 +11,19 @@ Def. 1 defines an analytic query as the five-tuple q = {F, α, D, σ, M}:
   M : whether the answer's fresh gap models are materialized back into
       the store — the ``materialize`` policy (``persist``/``volatile``)
 
-``QuerySpec`` carries the per-query members (σ, α, backend kind,
-plan-search method, materialization policy); the session carries F and
-D.  Specs are frozen, validated at construction, and normalize σ into
-a sorted tuple of disjoint intervals (overlapping or touching member
-intervals are coalesced), so everything downstream can assume a clean
-predicate.
+``QuerySpec`` carries the per-query members (σ, α, trainer kind,
+plan-search method, materialization policy, execution backend); the
+session carries F and D.  Specs are frozen, validated at construction,
+and normalize σ into a sorted tuple of disjoint intervals (overlapping
+or touching member intervals are coalesced), so everything downstream
+can assume a clean predicate.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Iterable, Optional, Tuple, Union
 
+from repro.api.backend import BACKEND_NAMES
 from repro.core.plans import Interval
 from repro.core.search import SEARCHERS
 
@@ -71,6 +72,10 @@ class QuerySpec:
                   "psoa++")
     materialize : M — "persist" grows the store with fresh gap models,
                   "volatile" answers without touching the store
+    backend     : execution backend for merge + gap training —
+                  "host" (NumPy) or "device" (Pallas kernels with a
+                  device-resident model cache).  None (the default)
+                  means "use the session's backend".
     """
 
     sigma: Tuple[Interval, ...]
@@ -78,6 +83,7 @@ class QuerySpec:
     kind: Optional[str] = None
     method: str = "psoa++"
     materialize: str = PERSIST
+    backend: Optional[str] = None
 
     def __post_init__(self):
         from repro.api.trainers import resolve_kind  # late: registry may grow
@@ -92,6 +98,9 @@ class QuerySpec:
         if self.materialize not in MATERIALIZE_POLICIES:
             raise ValueError(f"materialize must be one of "
                              f"{MATERIALIZE_POLICIES}, got {self.materialize!r}")
+        if self.backend is not None and self.backend not in BACKEND_NAMES:
+            raise ValueError(f"unknown execution backend {self.backend!r}; "
+                             f"one of {BACKEND_NAMES} or None (session's)")
 
     # --- convenience ----------------------------------------------------
     @property

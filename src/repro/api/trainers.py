@@ -26,7 +26,7 @@ consistently regardless of which alias the caller used.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Sequence, Tuple, Union
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -104,6 +104,18 @@ def get_trainer(kind: str) -> TrainerFn:
 
 def get_merge(kind: str) -> MergeFn:
     return _MERGES[resolve_kind(kind)]
+
+
+def merge_family_name(kind: str) -> Optional[str]:
+    """Built-in merge family this kind uses ("vb" / "gs"), or None.
+
+    Kinds registered with a custom merge *callable* return None — they
+    have no known device form and must merge on the host."""
+    fn = _MERGES[resolve_kind(kind)]
+    for name, fam in _MERGE_FAMILIES.items():
+        if fn is fam:
+            return name
+    return None
 
 
 def available_trainers() -> Tuple[str, ...]:

@@ -73,3 +73,28 @@ def merged_theta(models: Sequence[MaterializedModel], cfg: LDAConfig):
     if kind == "vb":
         return {"lam": merge_vb(models, cfg)}, "vb"
     return {"delta_nkv": merge_gs(models, cfg)}, "gs"
+
+
+# ---------------------------------------------------------------------------
+# device form — how each built-in family maps onto the fused
+# ``kernels/merge_topics`` reduction  out = bias + Σ w_i (stat_i − base)
+# ---------------------------------------------------------------------------
+
+DEVICE_MERGE_FAMILIES = ("vb", "gs")
+
+
+def device_merge_params(kind: str, cfg: LDAConfig):
+    """(stat_key, bias, base, finisher) for a kernel-mergeable kind.
+
+    ``stat_key`` names the Θ entry that is the merge statistic;
+    ``finisher`` maps the merged statistic to the topic matrix β —
+    the same function the host merge families apply, so host/device
+    parity is exact up to the reduction's float ordering.
+    """
+    if kind == "vb":
+        return "lam", cfg.eta, cfg.eta, topics_from_vb
+    if kind == "gs":
+        return "delta_nkv", 0.0, 0.0, (
+            lambda nkv: topics_from_gs(nkv, cfg.eta))
+    raise KeyError(f"kind {kind!r} has no device merge form "
+                   f"(one of {DEVICE_MERGE_FAMILIES})")

@@ -13,7 +13,7 @@ import os
 import re
 import tempfile
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -24,11 +24,32 @@ from repro.core.plans import Interval
 _BLOB_RE = re.compile(r"model_(-?\d+)\.npz")
 
 
+StoreListener = Callable[[str, int], None]
+
+
 class ModelStore:
     def __init__(self):
         self._models: Dict[int, MaterializedModel] = {}
         self._next_id = 0
         self._lock = threading.Lock()
+        self._listeners: List[StoreListener] = []
+
+    # --- change notification -------------------------------------------
+    # Execution backends cache device-resident copies of Θ keyed by
+    # model id; they subscribe here so mutations invalidate those
+    # copies.  Listeners fire outside the lock with (event, model_id),
+    # event in {"add", "remove"}.
+    def subscribe(self, fn: StoreListener) -> None:
+        if fn not in self._listeners:
+            self._listeners.append(fn)
+
+    def unsubscribe(self, fn: StoreListener) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
+
+    def _notify(self, event: str, model_id: int) -> None:
+        for fn in list(self._listeners):
+            fn(event, model_id)
 
     # --- CRUD ---------------------------------------------------------
     def add(self, o: Interval, n_docs: int, n_tokens: int, kind: str,
@@ -38,11 +59,14 @@ class ModelStore:
             self._next_id += 1
             m = MaterializedModel(mid, o, n_docs, n_tokens, kind, theta)
             self._models[mid] = m
-            return m
+        self._notify("add", mid)
+        return m
 
     def remove(self, model_id: int) -> None:
         with self._lock:
-            self._models.pop(model_id, None)
+            existed = self._models.pop(model_id, None) is not None
+        if existed:
+            self._notify("remove", model_id)
 
     def get(self, model_id: int) -> MaterializedModel:
         return self._models[model_id]

@@ -1,0 +1,36 @@
+"""Shared kernel-dispatch helpers.
+
+Every kernel wrapper resolves its ``interpret`` default the same way:
+on TPU the Pallas body compiles to Mosaic; everywhere else it runs in
+interpret mode (the correctness path CI exercises).  Setting
+``MLEGO_KERNEL_INTERPRET=1`` forces interpret mode even on TPU — the
+switch the kernel CI leg flips so the suite provably executes the
+kernel bodies rather than silently skipping them.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+INTERPRET_ENV = "MLEGO_KERNEL_INTERPRET"
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_forced() -> bool:
+    return os.environ.get(INTERPRET_ENV, "") not in ("", "0")
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a wrapper's ``interpret=None`` default.
+
+    Explicit True/False wins; otherwise interpret unless on TPU, and
+    always interpret when ``MLEGO_KERNEL_INTERPRET`` is set.
+    """
+    if interpret is not None:
+        return interpret
+    return interpret_forced() or not on_tpu()

@@ -6,13 +6,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_pallas,
 )
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k",
@@ -20,6 +17,6 @@ def _on_tpu() -> bool:
 def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
                      block_k: int = 512, interpret: bool = None):
     """q: (B, 1, H, hd); caches: (B, S, KVH, hd) -> (B, 1, H, hd)."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret(interpret)
     return decode_attention_pallas(q, k_cache, v_cache, pos, window=window,
                                    block_k=block_k, interpret=interpret)

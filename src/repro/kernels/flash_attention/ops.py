@@ -6,11 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -19,7 +16,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = None):
     """q: (B, S, H, hd); k, v: (B, S, KVH, hd) -> (B, S, H, hd)."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret(interpret)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   block_q=block_q, block_k=block_k,
                                   interpret=interpret)

@@ -46,3 +46,38 @@ def merge_topics_pallas(stats, weights, bias: float = 0.0, base: float = 0.0,
         out_shape=jax.ShapeDtypeStruct((k, v), jnp.float32),
         interpret=interpret,
     )(stats, w2)
+
+
+def _batched_kernel(stats_ref, w_ref, out_ref, *, bias: float, base: float):
+    s = stats_ref[0].astype(jnp.float32)            # (n, BK, BV)
+    w = w_ref[0].astype(jnp.float32)                # (n, 1)
+    acc = jnp.sum(w[:, :, None] * (s - base), axis=0)
+    out_ref[0] = acc + bias
+
+
+def merge_topics_batched_pallas(stats, weights, bias: float = 0.0,
+                                base: float = 0.0, *, block_k: int = 128,
+                                block_v: int = 512, interpret: bool = False):
+    """Batch of independent merges in one launch.
+
+    stats: (b, n, K, V) f32; weights: (b, n) f32 -> (b, K, V) f32.
+    One grid step per (query, K-tile, V-tile); ragged batches pad the
+    n axis with zero-weight rows (0·(s − base) contributes nothing),
+    so b queries with different part counts share a single launch.
+    """
+    b, n, k, v = stats.shape
+    bk = min(block_k, k)
+    bv = min(block_v, v)
+    w3 = weights.reshape(b, n, 1).astype(jnp.float32)
+    kernel = functools.partial(_batched_kernel, bias=bias, base=base)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, pl.cdiv(k, bk), pl.cdiv(v, bv)),
+        in_specs=[
+            pl.BlockSpec((1, n, bk, bv), lambda q, i, j: (q, 0, i, j)),
+            pl.BlockSpec((1, n, 1), lambda q, i, j: (q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, bv), lambda q, i, j: (q, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k, v), jnp.float32),
+        interpret=interpret,
+    )(stats, w3)

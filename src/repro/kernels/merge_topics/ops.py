@@ -2,6 +2,8 @@
 
 ``merge_vb_stats`` / ``merge_gs_stats`` map the paper's Alg. 1/2 onto
 the fused kernel; core/merge.py stays the host/NumPy reference.
+``merge_topics_batch`` is the one-launch-per-batch entry the device
+execution backend uses to merge several queries' plans at once.
 """
 from __future__ import annotations
 
@@ -10,11 +12,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.merge_topics.merge_topics import merge_topics_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.common import default_interpret
+from repro.kernels.merge_topics.merge_topics import (
+    merge_topics_batched_pallas,
+    merge_topics_pallas,
+)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -24,7 +26,7 @@ def _round_up(x: int, m: int) -> int:
 @functools.partial(jax.jit, static_argnames=("bias", "base", "interpret"))
 def merge_topics(stats, weights, bias: float = 0.0, base: float = 0.0,
                  *, interpret: bool = None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret(interpret)
     n, k, v = stats.shape
     kp, vp = _round_up(k, 8), _round_up(v, 128)
     if (kp, vp) != (k, v):
@@ -33,6 +35,25 @@ def merge_topics(stats, weights, bias: float = 0.0, base: float = 0.0,
     out = merge_topics_pallas(stats, weights, bias, base,
                               interpret=interpret)
     return out[:k, :v]
+
+
+@functools.partial(jax.jit, static_argnames=("bias", "base", "interpret"))
+def merge_topics_batch(stats, weights, bias: float = 0.0, base: float = 0.0,
+                       *, interpret: bool = None):
+    """Batched merge: stats (b, n, K, V), weights (b, n) -> (b, K, V).
+
+    Ragged batches pad n with zero-weight rows before calling; here we
+    only pad K/V to tile alignment (pads carry ``base`` so they cancel).
+    """
+    interpret = default_interpret(interpret)
+    b, n, k, v = stats.shape
+    kp, vp = _round_up(k, 8), _round_up(v, 128)
+    if (kp, vp) != (k, v):
+        stats = jnp.pad(stats, ((0, 0), (0, 0), (0, kp - k), (0, vp - v)),
+                        constant_values=base)
+    out = merge_topics_batched_pallas(stats, weights, bias, base,
+                                      interpret=interpret)
+    return out[:, :k, :v]
 
 
 def merge_vb_stats(lams, weights, eta: float, *, interpret: bool = None):

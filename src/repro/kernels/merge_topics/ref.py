@@ -15,3 +15,10 @@ def merge_topics_ref(stats, weights, bias: float = 0.0, base: float = 0.0):
     """stats: (n, K, V); weights: (n,).  Returns (K, V)."""
     w = weights.astype(jnp.float32)[:, None, None]
     return bias + (w * (stats.astype(jnp.float32) - base)).sum(0)
+
+
+def merge_topics_batched_ref(stats, weights, bias: float = 0.0,
+                             base: float = 0.0):
+    """stats: (b, n, K, V); weights: (b, n).  Returns (b, K, V)."""
+    w = weights.astype(jnp.float32)[:, :, None, None]
+    return bias + (w * (stats.astype(jnp.float32) - base)).sum(1)

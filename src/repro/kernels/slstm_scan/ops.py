@@ -6,11 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.slstm_scan.slstm_scan import slstm_scan_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -21,7 +18,7 @@ def slstm_scan(xpre, r_mat, *, chunk: int = 128, interpret: bool = None):
     handoff re-derives it from the last chunk in the jnp path); the
     fused form exists for the prefill/train hot loop.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret(interpret)
     return slstm_scan_pallas(xpre.astype(jnp.float32),
                              r_mat.astype(jnp.float32),
                              chunk=chunk, interpret=interpret)

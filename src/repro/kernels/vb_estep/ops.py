@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.vb_estep.vb_estep import vb_estep_pallas
 
 
@@ -19,20 +20,21 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("alpha", "n_iters", "block_d",
                                              "interpret"))
 def vb_estep(x, exp_elog_beta, gamma0, alpha: float, n_iters: int,
              *, block_d: int = 128, interpret: bool = None):
     """Drop-in fused replacement for core.vb.vb_estep's inner loop."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret(interpret)
     d, v = x.shape
     k = exp_elog_beta.shape[0]
     kp, vp = _round_up(k, 128), _round_up(v, 128)
-    dp = _round_up(d, 8)
+    # D must pad to a whole number of doc blocks: a ragged boundary
+    # block would stream out-of-bounds rows into the sstats reduction
+    # (x pads are zero, so whole pad blocks contribute nothing).
+    bd = min(block_d, _round_up(d, 8))
+    dp = _round_up(d, bd)
+    block_d = bd
     if (kp, vp, dp) != (k, v, d):
         x = jnp.pad(x, ((0, dp - d), (0, vp - v)))
         # pad eeβ with ~0 (tiny positive keeps phinorm finite)

@@ -1,0 +1,317 @@
+"""Execution-backend contract: Device (Pallas interpret) vs Host
+(NumPy) parity on the query hot path, device-cache LRU/invalidation
+semantics, batched submit_many launches, and backend selection flow
+through QuerySpec/MLegoSession."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    DeviceBackend,
+    HostBackend,
+    Interval,
+    MLegoSession,
+    QuerySpec,
+    make_backend,
+    register_trainer,
+)
+from repro.api.trainers import get_trainer
+from repro.configs.lda_default import LDAConfig
+from repro.core.lda import MaterializedModel
+from repro.core.store import ModelStore
+from repro.data.corpus import make_corpus, train_test_split
+
+CFG = LDAConfig(n_topics=6, vocab_size=150, alpha=0.5, eta=0.05,
+                max_iters=6, e_step_iters=5, gibbs_sweeps=6)
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def train():
+    corpus, _ = make_corpus(300, CFG.vocab_size, CFG.n_topics,
+                            mean_doc_len=30, seed=3)
+    train, _ = train_test_split(corpus, test_frac=0.1, seed=1)
+    return train
+
+
+def _seed_store(kind, edges):
+    """Store with synthetic mergeable Θ tiling ``edges`` (no training)."""
+    store = ModelStore()
+    key = "delta_nkv" if kind == "gs" else "lam"
+    for lo, hi in zip(edges, edges[1:]):
+        theta = {key: RNG.gamma(1.0, 1.0, (CFG.n_topics, CFG.vocab_size))
+                 .astype(np.float32)}
+        store.add(Interval(lo, hi), 50, 500, kind, theta)
+    return store
+
+
+def _sessions(train, kind, edges=(0.0, 100.0, 200.0, 300.0)):
+    store = _seed_store(kind, list(edges))
+    host = MLegoSession(train, CFG, store=store, kind=kind, backend="host")
+    dev = MLegoSession(train, CFG, store=store, kind=kind, backend="device")
+    return host, dev
+
+
+# ---------------------------------------------------------------------------
+# device/host parity (acceptance: identical beta within 1e-5, vb and gs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["vb", "gs"])
+def test_device_matches_host_submit(train, kind):
+    host, dev = _sessions(train, kind)
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    rh = host.submit(spec)
+    rd = dev.submit(spec)
+    assert rh.model_ids == rd.model_ids, "same plan must be merged"
+    np.testing.assert_allclose(rh.beta, rd.beta, rtol=1e-5, atol=1e-5)
+    assert rh.backend == "host" and rd.backend == "device"
+    assert rh.merge_device_ms == 0.0 and rd.merge_device_ms > 0.0
+
+
+@pytest.mark.parametrize("kind", ["vb", "gs"])
+def test_device_matches_host_submit_many(train, kind):
+    """submit_many's single padded launch must equal per-query host
+    merges — ragged part counts exercise the zero-weight padding."""
+    host, dev = _sessions(train, kind)
+    specs = [QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.0),
+             QuerySpec(sigma=Interval(100.0, 300.0), alpha=0.0),
+             QuerySpec(sigma=Interval(0.0, 200.0), alpha=0.0)]
+    bh = host.submit_many(specs)
+    bd = dev.submit_many(specs)
+    assert len(bh) == len(bd) == 3
+    for rh, rd in zip(bh, bd):
+        np.testing.assert_allclose(rh.beta, rd.beta, rtol=1e-5, atol=1e-5)
+    assert bd.backend == "device"
+    assert bd.merge_device_ms > 0.0
+    assert bd.cache_hits + bd.cache_misses > 0
+
+
+def test_device_union_predicate_matches_host(train):
+    host, dev = _sessions(train, "vb")
+    spec = QuerySpec(sigma=[Interval(0.0, 100.0), Interval(200.0, 300.0)],
+                     alpha=1.0)
+    np.testing.assert_allclose(host.submit(spec).beta, dev.submit(spec).beta,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_device_trains_gaps_with_kernel_estep(train):
+    """Fresh-gap VB training on the device backend goes through the
+    fused E-step kernel and still yields a finite, normalized beta."""
+    dev = MLegoSession(train, CFG, kind="vb", backend="device")
+    rep = dev.submit(QuerySpec(sigma=Interval(0.0, 150.0)))
+    assert rep.n_trained_tokens > 0
+    assert np.isfinite(rep.beta).all()
+    np.testing.assert_allclose(rep.beta.sum(1), 1.0, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# device cache semantics
+# ---------------------------------------------------------------------------
+
+def test_cache_hits_on_repeated_query(train):
+    _, dev = _sessions(train, "vb")
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    first = dev.submit(spec)
+    assert first.cache_misses == 3 and first.cache_hits == 0
+    second = dev.submit(spec)
+    assert second.cache_hits == 3 and second.cache_misses == 0
+    assert dev.backend.stats.hit_rate == pytest.approx(0.5)
+
+
+def test_cache_invalidated_on_store_remove(train):
+    _, dev = _sessions(train, "vb")
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    rep = dev.submit(spec)
+    mid = rep.model_ids[0]
+    cache = dev.backend.cache
+    assert mid in cache
+    dev.store.remove(mid)
+    assert mid not in cache, "remove must invalidate the device copy"
+    assert dev.backend.stats.cache_invalidations >= 1
+    # the surviving entries are untouched
+    assert len(cache) == 2
+
+
+def test_cache_respects_capacity_with_lru_order():
+    backend = DeviceBackend(capacity=2)
+    models = [
+        MaterializedModel(i, Interval(float(i), float(i + 1)), 10, 100, "vb",
+                          {"lam": RNG.gamma(1.0, 1.0, (4, 64))
+                           .astype(np.float32)})
+        for i in range(3)
+    ]
+    backend.merge(models, "vb", CFG)
+    assert len(backend.cache) == 2
+    assert backend.stats.cache_evictions == 1
+    # ids 1, 2 were touched after 0 -> 0 is the evictee
+    assert 0 not in backend.cache
+    assert 1 in backend.cache and 2 in backend.cache
+    # re-merging the cached pair is all hits
+    before = backend.stats
+    backend.merge(models[1:], "vb", CFG)
+    d = backend.stats.delta(before)
+    assert d.cache_hits == 2 and d.cache_misses == 0
+
+
+def test_volatile_models_bypass_cache():
+    backend = DeviceBackend(capacity=8)
+    vol = MaterializedModel(-1, Interval(0.0, 1.0), 10, 100, "vb",
+                            {"lam": RNG.gamma(1.0, 1.0, (4, 64))
+                             .astype(np.float32)})
+    backend.merge([vol], "vb", CFG)
+    assert len(backend.cache) == 0, "id -1 can never be invalidated"
+    assert backend.stats.cache_misses == 1
+
+
+def test_rebinding_store_clears_cache(train):
+    _, dev = _sessions(train, "vb")
+    dev.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0))
+    assert len(dev.backend.cache) == 3
+    dev.backend.bind_store(ModelStore())
+    assert len(dev.backend.cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# backend selection / fallbacks
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        QuerySpec(sigma=Interval(0.0, 10.0), backend="gpu-magic")
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        make_backend("bogus")
+
+
+def test_spec_backend_overrides_session_default(train):
+    host, _ = _sessions(train, "vb")
+    rep = host.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0,
+                                backend="device"))
+    assert rep.backend == "device"
+    assert rep.cache_misses > 0
+    # the per-session device backend instance is reused across queries
+    rep2 = host.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0,
+                                 backend="device"))
+    assert rep2.cache_hits > 0
+
+
+def test_batch_rejects_mixed_backends(train):
+    host, _ = _sessions(train, "vb")
+    with pytest.raises(ValueError, match="one execution backend"):
+        host.submit_many([
+            QuerySpec(sigma=Interval(0.0, 100.0), backend="host"),
+            QuerySpec(sigma=Interval(0.0, 100.0), backend="device")])
+
+
+def test_custom_merge_callable_falls_back_to_host(train):
+    """A kind with a custom merge *callable* has no device form; the
+    backend must route it through the host merge (counted once per
+    merge, in both submit and submit_many)."""
+    from repro.core.merge import merge_vb
+    from repro.core.lda import topics_from_vb
+
+    def my_merge(models, cfg):
+        return topics_from_vb(merge_vb(models, cfg))
+
+    register_trainer("custom_vb", get_trainer("vb"), merge=my_merge)
+    try:
+        store = _seed_store("custom_vb", [0.0, 150.0, 300.0])
+        dev = MLegoSession(train, CFG, store=store, kind="custom_vb",
+                           backend="device")
+        rep = dev.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0))
+        assert np.isfinite(rep.beta).all()
+        assert dev.backend.stats.host_fallbacks == 1
+        assert rep.merge_device_ms == 0.0
+        bd = dev.submit_many([QuerySpec(sigma=Interval(0.0, 150.0)),
+                              QuerySpec(sigma=Interval(150.0, 300.0))])
+        assert len(bd) == 2
+        assert dev.backend.stats.host_fallbacks == 3, \
+            "exactly one fallback per merge, not double-counted"
+    finally:
+        from repro.api import trainers as tr
+        tr._TRAINERS.pop("custom_vb", None)
+        tr._MERGES.pop("custom_vb", None)
+
+
+def test_custom_kind_on_builtin_family_gets_device_merge(train):
+    """merge="vb" means Alg. 1 over theta["lam"] — the device form
+    applies to the registered family, not the kind name."""
+    register_trainer("my_vb", get_trainer("vb"), merge="vb")
+    try:
+        store = _seed_store("my_vb", [0.0, 150.0, 300.0])
+        host = MLegoSession(train, CFG, store=store, kind="my_vb",
+                            backend="host")
+        dev = MLegoSession(train, CFG, store=store, kind="my_vb",
+                           backend="device")
+        spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+        rh, rd = host.submit(spec), dev.submit(spec)
+        np.testing.assert_allclose(rh.beta, rd.beta, rtol=1e-5, atol=1e-5)
+        assert dev.backend.stats.host_fallbacks == 0
+        assert rd.merge_device_ms > 0.0
+    finally:
+        from repro.api import trainers as tr
+        tr._TRAINERS.pop("my_vb", None)
+        tr._MERGES.pop("my_vb", None)
+
+
+def test_device_backend_cannot_be_shared_across_stores(train):
+    """Two stores both allocate model id 0 — a shared device cache
+    would silently serve one session's parameters to the other."""
+    backend = DeviceBackend()
+    MLegoSession(train, CFG, store=_seed_store("vb", [0.0, 300.0]),
+                 kind="vb", backend=backend)
+    with pytest.raises(ValueError, match="one backend per session"):
+        MLegoSession(train, CFG, store=_seed_store("vb", [0.0, 300.0]),
+                     kind="vb", backend=backend)
+
+
+def test_store_swap_rebinds_backend_cache(train):
+    _, dev = _sessions(train, "vb")
+    dev.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0))
+    assert len(dev.backend.cache) == 3
+    dev.store = _seed_store("vb", [0.0, 300.0])
+    assert len(dev.backend.cache) == 0, "swap must clear the device cache"
+    rep = dev.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0))
+    assert rep.cache_misses == 1      # the new store's single model
+    # invalidation now tracks the new store
+    dev.store.remove(rep.model_ids[0])
+    assert rep.model_ids[0] not in dev.backend.cache
+
+
+def test_host_backend_is_default_and_untouched(train):
+    host, _ = _sessions(train, "vb")
+    rep = host.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0))
+    assert rep.backend == "host"
+    assert rep.merge_device_ms == 0.0
+    assert rep.cache_hits == rep.cache_misses == 0
+    assert isinstance(host.backend, HostBackend)
+
+
+# ---------------------------------------------------------------------------
+# store change notifications (the invalidation transport)
+# ---------------------------------------------------------------------------
+
+def test_store_notifies_listeners():
+    store = ModelStore()
+    events = []
+    store.subscribe(lambda ev, mid: events.append((ev, mid)))
+    m = store.add(Interval(0.0, 1.0), 1, 10, "vb",
+                  {"lam": np.ones((2, 4), np.float32)})
+    store.remove(m.model_id)
+    store.remove(m.model_id)        # absent: no duplicate event
+    assert events == [("add", m.model_id), ("remove", m.model_id)]
+    store.unsubscribe(store._listeners[0])
+    store.add(Interval(1.0, 2.0), 1, 10, "vb",
+              {"lam": np.ones((2, 4), np.float32)})
+    assert len(events) == 2
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode plumbing (the MLEGO_KERNEL_INTERPRET CI switch)
+# ---------------------------------------------------------------------------
+
+def test_kernel_interpret_env_forces_interpret(monkeypatch):
+    from repro.kernels import common
+    monkeypatch.setenv(common.INTERPRET_ENV, "1")
+    assert common.default_interpret(None) is True
+    assert common.default_interpret(False) is False   # explicit wins
+    monkeypatch.setenv(common.INTERPRET_ENV, "0")
+    assert common.default_interpret(None) == (not common.on_tpu())

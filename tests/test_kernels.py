@@ -13,7 +13,11 @@ RNG = np.random.default_rng(42)
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("d,v,k", [(32, 128, 16), (65, 200, 100),
-                                   (128, 384, 128), (8, 64, 10)])
+                                   (128, 384, 128), (8, 64, 10),
+                                   # D > block_d and not a block multiple:
+                                   # regression for the ragged boundary
+                                   # block reading garbage into sstats
+                                   (135, 150, 6), (300, 192, 12)])
 def test_vb_estep_kernel(d, v, k):
     from repro.kernels.vb_estep.ops import vb_estep
     from repro.kernels.vb_estep.ref import vb_estep_ref
@@ -40,6 +44,22 @@ def test_merge_topics_kernel(n, k, v, dtype):
     w = jnp.asarray(RNG.uniform(0.2, 2.0, n), jnp.float32)
     out = merge_topics(st, w, bias=0.05, base=0.05, interpret=True)
     ref = merge_topics_ref(st, w, 0.05, 0.05)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,n,k,v", [(1, 3, 16, 64), (4, 5, 100, 300),
+                                     (3, 1, 24, 128)])
+def test_merge_topics_batched_kernel(b, n, k, v):
+    """One launch merging b independent plans, incl. zero-weight pad
+    rows (how ragged submit_many batches share a launch)."""
+    from repro.kernels.merge_topics.ops import merge_topics_batch
+    from repro.kernels.merge_topics.ref import merge_topics_batched_ref
+    st = jnp.asarray(RNG.normal(size=(b, n, k, v)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.2, 2.0, (b, n)), jnp.float32)
+    if n > 1:
+        w = w.at[0, -1:].set(0.0)        # simulate a ragged batch pad
+    out = merge_topics_batch(st, w, bias=0.05, base=0.05, interpret=True)
+    ref = merge_topics_batched_ref(st, w, 0.05, 0.05)
     np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
 
 
