@@ -57,13 +57,14 @@ def run(batch_sizes=(2, 3, 4, 6), models_per=(8, 16, 24), seed=0):
                     oracle_t = o.total_time
                 except ValueError:
                     pass
-            rows.append((b, n_models, h.elapsed_s, h.benefit,
+            rows.append((b, n_models, h.elapsed_s, h.n_scored, h.benefit,
                          h.total_time, h.naive_time, oracle_t))
     return rows
 
 
 def main():
-    print("batch,models,search_s,benefit,total_time,naive_time,oracle_time")
+    print("batch,models,search_s,n_scored,benefit,total_time,naive_time,"
+          "oracle_time")
     for r in run():
         print(",".join(f"{x:.6f}" if isinstance(x, float) else str(x)
                        for x in r))

@@ -121,8 +121,8 @@ def main() -> None:
     if want("batch_opt"):
         _section("batch_opt (Fig. 13/14)")
         from benchmarks import batch_opt_bench
-        print("batch,models,search_s,benefit,total_time,naive_time,"
-              "oracle_time")
+        print("batch,models,search_s,n_scored,benefit,total_time,"
+              "naive_time,oracle_time")
         bs = (2, 3) if args.quick else (2, 3, 4, 6)
         mp = (8, 16) if args.quick else (8, 16, 24)
         rows = list(batch_opt_bench.run(batch_sizes=bs, models_per=mp))
@@ -136,23 +136,37 @@ def main() -> None:
         from benchmarks import session_bench
         n_docs = 600 if args.quick else 1200
         rows, batch_row = session_bench.run(n_docs=n_docs, quick=args.quick)
-        print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens")
-        for label, s, t, m, nr, nt in rows:
-            print(f"{label},{s:.4f},{t:.4f},{m:.4f},{nr},{nt}")
+        print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens,"
+              "plan_cached")
+        for label, s, t, m, nr, nt, pc in rows:
+            print(f"{label},{s:.4f},{t:.4f},{m:.4f},{nr},{nt},{pc}")
         print("# batch: shared_search_s,shared_train_s,merge_s,benefit,n")
         print("batch," + ",".join(
             f"{v:.4f}" if isinstance(v, float) else str(v)
             for v in batch_row))
         dev_rows, hit_rate = session_bench.run_device_cache(
             n_docs=n_docs, quick=args.quick)
-        print("label,cache_hits,cache_misses,merge_device_ms,merge_s")
-        for label, h, mi, dms, ms in dev_rows:
-            print(f"{label},{h},{mi},{dms:.3f},{ms:.4f}")
+        print("label,cache_hits,cache_misses,merge_device_ms,merge_s,"
+              "plan_cached")
+        for label, h, mi, dms, ms, pc in dev_rows:
+            print(f"{label},{h},{mi},{dms:.3f},{ms:.4f},{pc}")
         print(f"# device cache hit-rate {hit_rate:.3f}")
+        prov_rows = session_bench.run_providers(
+            n_docs=n_docs, quick=args.quick)
+        print("provider,mean_submit_s,total_s,plan_cache_hits,"
+              "device_hit_rate")
+        for provider, mean_s, total, hits, rate in prov_rows:
+            print(f"{provider},{mean_s:.4f},{total:.4f},{hits},{rate:.3f}")
+        pad = session_bench.run_padding(n_docs=n_docs, quick=args.quick)
+        print(f"# padding: bucketed {pad['pad_rows_bucketed']} rows vs "
+              f"widest {pad['pad_rows_widest']} rows "
+              f"(parts {pad['part_counts']})")
         out["session"] = {"rows": [list(r) for r in rows],
                           "batch": list(batch_row),
                           "device_cache": [list(r) for r in dev_rows],
-                          "device_cache_hit_rate": hit_rate}
+                          "device_cache_hit_rate": hit_rate,
+                          "providers": [list(r) for r in prov_rows],
+                          "padding": pad}
 
     if want("kernels"):
         _section("kernels (interpret-mode parity timings)")

@@ -8,13 +8,24 @@ per-query latencies from the individual reports.
 
 The device-backend pass replays a repeated-query workload against the
 Pallas execution backend and reports the device cache hit rate plus
-the fused-launch wall time (``merge_device_ms``) — the counters the
-tentpole acceptance criteria track.
+the fused-launch wall time (``merge_device_ms``).
+
+``run_providers`` replays one repeated interactive workload twice on
+the device backend — once under the analytic cost provider, once under
+the calibrated provider — and reports measured per-submit latency and
+plan-cache hits for each (the tentpole acceptance comparison).
+
+``run_padding`` submits a deliberately ragged batch and compares the
+zero-weight padding rows of the size-bucketed launches against what
+the old pad-to-global-widest single launch would have carried.
 """
 from __future__ import annotations
 
+import time
+
 from benchmarks.common import bench_cfg, bench_world
 from repro.api import Interval, MLegoSession, QuerySpec
+from repro.core.plan_ir import pad_rows_widest
 
 
 def run(n_docs=1200, seed=0, quick=False, backend="host"):
@@ -27,6 +38,7 @@ def run(n_docs=1200, seed=0, quick=False, backend="host"):
     sequence = [
         ("cold_full", QuerySpec(sigma=Interval(0.0, hi), alpha=0.0)),
         ("warm_full", QuerySpec(sigma=Interval(0.0, hi), alpha=0.0)),
+        ("warm_full_again", QuerySpec(sigma=Interval(0.0, hi), alpha=0.0)),
         ("warm_half", QuerySpec(sigma=Interval(0.0, hi / 2), alpha=0.5)),
         ("union", QuerySpec(sigma=[Interval(0.0, hi / 4),
                                    Interval(hi / 2, 0.75 * hi)], alpha=0.5)),
@@ -34,7 +46,8 @@ def run(n_docs=1200, seed=0, quick=False, backend="host"):
     for label, spec in sequence:
         rep = session.submit(spec)
         rows.append((label, rep.search_s, rep.train_s, rep.merge_s,
-                     rep.n_reused, rep.n_trained_tokens))
+                     rep.n_reused, rep.n_trained_tokens,
+                     int(rep.plan_cached)))
 
     batch = session.submit_many([
         QuerySpec(sigma=Interval(0.0, 0.6 * hi)),
@@ -51,9 +64,10 @@ def run_device_cache(n_docs=1200, seed=0, quick=False, repeats=3):
 
     Warms the store once, then replays the same full-range query
     ``repeats`` times: the first replay uploads every plan model into
-    the device cache, the rest must hit.  Returns per-replay rows
-    (hits, misses, merge_device_ms) plus the backend's cumulative
-    hit rate.
+    the device cache, the rest must hit (and, from the second replay
+    on, skip plan search via the session plan cache).  Returns
+    per-replay rows (hits, misses, merge_device_ms, plan_cached) plus
+    the backend's cumulative hit rate.
     """
     cfg = bench_cfg(quick)
     train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
@@ -70,23 +84,89 @@ def run_device_cache(n_docs=1200, seed=0, quick=False, repeats=3):
     for i in range(repeats):
         rep = session.submit(spec)
         rows.append((f"replay_{i}", rep.cache_hits, rep.cache_misses,
-                     rep.merge_device_ms, rep.merge_s))
+                     rep.merge_device_ms, rep.merge_s,
+                     int(rep.plan_cached)))
     return rows, session.backend.stats.hit_rate
+
+
+def run_providers(n_docs=1200, seed=0, quick=False, repeats=4):
+    """Analytic vs calibrated cost provider on the device backend.
+
+    Identical warmed stores and workloads; the calibrated session
+    learns κ/t_m/cache prices from its own replays.  Rows:
+    (provider, mean_submit_s, total_submit_s, plan_cache_hits,
+    device_hit_rate).
+    """
+    cfg = bench_cfg(quick)
+    rows = []
+    for provider in ("analytic", "calibrated"):
+        train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+        hi = float(train.attr[-1]) + 1.0
+        session = MLegoSession(train, cfg, kind="vb", backend="device",
+                               cost=provider)
+        edges = [i * hi / 4 for i in range(5)]
+        for lo, hi_e in zip(edges, edges[1:]):
+            session.train_range(lo, hi_e)
+        specs = [QuerySpec(sigma=Interval(0.0, hi), alpha=1.0),
+                 QuerySpec(sigma=Interval(0.0, hi / 2), alpha=1.0)]
+        t0 = time.perf_counter()
+        n = 0
+        for _ in range(repeats):
+            for spec in specs:
+                session.submit(spec)
+                n += 1
+        total = time.perf_counter() - t0
+        rows.append((provider, total / n, total,
+                     session.plan_cache.hits,
+                     session.backend.stats.hit_rate))
+    return rows
+
+
+def run_padding(n_docs=1200, seed=0, quick=False):
+    """Ragged submit_many: bucketed pad rows vs the old widest-n' pad."""
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    session = MLegoSession(train, cfg, kind="vb", backend="device")
+    # 8 narrow tiles: the full-range query merges 8 parts, the narrow
+    # ones 1 each — maximally ragged
+    edges = [i * hi / 8 for i in range(9)]
+    for lo, hi_e in zip(edges, edges[1:]):
+        session.train_range(lo, hi_e)
+    specs = [QuerySpec(sigma=Interval(0.0, hi))] + [
+        QuerySpec(sigma=Interval(edges[i], edges[i + 1]))
+        for i in range(4)]
+    batch = session.submit_many(specs)
+    counts = [r.n_merged for r in batch]
+    old_pad = pad_rows_widest(counts)
+    return {
+        "part_counts": counts,
+        "pad_rows_bucketed": batch.pad_rows,
+        "pad_rows_widest": old_pad,
+        "merge_device_ms": batch.merge_device_ms,
+    }
 
 
 def main():
     rows, batch_row = run()
-    print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens")
-    for label, s, t, m, nr, nt in rows:
-        print(f"{label},{s:.4f},{t:.4f},{m:.4f},{nr},{nt}")
+    print("label,search_s,train_s,merge_s,n_reused,n_trained_tokens,"
+          "plan_cached")
+    for label, s, t, m, nr, nt, pc in rows:
+        print(f"{label},{s:.4f},{t:.4f},{m:.4f},{nr},{nt},{pc}")
     print("# batch: shared_search_s,shared_train_s,merge_s,benefit,n")
     print("batch," + ",".join(f"{v:.4f}" if isinstance(v, float) else str(v)
                               for v in batch_row))
     dev_rows, hit_rate = run_device_cache()
-    print("label,cache_hits,cache_misses,merge_device_ms,merge_s")
-    for label, h, mi, dms, ms in dev_rows:
-        print(f"{label},{h},{mi},{dms:.3f},{ms:.4f}")
+    print("label,cache_hits,cache_misses,merge_device_ms,merge_s,plan_cached")
+    for label, h, mi, dms, ms, pc in dev_rows:
+        print(f"{label},{h},{mi},{dms:.3f},{ms:.4f},{pc}")
     print(f"# device cache hit-rate {hit_rate:.3f}")
+    print("provider,mean_submit_s,total_s,plan_cache_hits,device_hit_rate")
+    for provider, mean_s, total, hits, rate in run_providers():
+        print(f"{provider},{mean_s:.4f},{total:.4f},{hits},{rate:.3f}")
+    pad = run_padding()
+    print(f"# padding: bucketed {pad['pad_rows_bucketed']} rows vs widest "
+          f"{pad['pad_rows_widest']} rows (parts {pad['part_counts']})")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ from repro.api.backend import (
     HostBackend,
     make_backend,
 )
+from repro.api.planner import PlanCache, Planner
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.session import MLegoSession
 from repro.api.spec import (
@@ -32,16 +33,27 @@ from repro.api.trainers import (
     register_trainer,
     resolve_kind,
 )
+from repro.core.cost import CalibratedCostModel, CostModel, CostProvider
+from repro.core.plan_ir import FetchStep, MergeStep, Plan, TrainGapStep
 from repro.core.plans import Interval
 
 __all__ = [
     "BACKEND_NAMES",
     "BackendStats",
     "BatchReport",
+    "CalibratedCostModel",
+    "CostModel",
+    "CostProvider",
     "DeviceBackend",
     "ExecutionBackend",
+    "FetchStep",
     "HostBackend",
     "Interval",
+    "MergeStep",
+    "Plan",
+    "PlanCache",
+    "Planner",
+    "TrainGapStep",
     "make_backend",
     "MATERIALIZE_POLICIES",
     "MLegoSession",

@@ -5,12 +5,14 @@ a plan's materialized models (Alg. 1/2 — pure bandwidth) and training
 scratch gaps (the VB E-step — pure MXU).  ``HostBackend`` runs both on
 host NumPy exactly as the seed repo did and is the parity reference.
 ``DeviceBackend`` keeps hot model parameters device-resident in an
-LRU cache keyed by store model id (invalidated through the store's
-change notifications), executes merges through the fused Pallas
-``merge_topics`` kernel — one padded ``(n, K, V)`` launch per query,
-and one ``(b, n', K, V)`` launch for a whole ``submit_many`` batch —
-and routes scratch-gap VB training through the fused E-step kernel
-(``vb_estep(..., use_kernel=True)``).
+LRU cache keyed by store model id (count- **and** byte-bounded,
+invalidated through the store's change notifications), executes merges
+through the fused Pallas ``merge_topics`` kernel — one padded
+``(n, K, V)`` launch per query, and *size-bucketed* ``(b, n', K, V)``
+launches for a ``submit_many`` batch (plans grouped by power-of-two
+part count; rows pad only to their bucket's widest plan instead of the
+batch-global widest) — and routes scratch-gap VB training through the
+fused E-step kernel (``vb_estep(..., use_kernel=True)``).
 
 On CPU hosts the kernels execute in Pallas interpret mode (the CI
 correctness path); on TPU they compile to Mosaic.  Selection flows
@@ -38,14 +40,22 @@ from repro.core.lda import MaterializedModel
 from repro.core.merge import device_merge_params
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus, doc_term_matrix
-from repro.kernels.merge_topics.ops import merge_topics, merge_topics_batch
+from repro.kernels.merge_topics.ops import (
+    merge_topics,
+    merge_topics_bucketed,
+)
 
 BACKEND_NAMES = ("host", "device")
 
 
 @dataclass(frozen=True)
 class BackendStats:
-    """Monotonic counters; diff two snapshots for per-query attribution."""
+    """Monotonic counters; diff two snapshots for per-query attribution.
+
+    ``cache_resident_bytes`` is a *gauge* (current device-cache
+    residency), not a counter — ``delta`` carries the newer snapshot's
+    value through instead of differencing it.
+    """
 
     cache_hits: int = 0
     cache_misses: int = 0
@@ -55,6 +65,8 @@ class BackendStats:
     device_launches: int = 0
     host_fallbacks: int = 0
     merge_device_ms: float = 0.0
+    pad_rows: int = 0                 # zero-weight rows in batched launches
+    cache_resident_bytes: int = 0     # gauge: bytes resident right now
 
     def delta(self, since: "BackendStats") -> "BackendStats":
         return BackendStats(
@@ -66,6 +78,8 @@ class BackendStats:
             self.device_launches - since.device_launches,
             self.host_fallbacks - since.host_fallbacks,
             self.merge_device_ms - since.merge_device_ms,
+            self.pad_rows - since.pad_rows,
+            self.cache_resident_bytes,
         )
 
     @property
@@ -127,23 +141,46 @@ class HostBackend(ExecutionBackend):
 class _DeviceModelCache:
     """LRU of device-resident merge statistics, keyed by store model id.
 
-    Volatile models (id −1, never in the store) pass through without
-    being cached — there is no id under which an invalidation for them
-    could ever arrive.
+    Bounded two ways: ``capacity`` caps the entry count and
+    ``max_bytes`` (optional) caps the resident parameter bytes — LRU
+    entries are evicted until both bounds hold, so one giant model
+    can't silently pin the whole HBM budget the way a count bound
+    allows.  Volatile models (id −1, never in the store) pass through
+    without being cached — there is no id under which an invalidation
+    for them could ever arrive.
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, max_bytes: Optional[int] = None):
         if capacity < 1:
             raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.capacity = capacity
+        self.max_bytes = max_bytes
         self._entries: "OrderedDict[int, jax.Array]" = OrderedDict()
+        self.resident_bytes = 0
         self.hits = self.misses = self.evictions = self.invalidations = 0
+        # residency epoch: bumps whenever the resident *set* changes
+        # (insert/evict/invalidate/clear) — the session plan cache keys
+        # on it for providers that price fetches by cache state
+        self.epoch = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def __contains__(self, model_id: int) -> bool:
         return model_id in self._entries
+
+    def _over_budget(self) -> bool:
+        return (len(self._entries) > self.capacity
+                or (self.max_bytes is not None
+                    and self.resident_bytes > self.max_bytes))
+
+    def _evict_lru(self) -> None:
+        _, arr = self._entries.popitem(last=False)
+        self.resident_bytes -= int(arr.nbytes)
+        self.evictions += 1
+        self.epoch += 1
 
     def get(self, model: MaterializedModel, stat_key: str) -> jax.Array:
         mid = model.model_id
@@ -155,23 +192,33 @@ class _DeviceModelCache:
         arr = jnp.asarray(model.theta[stat_key], jnp.float32)
         if mid >= 0:
             self._entries[mid] = arr
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
-                self.evictions += 1
+            self.resident_bytes += int(arr.nbytes)
+            self.epoch += 1
+            while self._entries and self._over_budget():
+                self._evict_lru()
         return arr
 
     def invalidate(self, model_id: int) -> None:
-        if self._entries.pop(model_id, None) is not None:
+        arr = self._entries.pop(model_id, None)
+        if arr is not None:
+            self.resident_bytes -= int(arr.nbytes)
             self.invalidations += 1
+            self.epoch += 1
 
     def clear(self) -> None:
+        if self._entries:
+            self.epoch += 1
         self._entries.clear()
+        self.resident_bytes = 0
 
 
 class DeviceBackend(ExecutionBackend):
     """Device-resident merges + kernel E-step training.
 
     capacity   : max cached models (LRU-evicted beyond it)
+    max_bytes  : optional cap on resident parameter bytes (evicts LRU
+                 until under; a model larger than the cap passes
+                 through uncached)
     interpret  : Pallas interpret override (None = auto: interpret off
                  TPU or when MLEGO_KERNEL_INTERPRET=1)
     kernel_estep : route "vb" gap training through the fused E-step
@@ -182,10 +229,11 @@ class DeviceBackend(ExecutionBackend):
     name = "device"
 
     def __init__(self, capacity: int = 64, *,
+                 max_bytes: Optional[int] = None,
                  interpret: Optional[bool] = None,
                  kernel_estep: bool = True):
         super().__init__()
-        self.cache = _DeviceModelCache(capacity)
+        self.cache = _DeviceModelCache(capacity, max_bytes)
         self.interpret = interpret
         self.kernel_estep = kernel_estep
         self._store: Optional[ModelStore] = None
@@ -229,6 +277,13 @@ class DeviceBackend(ExecutionBackend):
         return finish(np.asarray(merged))
 
     def merge_many(self, part_lists, kind, cfg):
+        """§V.C batch merge stage: size-bucketed batched launches.
+
+        Plans are grouped into power-of-two size buckets and each
+        bucket merges in one ``(b, n_bucket, K, V)`` launch, padding
+        rows only to the bucket's widest plan — total zero-weight
+        padding is pointwise ≤ the old pad-to-global-widest single
+        launch (tracked in ``stats.pad_rows``)."""
         fam = merge_family_name(kind)
         if fam is None:
             # per-list self.merge counts the merges and fallbacks
@@ -237,25 +292,20 @@ class DeviceBackend(ExecutionBackend):
             return [self.merge(part_lists[0], kind, cfg)]
         stat_key, bias, base, finish = device_merge_params(fam, cfg)
         t0 = time.perf_counter()
-        n_max = max(len(p) for p in part_lists)
-        rows, weights = [], []
+        stats_list, weights_list = [], []
         for parts in part_lists:
-            stack = jnp.stack([self.cache.get(m, stat_key) for m in parts])
-            pad = n_max - len(parts)
-            if pad:
-                # zero-weight rows: 0·(0 − base) contributes nothing
-                stack = jnp.pad(stack, ((0, pad), (0, 0), (0, 0)))
-            rows.append(stack)
-            weights.append([1.0] * len(parts) + [0.0] * pad)
-        stats = jnp.stack(rows)                       # (b, n_max, K, V)
-        w = jnp.asarray(weights, jnp.float32)         # (b, n_max)
-        merged = merge_topics_batch(stats, w, bias=bias, base=base,
-                                    interpret=self.interpret)
-        merged.block_until_ready()
+            stats_list.append(
+                jnp.stack([self.cache.get(m, stat_key) for m in parts]))
+            weights_list.append(jnp.ones((len(parts),), jnp.float32))
+        merged, pad_rows, launches = merge_topics_bucketed(
+            stats_list, weights_list, bias=bias, base=base,
+            interpret=self.interpret)
+        for row in merged:
+            row.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         self._sync_cache_counters()
-        self._count(merges=len(part_lists), device_launches=1,
-                    merge_device_ms=ms)
+        self._count(merges=len(part_lists), device_launches=launches,
+                    merge_device_ms=ms, pad_rows=pad_rows)
         return [finish(np.asarray(row)) for row in merged]
 
     def _sync_cache_counters(self) -> None:
@@ -263,7 +313,8 @@ class DeviceBackend(ExecutionBackend):
         self.stats = replace(self.stats, cache_hits=c.hits,
                              cache_misses=c.misses,
                              cache_evictions=c.evictions,
-                             cache_invalidations=c.invalidations)
+                             cache_invalidations=c.invalidations,
+                             cache_resident_bytes=c.resident_bytes)
 
     # -- training --------------------------------------------------------
     def trainer(self, kind: str) -> TrainerFn:

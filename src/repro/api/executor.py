@@ -12,10 +12,18 @@ Both stages execute through a pluggable ``ExecutionBackend``
 semantics; the device backend runs merges as fused Pallas launches
 over a device-resident model cache.  ``backend=None`` falls back to
 host semantics so direct callers (tests, schedulers) need no wiring.
+
+The executor consumes the planner's **Plan IR** (``repro.core.plan_ir``):
+``gather`` walks a ``Plan``'s ``FetchStep``/``TrainGapStep`` sequence —
+resolving fetched model ids against the store and training each gap —
+and returns the homogeneous part list the ``MergeStep`` combines,
+plus per-gap (tokens, seconds) training observations for cost-provider
+calibration.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -23,6 +31,7 @@ from repro.api.backend import ExecutionBackend, HostBackend
 from repro.api.trainers import get_trainer, resolve_kind
 from repro.configs.lda_default import LDAConfig
 from repro.core.lda import MaterializedModel
+from repro.core.plan_ir import Plan
 from repro.core.plans import Interval
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
@@ -68,6 +77,36 @@ class Executor:
                                   kind, theta)
         return MaterializedModel(-1, Interval(lo, hi), sub.n_docs,
                                  sub.n_tokens, kind, theta)
+
+    def gather(self, plan: Plan, kind: str, *, persist: bool = True,
+               backend: Optional[ExecutionBackend] = None
+               ) -> Tuple[List[MaterializedModel],
+                          List[MaterializedModel],
+                          int, List[Tuple[int, float]]]:
+        """Consume one Plan IR's fetch + train-gap steps.
+
+        Returns ``(parts, fresh, n_trained_tokens, train_obs)``:
+        ``parts`` is everything the plan's merge step will combine —
+        fetched store models (resolved by id) followed by freshly
+        trained gap models — ``fresh`` the trained subset, and
+        ``train_obs`` one measured ``(tokens, seconds)`` sample per
+        trained gap (the calibrated cost provider's κ input).
+        """
+        parts: List[MaterializedModel] = [
+            self.store.get(f.model_id) for f in plan.fetches]
+        fresh: List[MaterializedModel] = []
+        n_tok = 0
+        obs: List[Tuple[int, float]] = []
+        for g in plan.gaps:
+            t0 = time.perf_counter()
+            m = self.train_gap(g.gap.lo, g.gap.hi, kind,
+                               persist=persist, backend=backend)
+            if m is not None:
+                fresh.append(m)
+                parts.append(m)
+                n_tok += m.n_tokens
+                obs.append((m.n_tokens, time.perf_counter() - t0))
+        return parts, fresh, n_tok, obs
 
     def merge(self, parts: Sequence[MaterializedModel],
               backend: Optional[ExecutionBackend] = None) -> np.ndarray:

@@ -3,20 +3,94 @@
 Thin, stateful-only-in-inputs wrapper over the §V.B searchers and the
 §V.C Alg. 4 batch optimizer, so the session (and any future scheduler)
 talks to one object instead of reaching into ``repro.core.search`` /
-``repro.core.batch_opt`` directly.
+``repro.core.batch_opt`` directly.  Both paths return results carrying
+the lowered **Plan IR** the executor consumes.
+
+``PlanCache`` is the session-level memo over ``Planner.plan``:
+interactive exploration replays near-identical queries (pan/zoom over
+σ, re-render after a UI tweak), and for those the search is pure —
+same predicate, same model set, same α, same prices ⇒ same plan.
+Entries are keyed by (normalized σ, model-set fingerprint, α, trainer
+kind, search method, backend, cost-provider version) and the whole
+cache drops on any ``ModelStore`` mutation through the store's
+``subscribe`` channel — the same transport the device backend's model
+cache invalidates over.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+import time
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
 
-from repro.core.batch_opt import BatchResult, batch_optimize
-from repro.core.cost import CostModel
+from repro.core.batch_opt import BatchResult, batch_optimize, processing_order
+from repro.core.cost import CostProvider
 from repro.core.plans import Interval, subtract
 from repro.core.search import SEARCHERS, SearchResult
 
 
+class PlanCache:
+    """Store-subscribed memo of ``SearchResult``s, LRU-bounded.
+
+    A fingerprint of the usable model set rides in every key, so even
+    a stale entry could never be served for a mutated store; clearing
+    on the subscribe channel additionally keeps the cache from filling
+    with unreachable generations.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[Tuple, SearchResult]" = OrderedDict()
+        self._store = None
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # --- store subscription -------------------------------------------------
+    def bind_store(self, store) -> None:
+        if store is self._store:
+            return
+        if self._store is not None:
+            self._store.unsubscribe(self._on_store_event)
+        self._store = store
+        self.clear()
+        if store is not None:
+            store.subscribe(self._on_store_event)
+
+    def _on_store_event(self, event: str, model_id: int) -> None:
+        if self._entries:
+            self.invalidations += 1
+        self.clear()
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    # --- lookup ---------------------------------------------------------------
+    @staticmethod
+    def fingerprint(models: Sequence) -> int:
+        """Value identity of a model set (ids + ranges)."""
+        return hash(tuple(sorted(
+            (m.model_id, m.o.lo, m.o.hi) for m in models)))
+
+    def get(self, key: Tuple) -> Optional[SearchResult]:
+        res = self._entries.get(key)
+        if res is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return res
+
+    def put(self, key: Tuple, res: SearchResult) -> None:
+        self._entries[key] = res
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+
 class Planner:
-    def __init__(self, index, cost: CostModel):
+    def __init__(self, index, cost: CostProvider):
         self.index = index
         self.cost = cost
 
@@ -30,10 +104,20 @@ class Planner:
                              f"one of {sorted(SEARCHERS)}") from None
         return searcher(models, sigma, self.index, self.cost, alpha)
 
-    def plan_batch(self, models: Sequence,
-                   sigmas: Sequence[Interval]) -> BatchResult:
-        """Alg. 4 joint plan combination for a batch of intervals."""
-        return batch_optimize(models, list(sigmas), self.index, self.cost)
+    def plan_batch(self, models: Sequence, sigmas: Sequence[Interval],
+                   alpha: float = 0.0, *, reorder: bool = True
+                   ) -> BatchResult:
+        """Alg. 4 joint plan combination for a batch of intervals.
+
+        ``alpha`` seeds the initial per-query plans (threaded from the
+        specs; Alg. 4's joint pruning itself stays time-cost based).
+        ``reorder`` applies the §V.C processing order (widest query
+        first); False preserves submission order.
+        """
+        sigmas = list(sigmas)
+        order = processing_order(sigmas, self.index) if reorder else None
+        return batch_optimize(models, sigmas, self.index, self.cost,
+                              alpha=alpha, order=order)
 
     @staticmethod
     def gaps(sigma: Interval, plan: Sequence) -> List[Interval]:

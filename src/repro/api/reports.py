@@ -31,10 +31,16 @@ class QueryReport:
 
     ``backend`` names the execution backend that answered the query.
     On the device backend, ``merge_device_ms`` is the wall time of the
-    fused kernel launch (upload + launch + sync; 0.0 on host) and
+    fused kernel launch (upload + launch + sync; 0.0 on host),
     ``cache_hits``/``cache_misses`` count device-cache traffic for this
-    query's parts.  Inside a batch the launch is shared, so these
-    three live on the ``BatchReport`` and stay zero here.
+    query's parts, and ``cache_resident_bytes`` gauges the device
+    model cache's residency right after the merge.  Inside a batch the
+    launch is shared, so the traffic counters live on the
+    ``BatchReport`` and stay zero here.
+
+    ``plan_cached`` is True when every component's plan came from the
+    session plan cache — the search stage was skipped entirely (and
+    ``search_s`` is just the lookup time).
     """
 
     beta: np.ndarray                 # merged topic-word matrix (K, V)
@@ -50,6 +56,8 @@ class QueryReport:
     merge_device_ms: float = 0.0
     cache_hits: int = 0
     cache_misses: int = 0
+    cache_resident_bytes: int = 0
+    plan_cached: bool = False
 
     @property
     def plan(self) -> SearchResult:
@@ -85,9 +93,11 @@ class BatchReport:
     shared_train_s: float
     materialized: List[MaterializedModel] = field(default_factory=list)
     backend: str = "host"
-    merge_device_ms: float = 0.0     # one shared launch for the batch
+    merge_device_ms: float = 0.0     # shared bucketed launches (batch total)
     cache_hits: int = 0
     cache_misses: int = 0
+    cache_resident_bytes: int = 0
+    pad_rows: int = 0                # zero-weight rows across the launches
 
     @property
     def merge_s(self) -> float:

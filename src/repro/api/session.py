@@ -3,7 +3,7 @@
 The session owns the Def. 1 members that are *not* per-query: the
 dataset D (corpus + range index), the analysis function F (LDAConfig +
 default trainer kind), the materialized-model store, the plan cost
-model, the RNG state, and the execution backend.  Queries arrive as
+provider, the RNG state, and the execution backend.  Queries arrive as
 typed ``QuerySpec``s through a single ``submit`` path:
 
     session = MLegoSession(corpus, cfg)
@@ -12,17 +12,27 @@ typed ``QuerySpec``s through a single ``submit`` path:
 
 ``submit`` runs the Fig. 2 pipeline per predicate component (plan
 search -> gap training -> merge); union-of-intervals predicates are
-planned per component and merged into one model.  ``submit_many`` runs
-the §V.C Alg. 4 batch path: one joint plan combination, every shared
-gap segment trained exactly once, and the shared search/train costs
+planned per component and merged into one model.  Each component's
+search goes through the session **plan cache** first: a repeated query
+against an unchanged store (same σ, α, kind, method, backend, prices)
+skips the search stage entirely (``QueryReport.plan_cached``); any
+store mutation invalidates the cache through ``ModelStore.subscribe``.
+
+``submit_many`` runs the §V.C Alg. 4 batch path: the batch is
+reordered for joint planning (widest query first), every shared gap
+segment is trained exactly once, the merge stage launches as
+size-bucketed batched kernels, and the shared search/train costs are
 reported at the batch level (``BatchReport``), not on the first query.
 
-The data plane (merge + gap training) executes on a pluggable backend:
-``backend="host"`` (default) is the NumPy reference; ``"device"``
-keeps hot model parameters device-resident and merges through the
-fused Pallas kernel — including one batched launch for the whole
-``submit_many`` merge stage.  A ``QuerySpec.backend`` overrides the
-session default per query.
+Plan search prices plans through a pluggable cost provider
+(``cost="analytic"`` — the paper's Eq. 2 model — or
+``cost="calibrated"``, which refits κ/t_m from this session's measured
+timings and prices device-cache hits/misses and batch padding; see
+``repro.core.cost``).  The data plane (merge + gap training) executes
+on a pluggable backend: ``backend="host"`` (default) is the NumPy
+reference; ``"device"`` keeps hot model parameters device-resident and
+merges through the fused Pallas kernel.  A ``QuerySpec.backend``
+overrides the session default per query.
 """
 from __future__ import annotations
 
@@ -31,15 +41,15 @@ from typing import List, Optional, Sequence, Union
 
 import jax
 
-from repro.api.backend import ExecutionBackend, make_backend
+from repro.api.backend import DeviceBackend, ExecutionBackend, make_backend
 from repro.api.executor import Executor
-from repro.api.planner import Planner
+from repro.api.planner import PlanCache, Planner
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.spec import QuerySpec
 from repro.api.trainers import resolve_kind
 from repro.configs.lda_default import LDAConfig
-from repro.core.batch_opt import _gaps, _segments
-from repro.core.cost import CostModel
+from repro.core.batch_opt import _segments
+from repro.core.cost import CalibratedCostModel, CostModel, CostProvider
 from repro.core.lda import MaterializedModel
 from repro.core.plans import Interval
 from repro.core.search import SearchResult
@@ -52,22 +62,37 @@ class MLegoSession:
 
     def __init__(self, corpus: Corpus, cfg: LDAConfig, *,
                  store: Optional[ModelStore] = None,
-                 cost: Optional[CostModel] = None,
+                 cost: Union[CostProvider, str, None] = None,
                  kind: str = "vb", seed: int = 0,
-                 backend: Union[str, ExecutionBackend] = "host"):
+                 backend: Union[str, ExecutionBackend] = "host",
+                 plan_cache_entries: int = 256):
         self.corpus = corpus
         self.index = DataIndex(corpus)
         self._backends = {}
+        self._plan_cache = PlanCache(max_entries=plan_cache_entries)
         self.store = store if store is not None else ModelStore()
         self.cfg = cfg
-        self.cost = cost or CostModel(max_iters=cfg.max_iters,
-                                      n_topics=cfg.n_topics)
+        self.cost = self._make_cost(cost, cfg)
         self.kind = resolve_kind(kind)       # default backend for train_range
         self._key = jax.random.PRNGKey(seed)
         self.planner = Planner(self.index, self.cost)
         self.executor = Executor(corpus, cfg, self.store, self._next_key)
         self.backend = self._register_backend(
             make_backend(backend) if isinstance(backend, str) else backend)
+
+    @staticmethod
+    def _make_cost(cost: Union[CostProvider, str, None],
+                   cfg: LDAConfig) -> CostProvider:
+        base = CostModel(max_iters=cfg.max_iters, n_topics=cfg.n_topics)
+        if cost is None or cost == "analytic":
+            return base
+        if cost == "calibrated":
+            return CalibratedCostModel(base)
+        if isinstance(cost, str):
+            raise ValueError(f"unknown cost provider {cost!r}; "
+                             f"one of ('analytic', 'calibrated') or a "
+                             f"CostProvider instance")
+        return cost
 
     # ------------------------------------------------------------------
     @property
@@ -77,12 +102,18 @@ class MLegoSession:
     @store.setter
     def store(self, v: ModelStore) -> None:
         # swapping the store (the legacy-shim path) must re-home every
-        # backend cache — stale subscriptions would miss invalidations
+        # backend cache — stale subscriptions would miss invalidations —
+        # and the plan cache, whose entries reference the old model set
         self._store = v
         for b in self._backends.values():
             b.bind_store(v)
+        self._plan_cache.bind_store(v)
         if hasattr(self, "executor"):       # unset during __init__
             self.executor.store = v
+
+    @property
+    def plan_cache(self) -> PlanCache:
+        return self._plan_cache
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -97,6 +128,11 @@ class MLegoSession:
                 "collide across stores — create one backend per session")
         inst.bind_store(self.store)
         self._backends[inst.name] = inst
+        # a calibrated provider prices fetches by device-cache state;
+        # point its probe at the device backend's LRU once one exists
+        if (isinstance(inst, DeviceBackend)
+                and getattr(self.cost, "cache_probe", False) is None):
+            self.cost.cache_probe = lambda mid: mid in inst.cache
         return inst
 
     def _backend_for(self, spec: QuerySpec) -> ExecutionBackend:
@@ -128,6 +164,45 @@ class MLegoSession:
                                        persist=True, backend=self.backend)
 
     # ------------------------------------------------------------------
+    def _plan_component(self, models, fingerprint: int, sigma: Interval,
+                        spec: QuerySpec, kind: str,
+                        backend: ExecutionBackend
+                        ) -> tuple:
+        """(SearchResult, was_cached) for one predicate component."""
+        # a calibrated provider prices fetches by device-LRU residency
+        # (cache_probe), so residency churn must key the cache too —
+        # otherwise a cached plan could be served at stale fetch prices
+        epoch = 0
+        if getattr(self.cost, "cache_probe", None) is not None \
+                and isinstance(backend, DeviceBackend):
+            epoch = backend.cache.epoch
+        key = (sigma.lo, sigma.hi, spec.alpha, kind, spec.method,
+               backend.name, fingerprint, self.cost,
+               getattr(self.cost, "version", 0), epoch)
+        cached = self._plan_cache.get(key)
+        if cached is not None:
+            return cached, True
+        res = self.planner.plan(models, sigma, spec.alpha, spec.method)
+        self._plan_cache.put(key, res)
+        return res, False
+
+    def _observe_merge(self, n_merges: int, merge_s: float, d) -> None:
+        """Feed measured merge timings to the cost provider."""
+        if d.merge_device_ms > 0.0:
+            secs = d.merge_device_ms * 1e-3
+            rows = d.cache_hits + d.cache_misses + d.pad_rows
+            if d.pad_rows > 0 and rows > 0:
+                # apportion the launch by rows: the pad share is the
+                # *marginal* time the zero-weight rows cost, the rest
+                # stays attributed to the real fetches below
+                pad_secs = secs * d.pad_rows / rows
+                self.cost.observe_pad(d.pad_rows, pad_secs)
+                secs -= pad_secs
+            self.cost.observe_merge_device(d.cache_hits, d.cache_misses,
+                                           secs)
+        elif n_merges > 0:
+            self.cost.observe_merge_host(n_merges, merge_s)
+
     def submit(self, spec: QuerySpec) -> QueryReport:
         """One analytic query: plan search, gap training, merge.
 
@@ -141,25 +216,32 @@ class MLegoSession:
         parts: List[MaterializedModel] = []
         n_tok = 0
         search_s = train_s = 0.0
+        all_cached = True
         models = self._models(kind)
+        fingerprint = PlanCache.fingerprint(models)
         for sigma in spec.sigma:
             t0 = time.perf_counter()
-            res = self.planner.plan(models, sigma, spec.alpha, spec.method)
+            res, was_cached = self._plan_component(
+                models, fingerprint, sigma, spec, kind, backend)
             search_s += time.perf_counter() - t0
+            all_cached &= was_cached
             plans.append(res)
-            parts.extend(res.plan)
 
+            # training below may mutate the store (persisted gap
+            # models), dropping earlier cache entries; this component's
+            # entry is keyed on the snapshot fingerprint its search
+            # actually saw, so it can never be served for a different
+            # model set
             t1 = time.perf_counter()
-            for gap in self.planner.gaps(sigma, res.plan):
-                m = self.executor.train_gap(gap.lo, gap.hi, kind,
-                                            persist=spec.persist,
-                                            backend=backend)
-                if m is not None:
-                    fresh.append(m)
-                    n_tok += m.n_tokens
+            c_parts, c_fresh, c_tok, obs = self.executor.gather(
+                res.ir, kind, persist=spec.persist, backend=backend)
             train_s += time.perf_counter() - t1
+            parts.extend(c_parts)
+            fresh.extend(c_fresh)
+            n_tok += c_tok
+            for tok, secs in obs:
+                self.cost.observe_train(tok, secs)
 
-        parts += fresh
         if not parts:
             raise ValueError(f"query {spec.sigma} selects no data")
         snap = backend.stats
@@ -167,38 +249,44 @@ class MLegoSession:
         beta = self.executor.merge(parts, backend=backend)
         merge_s = time.perf_counter() - t2
         d = backend.stats.delta(snap)
+        self._observe_merge(len(parts) - 1, merge_s, d)
         return QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
                            train_s, merge_s, search_s, materialized=fresh,
                            backend=backend.name,
                            merge_device_ms=d.merge_device_ms,
                            cache_hits=d.cache_hits,
-                           cache_misses=d.cache_misses)
+                           cache_misses=d.cache_misses,
+                           cache_resident_bytes=d.cache_resident_bytes,
+                           plan_cached=all_cached)
 
     # ------------------------------------------------------------------
     def submit_many(self, specs: Sequence[QuerySpec]) -> BatchReport:
         """§V.C batch path: Alg. 4 plan combination, shared gap training.
 
         All specs must use one trainer kind (shared segments are merged
-        into every covering query, so their Θ must be homogeneous) and
-        one execution backend (the merge stage is a single batched
-        launch).  Union predicates are supported: each component
-        interval enters the joint optimization as its own range, and
-        the owning query merges parts from all its components.
+        into every covering query, so their Θ must be homogeneous), one
+        execution backend (the merge stage launches as size-bucketed
+        batched kernels), and one α (the batch is planned jointly, and
+        α seeds every query's initial plan).  Union predicates are
+        supported: each component interval enters the joint
+        optimization as its own range, and the owning query merges
+        parts from all its components.
 
-        Alg. 4 plans the whole batch jointly in the time-cost (α = 0)
-        regime and supersedes per-query plan search, so specs with
-        α > 0 are rejected (submit them individually instead) and
-        ``spec.method`` is not consulted.
+        The batch is *reordered* for joint planning — Alg. 4 visits the
+        widest query first so the shared-segment structure is anchored
+        before narrow queries prune against it — but reports stay
+        parallel to the submitted spec order.  ``spec.method`` is not
+        consulted (Alg. 4 supersedes per-query search).
         """
         specs = list(specs)
         if not specs:
             return BatchReport([], self.planner.plan_batch([], []), 0.0, 0.0)
-        for s in specs:
-            if s.alpha != 0.0:
-                raise ValueError(
-                    f"batch planning (Alg. 4) is the alpha=0 regime; got "
-                    f"alpha={s.alpha} for {s.sigma} — submit accuracy-"
-                    f"weighted queries individually via submit()")
+        alphas = {s.alpha for s in specs}
+        if len(alphas) != 1:
+            raise ValueError(
+                f"submit_many plans the batch jointly under one alpha, got "
+                f"{sorted(alphas)} — split the batch or align the specs")
+        alpha = alphas.pop()
         kinds = {s.kind or self.kind for s in specs}
         if len(kinds) != 1:
             raise ValueError(f"submit_many requires one backend kind per "
@@ -220,11 +308,12 @@ class MLegoSession:
                 sigmas.append(sigma)
 
         t0 = time.perf_counter()
-        opt = self.planner.plan_batch(self._models(kind), sigmas)
+        opt = self.planner.plan_batch(self._models(kind), sigmas, alpha)
         shared_search_s = time.perf_counter() - t0
 
-        # train every atomic shared gap segment exactly once
-        gap_lists = [_gaps(p, q) for p, q in zip(opt.plans, sigmas)]
+        # train every atomic shared gap segment exactly once (gap
+        # structure read off the lowered Plan IR)
+        gap_lists = [[g.gap for g in ir.gaps] for ir in opt.irs]
         seg_models = {}
         t1 = time.perf_counter()
         for lo, hi, _ in _segments(gap_lists):
@@ -232,14 +321,18 @@ class MLegoSession:
                 specs[owner[j]].persist
                 for j, gaps in enumerate(gap_lists)
                 if any(g.lo <= lo and hi <= g.hi for g in gaps))
+            t_gap = time.perf_counter()
             m = self.executor.train_gap(lo, hi, kind, persist=persist,
                                         backend=backend)
             if m is not None:
                 seg_models[(lo, hi)] = m
+                self.cost.observe_train(m.n_tokens,
+                                        time.perf_counter() - t_gap)
         shared_train_s = time.perf_counter() - t1
 
-        # assemble every query's part list, then merge the whole batch
-        # through one backend call (a single padded device launch)
+        # assemble every query's part list from its components' IR
+        # (fetches resolved by id), then merge the whole batch through
+        # one backend call — size-bucketed batched device launches
         part_lists: List[List[MaterializedModel]] = []
         plans_per_q: List[List[SearchResult]] = []
         ntok_per_q: List[int] = []
@@ -249,14 +342,16 @@ class MLegoSession:
             parts: List[MaterializedModel] = []
             plans: List[SearchResult] = []
             n_tok = 0
-            for j, (own, gaps) in enumerate(zip(owner, gap_lists)):
+            for j, (own, ir) in enumerate(zip(owner, opt.irs)):
                 if own != i:
                     continue
-                plans.append(SearchResult(opt.plans[j], 0.0, 0.0,
-                                          method="ALG4"))
-                parts.extend(opt.plans[j])
+                plans.append(SearchResult(opt.plans[j], 0.0, alpha,
+                                          method="ALG4", ir=ir))
+                parts.extend(self.store.get(f.model_id)
+                             for f in ir.fetches)
                 for (lo, hi), m in seg_models.items():
-                    if any(g.lo <= lo and hi <= g.hi for g in gaps):
+                    if any(g.lo <= lo and hi <= g.hi
+                           for g in gap_lists[j]):
                         parts.append(m)
                         n_tok += m.n_tokens
             if not parts:
@@ -269,8 +364,11 @@ class MLegoSession:
         snap = backend.stats
         t3 = time.perf_counter()
         betas = self.executor.merge_many(part_lists, backend=backend)
-        launch_share = (time.perf_counter() - t3) / len(specs)
+        batch_merge_s = time.perf_counter() - t3
+        launch_share = batch_merge_s / len(specs)
         d = backend.stats.delta(snap)
+        self._observe_merge(sum(max(len(p) - 1, 0) for p in part_lists),
+                            batch_merge_s, d)
 
         reports = [
             QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
@@ -283,4 +381,6 @@ class MLegoSession:
                            backend=backend.name,
                            merge_device_ms=d.merge_device_ms,
                            cache_hits=d.cache_hits,
-                           cache_misses=d.cache_misses)
+                           cache_misses=d.cache_misses,
+                           cache_resident_bytes=d.cache_resident_bytes,
+                           pad_rows=d.pad_rows)

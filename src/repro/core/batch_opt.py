@@ -31,12 +31,13 @@ from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cost import CostModel, plan_stats
+from repro.core.cost import CostProvider, plan_stats
+from repro.core.plan_ir import Plan, pad_rows_bucketed
 from repro.core.plans import Interval, plan_key, rl_plans, subtract, usable
-from repro.core.search import psoa_search
+from repro.core.search import lower, psoa_search
 
 
 @dataclass
@@ -48,6 +49,8 @@ class BatchResult:
     n_scored: int = 0
     elapsed_s: float = 0.0
     method: str = ""
+    irs: List[Plan] = field(default_factory=list)   # lowered Plan IR per query
+    alpha: float = 0.0           # weight used for the initial per-query plans
 
 
 # ---------------------------------------------------------------------------
@@ -71,9 +74,30 @@ def _segments(gap_lists: Sequence[List[Interval]]) -> List[Tuple[float, float, i
     return out
 
 
+def _part_counts(plans: Sequence[Tuple],
+                 gap_lists: Sequence[List[Interval]],
+                 segs: Sequence[Tuple[float, float, int]]) -> List[int]:
+    """Parts each query will actually merge under shared-segment
+    training: its plan models + every atomic segment inside its gaps
+    (the batched-launch row count, which the padding term prices)."""
+    out = []
+    for p, gaps in zip(plans, gap_lists):
+        n_seg = sum(1 for lo, hi, _ in segs
+                    if any(g.lo <= lo and hi <= g.hi for g in gaps))
+        out.append(len(p) + n_seg)
+    return out
+
+
 def shared_time_and_benefit(plans: Sequence[Tuple], queries: Sequence[Interval],
-                            index, cost: CostModel) -> Tuple[float, float, float]:
-    """(T, naive_T, B) for a plan combination (Def. 3 accounting)."""
+                            index, cost: CostProvider
+                            ) -> Tuple[float, float, float]:
+    """(T, naive_T, B) for a plan combination (Def. 3 accounting).
+
+    A calibrated provider additionally prices the padding rows of the
+    size-bucketed batched device launch (``cost.padding_cost``); the
+    analytic model prices padding at 0, preserving the paper's
+    accounting exactly.
+    """
     gap_lists = [_gaps(p, q) for p, q in zip(plans, queries)]
     segs = _segments(gap_lists)
     t_train = sum(cost.c_train(index.tokens_in(lo, hi)) for lo, hi, _ in segs)
@@ -83,7 +107,13 @@ def shared_time_and_benefit(plans: Sequence[Tuple], queries: Sequence[Interval],
     for p, gaps in zip(plans, gap_lists):
         comps = len(p) + sum(1 for g in gaps if index.tokens_in(g.lo, g.hi) > 0)
         t_merge += cost.c_merge(max(comps - 1, 0))
-    total = t_train + t_merge
+    # the analytic provider (and calibrated before any device launch)
+    # prices padding at 0 — skip the O(b x segments) row accounting then
+    t_pad = 0.0
+    if cost.padding_cost(1) > 0.0:
+        t_pad = cost.padding_cost(
+            pad_rows_bucketed(_part_counts(plans, gap_lists, segs)))
+    total = t_train + t_merge + t_pad
     return total, total + saved, saved
 
 
@@ -91,22 +121,43 @@ def shared_time_and_benefit(plans: Sequence[Tuple], queries: Sequence[Interval],
 # Alg. 4 heuristic
 # ---------------------------------------------------------------------------
 
+def processing_order(queries: Sequence[Interval], index) -> List[int]:
+    """§V.C batch reorder: process wide queries first.
+
+    Alg. 4 updates plans in processing order, so earlier queries anchor
+    the shared-segment structure later ones prune against.  Visiting
+    queries by descending selected-token volume lets the widest ranges
+    lay down the shared gaps before narrow queries decide what to drop.
+    Ties (and the common all-equal case) preserve submission order.
+    """
+    toks = [float(index.tokens_in(q.lo, q.hi)) for q in queries]
+    return sorted(range(len(queries)), key=lambda i: (-toks[i], i))
+
+
 def batch_optimize(models: Sequence, queries: Sequence[Interval], index,
-                   cost: CostModel, *, max_rl_plans: int = 64) -> BatchResult:
+                   cost: CostProvider, *, alpha: float = 0.0,
+                   max_rl_plans: int = 64,
+                   order: Optional[Sequence[int]] = None) -> BatchResult:
     t0 = time.perf_counter()
     b = len(queries)
-    # line 2-3: initial P = top-1 (alpha = 0) plan per query
+    # line 2-3: initial P = top-1 plan per query (alpha threaded from the
+    # specs; 0.0 keeps the paper's pure time-cost regime)
     plans: List[Tuple] = []
     n_scored = 0
     for q in queries:
-        r = psoa_search(models, q, index, cost, 0.0)
+        r = psoa_search(models, q, index, cost, alpha)
         plans.append(r.plan)
         n_scored += r.n_scored
 
-    for i, q in enumerate(queries):
+    for i in (range(b) if order is None else order):
+        q = queries[i]
         others = [plans[j] for j in range(b) if j != i]
         other_qs = [queries[j] for j in range(b) if j != i]
         other_gaps = [_gaps(p, oq) for p, oq in zip(others, other_qs)]
+        # loop-invariant: the no-m benefit baseline over the other
+        # queries' gaps does not depend on the candidate model
+        base = sum((cnt - 1) * cost.c_train(index.tokens_in(lo, hi))
+                   for lo, hi, cnt in _segments(other_gaps))
 
         cand_models = [m for m in usable(models, q)
                        if index.tokens_in(m.o.lo, m.o.hi) > 0]
@@ -119,8 +170,6 @@ def batch_optimize(models: Sequence, queries: Sequence[Interval], index,
             segs = _segments(pseudo)
             bene = sum((cnt - 1) * cost.c_train(index.tokens_in(lo, hi))
                        for lo, hi, cnt in segs)
-            base = sum((cnt - 1) * cost.c_train(index.tokens_in(lo, hi))
-                       for lo, hi, cnt in _segments(other_gaps))
             c_m = cost.c_train(index.tokens_in(m.o.lo, m.o.hi))
             drop[m.model_id] = (bene - base) - c_m > 0.0
             n_scored += 1
@@ -143,7 +192,10 @@ def batch_optimize(models: Sequence, queries: Sequence[Interval], index,
 
     total, naive, bene = shared_time_and_benefit(plans, queries, index, cost)
     return BatchResult(plans, total, naive, bene, n_scored=n_scored,
-                       elapsed_s=time.perf_counter() - t0, method="ALG4")
+                       elapsed_s=time.perf_counter() - t0, method="ALG4",
+                       irs=[lower(p, q, index)
+                            for p, q in zip(plans, queries)],
+                       alpha=alpha)
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +203,8 @@ def batch_optimize(models: Sequence, queries: Sequence[Interval], index,
 # ---------------------------------------------------------------------------
 
 def batch_oracle(models: Sequence, queries: Sequence[Interval], index,
-                 cost: CostModel, *, max_combos: int = 200_000) -> BatchResult:
+                 cost: CostProvider, *, max_combos: int = 200_000
+                 ) -> BatchResult:
     t0 = time.perf_counter()
     per_query: List[List[Tuple]] = []
     for q in queries:
@@ -186,4 +239,6 @@ def batch_oracle(models: Sequence, queries: Sequence[Interval], index,
             best, best_t = list(combo), t_tot
     total, naive, bene = shared_time_and_benefit(best, queries, index, cost)
     return BatchResult(best, total, naive, bene, n_scored=n_scored,
-                       elapsed_s=time.perf_counter() - t0, method="ORACLE")
+                       elapsed_s=time.perf_counter() - t0, method="ORACLE",
+                       irs=[lower(p, q, index)
+                            for p, q in zip(best, queries)])

@@ -1,4 +1,4 @@
-"""Plan cost model + score function (paper §IV.B–C, §V.B.2).
+"""Plan cost providers + score function (paper §IV.B–C, §V.B.2).
 
   sc(p) = α · l_p(p) + (1 − α) · c_t(p)                      (Eq. 2)
 
@@ -12,18 +12,33 @@
 c_t is normalized by the from-scratch cost of the whole query so both
 score terms live in [0, 1] and α weighs comparable quantities.
 
+Pricing is pluggable through the ``CostProvider`` base: the analytic
+``CostModel`` is the parity default (exactly the pre-IR behavior), and
+``CalibratedCostModel`` re-fits κ/t_m from *measured* session timings
+and adds the terms the analytic model is blind to on the device
+backend — device-cache hits (a cached model's fetch costs ~0), cache
+misses (host→device transfer per part), and padding rows in batched
+launches.  Providers price plans through two equivalent entry points:
+
+  ``score_models(models, query, index, alpha, scratch)`` — the
+      searcher hot path (bare model tuples, no IR construction)
+  ``price_plan(plan_ir, alpha, scratch)`` — the Plan-IR form used by
+      the session planner and benchmarks
+
+both funnel into one ``_score_from`` so they can never disagree.
+
 The default P(x) follows the paper's Fig. 3/6 measurement (loss grows
 roughly geometrically with merge count) and can be re-fit from the
 ``benchmarks/merging_effect`` run via ``PerformanceLoss.fit``.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.plan_ir import Plan
 from repro.core.plans import Interval, subtract
 
 
@@ -52,24 +67,30 @@ class PerformanceLoss:
         return cls(rho=min(max(rho, 1e-3), 0.9999))
 
 
-@dataclass(frozen=True)
-class CostModel:
-    kappa_train: float = 1e-9   # seconds per (M_i · token^e · K) unit
-    train_exponent: float = 2.0  # the paper's O(M_i N² K)
-    t_merge: float = 1e-4       # seconds per single K×V merge (t_m)
-    max_iters: int = 100        # M_i
-    n_topics: int = 100         # K
-    ploss: PerformanceLoss = field(default_factory=PerformanceLoss)
+class CostProvider:
+    """What the plan searchers and the batch optimizer require.
 
-    # --- raw costs ------------------------------------------------------
+    Concrete providers supply the primitives (``c_train``, ``t_merge``,
+    ``ploss``); everything plan-level derives from them here, so the
+    analytic and calibrated providers share one scoring skeleton.
+
+    ``version`` changes whenever the provider's prices change (the
+    calibrated model bumps it on every refit) — the session plan cache
+    keys on it so stale plans are never served at new prices.
+    """
+
+    ploss: PerformanceLoss
+    t_merge: float
+    version: int = 0
+
+    # --- primitives (provider-specific) ----------------------------------
     def c_train(self, n_tokens: float) -> float:
-        return (self.kappa_train * self.max_iters
-                * float(n_tokens) ** self.train_exponent * self.n_topics)
+        raise NotImplementedError
 
     def c_merge(self, x: int) -> float:
         return self.t_merge * max(x, 0)
 
-    # --- plan-level -----------------------------------------------------
+    # --- plan-level (shared) ----------------------------------------------
     def components(self, n_models: int, uncovered_tokens: float) -> int:
         """#things merged = models + (1 if a fresh model is trained)."""
         return n_models + (1 if uncovered_tokens > 0 else 0)
@@ -81,18 +102,50 @@ class CostModel:
         return self.ploss.loss(self.merges(n_models, uncovered_tokens))
 
     def plan_ct(self, uncovered_tokens: float, n_models: int,
-                scratch_tokens: float) -> float:
+                scratch_tokens: float,
+                model_ids: Tuple[int, ...] = ()) -> float:
         """Normalized time cost in [0, ~1]."""
         x = self.merges(n_models, uncovered_tokens)
-        raw = self.c_train(uncovered_tokens) + self.c_merge(x)
+        raw = (self.c_train(uncovered_tokens) + self.c_merge(x)
+               + self.fetch_cost(model_ids, uncovered_tokens))
         denom = max(self.c_train(scratch_tokens), 1e-30)
         return raw / denom
 
+    def fetch_cost(self, model_ids: Tuple[int, ...],
+                   uncovered_tokens: float) -> float:
+        """Backend data-movement cost of bringing the parts to the
+        merge — 0 for the analytic model (host merges read Θ in place);
+        the calibrated provider prices cache hits vs transfers here."""
+        return 0.0
+
+    def _score_from(self, alpha: float, n_models: int,
+                    uncovered_tokens: float, scratch_tokens: float,
+                    model_ids: Tuple[int, ...] = ()) -> float:
+        lp = self.plan_lp(n_models, uncovered_tokens)
+        ct = self.plan_ct(uncovered_tokens, n_models, scratch_tokens,
+                          model_ids)
+        return alpha * lp + (1.0 - alpha) * ct
+
     def score(self, alpha: float, n_models: int, uncovered_tokens: float,
               scratch_tokens: float) -> float:
-        lp = self.plan_lp(n_models, uncovered_tokens)
-        ct = self.plan_ct(uncovered_tokens, n_models, scratch_tokens)
-        return alpha * lp + (1.0 - alpha) * ct
+        """Aggregate form (no model identity — analytic-equivalent)."""
+        return self._score_from(alpha, n_models, uncovered_tokens,
+                                scratch_tokens)
+
+    def score_models(self, models: Tuple, query: Interval, index,
+                     alpha: float, scratch_tokens: float) -> float:
+        """Searcher hot path: price a candidate model set directly."""
+        n, unc = plan_stats(models, query, index)
+        ids = tuple(m.model_id for m in models)
+        return self._score_from(alpha, n, unc, scratch_tokens, ids)
+
+    def price_plan(self, plan: Plan, alpha: float,
+                   scratch_tokens: float) -> float:
+        """Plan-IR form: price a lowered ``Plan`` (same number as
+        ``score_models`` on the model set it was lowered from)."""
+        return self._score_from(alpha, plan.n_models,
+                                plan.uncovered_tokens, scratch_tokens,
+                                plan.model_ids)
 
     # --- Theorem 3/4 critical point x* ----------------------------------
     def critical_x(self, min_model_tokens: float) -> float:
@@ -100,9 +153,269 @@ class CostModel:
         negligible and the merge list can be dropped (PSOA++)."""
         return self.c_train(min_model_tokens) / max(self.t_merge, 1e-30)
 
+    # --- padding (batched device launches, §V.C) --------------------------
+    def padding_cost(self, pad_rows: int) -> float:
+        """Cost of zero-weight padding rows in a bucketed batch launch
+        (0 for the analytic model; calibrated fits it from timings)."""
+        return 0.0
+
+    # --- measurement intake (no-ops except on calibrated providers) ------
+    def observe_train(self, n_tokens: float, seconds: float) -> None:
+        pass
+
+    def observe_merge_host(self, n_merges: int, seconds: float) -> None:
+        pass
+
+    def observe_merge_device(self, hits: int, misses: int,
+                             seconds: float) -> None:
+        pass
+
+    def observe_pad(self, pad_rows: int, seconds: float) -> None:
+        pass
+
+
+@dataclass(frozen=True)
+class CostModel(CostProvider):
+    """The paper's analytic model — the parity-default provider."""
+
+    kappa_train: float = 1e-9   # seconds per (M_i · token^e · K) unit
+    train_exponent: float = 2.0  # the paper's O(M_i N² K)
+    t_merge: float = 1e-4       # seconds per single K×V merge (t_m)
+    max_iters: int = 100        # M_i
+    n_topics: int = 100         # K
+    ploss: PerformanceLoss = field(default_factory=PerformanceLoss)
+
+    def c_train(self, n_tokens: float) -> float:
+        return (self.kappa_train * self.max_iters
+                * float(n_tokens) ** self.train_exponent * self.n_topics)
+
+
+# ---------------------------------------------------------------------------
+# calibration — fit the provider to measured session timings
+# ---------------------------------------------------------------------------
+
+_MAX_OBS = 512    # rolling window per observation kind
+
+
+@dataclass
+class Calibration:
+    """Rolling measurement log a session accumulates per backend.
+
+    train_obs  : (tokens, seconds) per trained gap
+    host_obs   : (x merges, seconds) per host merge
+    device_obs : (hits, misses, seconds) per fused device launch
+    pad_obs    : (pad rows, seconds) per *bucketed batch* launch
+    """
+
+    train_obs: List[Tuple[float, float]] = field(default_factory=list)
+    host_obs: List[Tuple[int, float]] = field(default_factory=list)
+    device_obs: List[Tuple[int, int, float]] = field(default_factory=list)
+    pad_obs: List[Tuple[int, float]] = field(default_factory=list)
+
+    def _push(self, log: list, sample) -> None:
+        log.append(sample)
+        if len(log) > _MAX_OBS:
+            del log[: len(log) - _MAX_OBS]
+
+    # Fits are *robust*: jit compilation inflates the first launch /
+    # first training call by orders of magnitude, and a mean over raw
+    # samples would keep the coefficients (and the provider version
+    # the plan cache keys on) churning for many queries.  Medians damp
+    # run-to-run jitter, and once three samples exist the single
+    # hottest per-unit sample (the compile warm-up) is dropped.
+    @staticmethod
+    def _robust(unit_rates: Sequence[float]) -> Optional[float]:
+        rates = sorted(unit_rates)
+        if not rates:
+            return None
+        if len(rates) >= 3:
+            rates = rates[:-1]          # drop the warm-up outlier
+        return float(np.median(rates))
+
+    # --- fits -------------------------------------------------------------
+    def fit_kappa(self, base: CostModel) -> Optional[float]:
+        """κ from seconds ≈ κ · M_i · tokens^e · K per trained gap."""
+        return self._robust(
+            [(s / (base.max_iters * t ** base.train_exponent
+                   * base.n_topics))
+             for t, s in self.train_obs if t > 0 and s > 0])
+
+    def fit_t_merge(self) -> Optional[float]:
+        return self._robust(
+            [s / x for x, s in self.host_obs if x > 0 and s > 0])
+
+    def fit_device(self) -> Optional[Tuple[float, float, float]]:
+        """(t_launch, t_hit, t_miss): seconds ≈ t_launch + t_hit·hits
+        + t_miss·misses, nonnegative least squares over the log."""
+        obs = [(h, m, s) for h, m, s in self.device_obs if s > 0]
+        if not obs:
+            return None
+        if len(obs) >= 3:
+            # drop the hottest per-part launch (jit compile warm-up)
+            obs.remove(max(obs, key=lambda o: o[2] / max(o[0] + o[1], 1)))
+        a = np.array([[1.0, h, m] for h, m, _ in obs])
+        y = np.array([s for _, _, s in obs])
+        if len(obs) < 3 or np.linalg.matrix_rank(a) < 3:
+            # under-determined: attribute the median per-part launch
+            # cost to the parts actually moved/read, keeping hit < miss
+            t_part = float(np.median(y / np.maximum(a[:, 1] + a[:, 2], 1)))
+            return 0.0, 0.25 * t_part, t_part
+        sol, *_ = np.linalg.lstsq(a, y, rcond=None)
+        return tuple(float(max(v, 0.0)) for v in sol)
+
+    def fit_t_pad(self) -> Optional[float]:
+        return self._robust(
+            [s / p for p, s in self.pad_obs if p > 0 and s > 0])
+
+
+class CalibratedCostModel(CostProvider):
+    """Backend-aware provider fitted from measured report timings.
+
+    Starts at exact parity with ``base`` (no observations → analytic
+    prices) and tightens as the session feeds it measurements:
+
+      κ, e          training cost per token^e (κ refit, e kept)
+      t_merge       per-merge host cost
+      t_hit/t_miss  per-part device fetch cost split by cache state —
+                    ``cache_probe(model_id)`` (wired to the device
+                    backend's LRU by the session) decides which applies
+      t_pad         per padding row in bucketed batch launches
+
+    ``version`` increments on every refit so the session plan cache
+    drops plans priced under stale coefficients.
+    """
+
+    def __init__(self, base: Optional[CostModel] = None, *,
+                 cache_probe: Optional[Callable[[int], bool]] = None):
+        self.base = base or CostModel()
+        self.calibration = Calibration()
+        self.cache_probe = cache_probe
+        self._version = 0
+        self._dirty = False
+        self._kappa: Optional[float] = None
+        self._t_merge: Optional[float] = None
+        self._t_hit = self._t_miss = 0.0
+        self._t_pad: Optional[float] = None
+
+    # Observations only mark the fit dirty; the (sort + median + lstsq)
+    # refit runs at most once per price read, not once per observe_*
+    # call on the submit hot path.
+    def _ensure_fit(self) -> None:
+        if self._dirty:
+            self._dirty = False
+            self.refit()
+
+    @property
+    def version(self) -> int:
+        self._ensure_fit()
+        return self._version
+
+    # --- primitives --------------------------------------------------------
+    @property
+    def ploss(self) -> PerformanceLoss:
+        return self.base.ploss
+
+    @property
+    def t_merge(self) -> float:
+        self._ensure_fit()
+        return self._t_merge if self._t_merge is not None \
+            else self.base.t_merge
+
+    def c_train(self, n_tokens: float) -> float:
+        self._ensure_fit()
+        kappa = self._kappa if self._kappa is not None \
+            else self.base.kappa_train
+        return (kappa * self.base.max_iters
+                * float(n_tokens) ** self.base.train_exponent
+                * self.base.n_topics)
+
+    def fetch_cost(self, model_ids: Tuple[int, ...],
+                   uncovered_tokens: float) -> float:
+        self._ensure_fit()
+        if self._t_hit == self._t_miss == 0.0:
+            return 0.0
+        cost = 0.0
+        for mid in model_ids:
+            hit = self.cache_probe is not None and self.cache_probe(mid)
+            cost += self._t_hit if hit else self._t_miss
+        if uncovered_tokens > 0:
+            cost += self._t_miss        # the fresh gap model always uploads
+        return cost
+
+    def padding_cost(self, pad_rows: int) -> float:
+        self._ensure_fit()
+        return (self._t_pad or 0.0) * max(pad_rows, 0)
+
+    # --- measurement intake -------------------------------------------------
+    def observe_train(self, n_tokens: float, seconds: float) -> None:
+        self.calibration._push(self.calibration.train_obs,
+                               (float(n_tokens), float(seconds)))
+        self._dirty = True
+
+    def observe_merge_host(self, n_merges: int, seconds: float) -> None:
+        self.calibration._push(self.calibration.host_obs,
+                               (int(n_merges), float(seconds)))
+        self._dirty = True
+
+    def observe_merge_device(self, hits: int, misses: int,
+                             seconds: float) -> None:
+        self.calibration._push(self.calibration.device_obs,
+                               (int(hits), int(misses), float(seconds)))
+        self._dirty = True
+
+    def observe_pad(self, pad_rows: int, seconds: float) -> None:
+        """``seconds`` must be the *marginal* time attributable to the
+        padding rows (callers apportion the launch wall time), not the
+        whole launch — t_pad multiplies per row."""
+        self.calibration._push(self.calibration.pad_obs,
+                               (int(pad_rows), float(seconds)))
+        self._dirty = True
+
+    # Prices within 25% of each other rarely flip a plan choice (the
+    # score gaps the searchers discriminate are coarser), but run-to-run
+    # kernel timing jitter easily exceeds 5% — a tight threshold would
+    # invalidate the plan cache on every submit for nothing.
+    @staticmethod
+    def _materially_different(a, b, rel: float = 0.25) -> bool:
+        for x, y in zip(a, b):
+            if (x is None) != (y is None):
+                return True
+            if x is None:
+                continue
+            if abs(x - y) > rel * max(abs(x), abs(y), 1e-30):
+                return True
+        return False
+
+    def refit(self) -> None:
+        c = self.calibration
+        kappa = c.fit_kappa(self.base)
+        t_merge = c.fit_t_merge()
+        t_hit, t_miss = self._t_hit, self._t_miss
+        dev = c.fit_device()
+        if dev is not None:
+            _, t_hit, t_miss = dev
+            if t_merge is None:
+                # device sessions never see a host merge; the launch
+                # cost amortized per part is the closest t_m analogue
+                t_merge = max(t_hit, self.base.t_merge)
+        t_pad = c.fit_t_pad()
+        if t_pad is None and dev is not None:
+            # padding rows stream like one cached row of bandwidth
+            t_pad = t_hit
+        new = (kappa, t_merge, t_hit, t_miss, t_pad)
+        old = (self._kappa, self._t_merge, self._t_hit, self._t_miss,
+               self._t_pad)
+        self._kappa, self._t_merge = kappa, t_merge
+        self._t_hit, self._t_miss, self._t_pad = t_hit, t_miss, t_pad
+        # version gates the session plan cache: bump only when prices
+        # moved materially, so a converged calibration keeps repeated
+        # queries on the cached plan
+        if self._materially_different(new, old):
+            self._version += 1
+
 
 def plan_stats(plan: Tuple, query: Interval, index) -> Tuple[int, float]:
-    """(n_models, uncovered_tokens) for a plan against a DataIndex."""
+    """(n_models, uncovered_tokens) for a model set against a DataIndex."""
     gaps = subtract(query, [m.o for m in plan])
     unc = float(sum(index.tokens_in(g.lo, g.hi) for g in gaps))
     return len(plan), unc

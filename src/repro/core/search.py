@@ -19,9 +19,17 @@ All four searchers solve Definition 2 (score-based plan searching):
     degenerates to maximize-coverage and is answered from the first
     c_t(train) layer directly (this is exactly where GRA applies).
 
-Every searcher returns a ``SearchResult`` carrying the chosen plan, its
+Every searcher returns a ``SearchResult`` carrying the chosen plan —
+both the legacy model tuple and its lowered Plan IR (``ir``) — its
 exact score and work counters (#plans scored, #layers generated) so the
 Fig. 10–12 benchmarks can report search effort as well as wall time.
+
+Candidate scoring goes through the pluggable ``CostProvider``
+(``cost.score_models``): the analytic ``CostModel`` reproduces the
+paper's Eq. 2 exactly, while a ``CalibratedCostModel`` additionally
+prices device-cache hits and host→device transfers per model, so the
+same searchers become backend-aware without changing their control
+flow.
 """
 from __future__ import annotations
 
@@ -30,13 +38,14 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cost import CostModel, plan_stats
+from repro.core.cost import CostProvider, plan_stats
+from repro.core.plan_ir import Plan
 from repro.core.plans import Interval, all_plans, children, plan_key, rl_plans, subtract, usable
 
 
 @dataclass
 class SearchResult:
-    plan: Tuple
+    plan: Tuple                  # legacy model-tuple view of the plan
     score: float
     alpha: float
     n_scored: int = 0            # exact score evaluations
@@ -44,28 +53,33 @@ class SearchResult:
     n_layers: int = 0            # layers expanded (PSOA)
     elapsed_s: float = 0.0
     method: str = ""
+    ir: Optional[Plan] = None    # lowered Plan IR (what executors consume)
 
     @property
     def model_ids(self) -> Tuple[int, ...]:
         return tuple(sorted(m.model_id for m in self.plan))
 
 
+def lower(plan: Tuple, query: Interval, index) -> Plan:
+    """Model tuple -> Plan IR (searchers lower their chosen plan once)."""
+    return Plan.from_models(plan, query, index)
+
+
 def _scratch_tokens(query: Interval, index) -> float:
     return float(index.tokens_in(query.lo, query.hi))
 
 
-def _exact_score(plan, query, index, cost: CostModel, alpha: float,
+def _exact_score(plan, query, index, cost: CostProvider, alpha: float,
                  scratch: float) -> float:
-    n, unc = plan_stats(plan, query, index)
-    return cost.score(alpha, n, unc, scratch)
+    return cost.score_models(plan, query, index, alpha, scratch)
 
 
 # ---------------------------------------------------------------------------
 # NAI — generate-and-rank (paper §V.B.1)
 # ---------------------------------------------------------------------------
 
-def nai_search(models: Sequence, query: Interval, index, cost: CostModel,
-               alpha: float) -> SearchResult:
+def nai_search(models: Sequence, query: Interval, index,
+               cost: CostProvider, alpha: float) -> SearchResult:
     t0 = time.perf_counter()
     scratch = _scratch_tokens(query, index)
     plans = all_plans(models, query)
@@ -78,7 +92,8 @@ def nai_search(models: Sequence, query: Interval, index, cost: CostModel,
             best, best_sc = p, sc
     return SearchResult(best, best_sc, alpha, n_scored=n_scored,
                         n_generated=len(plans),
-                        elapsed_s=time.perf_counter() - t0, method="NAI")
+                        elapsed_s=time.perf_counter() - t0, method="NAI",
+                        ir=lower(best, query, index))
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +101,7 @@ def nai_search(models: Sequence, query: Interval, index, cost: CostModel,
 # ---------------------------------------------------------------------------
 
 def gra_search(models: Sequence, query: Interval, index,
-               cost: CostModel) -> SearchResult:
+               cost: CostProvider) -> SearchResult:
     """Left-to-right DP over range endpoints minimizing trained tokens.
 
     Node set: query endpoints + usable-model endpoints, sorted.  Edges:
@@ -135,7 +150,8 @@ def gra_search(models: Sequence, query: Interval, index,
     sc = _exact_score(plan_t, query, index, cost, 0.0, scratch)
     return SearchResult(plan_t, sc, 0.0, n_scored=n_scored,
                         n_generated=len(cand) + n,
-                        elapsed_s=time.perf_counter() - t0, method="GRA")
+                        elapsed_s=time.perf_counter() - t0, method="GRA",
+                        ir=lower(plan_t, query, index))
 
 
 # ---------------------------------------------------------------------------
@@ -221,8 +237,8 @@ class _TrainLayers:
         return out
 
 
-def psoa_search(models: Sequence, query: Interval, index, cost: CostModel,
-                alpha: float, *, use_plus: bool = True,
+def psoa_search(models: Sequence, query: Interval, index,
+                cost: CostProvider, alpha: float, *, use_plus: bool = True,
                 max_layers: int = 10_000) -> SearchResult:
     """Alg. 3 — hierarchical plan search with the threshold algorithm.
 
@@ -244,7 +260,7 @@ def psoa_search(models: Sequence, query: Interval, index, cost: CostModel,
         return SearchResult(best, sc, alpha, n_scored=len(roots),
                             n_generated=len(roots),
                             elapsed_s=time.perf_counter() - t0,
-                            method="PSOA")
+                            method="PSOA", ir=lower(best, query, index))
 
     # ---- PSOA++: alpha = 0 below the critical point x* ------------------
     if use_plus and alpha == 0.0 and cand:
@@ -260,7 +276,8 @@ def psoa_search(models: Sequence, query: Interval, index, cost: CostModel,
             return SearchResult(best, sc, alpha, n_scored=len(roots),
                                 n_generated=len(roots), n_layers=1,
                                 elapsed_s=time.perf_counter() - t0,
-                                method="PSOA++")
+                                method="PSOA++",
+                                ir=lower(best, query, index))
 
     # ---- general threshold search over the three lists ------------------
     bfs = _BfsLayers(cand)          # drives l_p and c_t(merge) bounds
@@ -331,7 +348,8 @@ def psoa_search(models: Sequence, query: Interval, index, cost: CostModel,
                         n_generated=bfs.n_generated + tl.n_generated,
                         n_layers=n_layers,
                         elapsed_s=time.perf_counter() - t0,
-                        method="PSOA" if alpha != 0.0 else "PSOA(a0)")
+                        method="PSOA" if alpha != 0.0 else "PSOA(a0)",
+                        ir=lower(best_plan, query, index))
 
 
 SEARCHERS = {

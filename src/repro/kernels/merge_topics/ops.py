@@ -3,15 +3,20 @@
 ``merge_vb_stats`` / ``merge_gs_stats`` map the paper's Alg. 1/2 onto
 the fused kernel; core/merge.py stays the host/NumPy reference.
 ``merge_topics_batch`` is the one-launch-per-batch entry the device
-execution backend uses to merge several queries' plans at once.
+execution backend uses to merge several queries' plans at once, and
+``merge_topics_bucketed`` is its ragged-batch form: plans grouped into
+power-of-two size buckets, one launch per bucket, each row padded only
+to its bucket's widest plan instead of the global widest ``n'``.
 """
 from __future__ import annotations
 
 import functools
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan_ir import size_buckets
 from repro.kernels.common import default_interpret
 from repro.kernels.merge_topics.merge_topics import (
     merge_topics_batched_pallas,
@@ -54,6 +59,52 @@ def merge_topics_batch(stats, weights, bias: float = 0.0, base: float = 0.0,
     out = merge_topics_batched_pallas(stats, weights, bias, base,
                                       interpret=interpret)
     return out[:, :k, :v]
+
+
+def merge_topics_bucketed(stats_list: Sequence, weights_list: Sequence,
+                          bias: float = 0.0, base: float = 0.0,
+                          *, interpret: bool = None
+                          ) -> Tuple[List, int, int]:
+    """Ragged batch of merges: bucketed launches instead of one padded one.
+
+    ``stats_list[i]`` is query i's ``(n_i, K, V)`` stack, ``weights_list[i]``
+    its ``(n_i,)`` weights.  Plans are grouped into power-of-two size
+    buckets (compiled batch shapes recur across calls); within a bucket
+    rows pad with zero weight only to the bucket's actual widest plan,
+    so total padding is pointwise ≤ the old pad-to-global-widest scheme.
+    Buckets of one plan use the unbatched kernel (zero padding).
+
+    Returns ``(merged, pad_rows, launches)`` with ``merged[i]`` the
+    ``(K, V)`` result for input i, in input order.
+    """
+    counts = [int(s.shape[0]) for s in stats_list]
+    out: List = [None] * len(counts)
+    pad_rows = launches = 0
+    for _, idxs in sorted(size_buckets(counts).items()):
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = merge_topics(stats_list[i], weights_list[i],
+                                  bias=bias, base=base, interpret=interpret)
+            launches += 1
+            continue
+        widest = max(counts[i] for i in idxs)
+        rows, weights = [], []
+        for i in idxs:
+            pad = widest - counts[i]
+            stack = stats_list[i]
+            if pad:
+                # zero-weight rows: 0·(0 − base) contributes nothing
+                stack = jnp.pad(stack, ((0, pad), (0, 0), (0, 0)))
+                pad_rows += pad
+            rows.append(stack)
+            weights.append(jnp.pad(weights_list[i], (0, pad)))
+        merged = merge_topics_batch(jnp.stack(rows), jnp.stack(weights),
+                                    bias=bias, base=base,
+                                    interpret=interpret)
+        launches += 1
+        for row, i in enumerate(idxs):
+            out[i] = merged[row]
+    return out, pad_rows, launches
 
 
 def merge_vb_stats(lams, weights, eta: float, *, interpret: bool = None):

@@ -256,12 +256,24 @@ def test_mixed_kind_batch_rejected(train):
                           QuerySpec(sigma=Interval(0.0, 100.0), kind="gs")])
 
 
-def test_batch_rejects_accuracy_weighted_specs(train):
-    """Alg. 4 plans in the alpha=0 regime; a spec's alpha must not be
-    silently dropped."""
+def test_batch_rejects_mixed_alpha_specs(train):
+    """The batch is planned jointly under one alpha — mixed weights
+    cannot be honored and must not be silently dropped."""
     sess = _session(train)
-    with pytest.raises(ValueError, match="alpha=0 regime"):
-        sess.submit_many([QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5)])
+    with pytest.raises(ValueError, match="one alpha"):
+        sess.submit_many([QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5),
+                          QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.0)])
+
+
+def test_batch_threads_uniform_alpha(train):
+    """A uniform alpha > 0 batch is accepted and the weight reaches the
+    initial per-query plans (BatchResult.alpha records it)."""
+    sess = _session(train)
+    sess.train_range(0.0, 120.0)
+    br = sess.submit_many([QuerySpec(sigma=Interval(0.0, 200.0), alpha=0.5),
+                           QuerySpec(sigma=Interval(50.0, 250.0), alpha=0.5)])
+    assert br.opt.alpha == 0.5
+    assert all(np.isfinite(r.beta).all() for r in br)
 
 
 def test_alias_cannot_shadow_registered_kind():

@@ -152,6 +152,97 @@ def test_cache_respects_capacity_with_lru_order():
     assert d.cache_hits == 2 and d.cache_misses == 0
 
 
+def _dummy_model(mid, k=4, v=64):
+    return MaterializedModel(mid, Interval(float(mid), float(mid + 1)),
+                             10, 100, "vb",
+                             {"lam": RNG.gamma(1.0, 1.0, (k, v))
+                              .astype(np.float32)})
+
+
+def test_cache_byte_bound_evicts_lru():
+    """max_bytes caps resident parameter bytes alongside the count
+    bound — the ROADMAP "count-bounded, not byte-bounded" gap."""
+    entry_bytes = 4 * 64 * 4                      # (4, 64) f32
+    backend = DeviceBackend(capacity=64, max_bytes=2 * entry_bytes)
+    models = [_dummy_model(i) for i in range(3)]
+    backend.merge(models, "vb", CFG)
+    assert len(backend.cache) == 2, "third entry must evict the LRU"
+    assert 0 not in backend.cache
+    assert backend.cache.resident_bytes == 2 * entry_bytes
+    assert backend.stats.cache_evictions == 1
+    assert backend.stats.cache_resident_bytes == 2 * entry_bytes
+
+
+def test_cache_byte_bound_oversized_model_passes_through():
+    backend = DeviceBackend(capacity=64, max_bytes=100)   # < one entry
+    backend.merge([_dummy_model(0)], "vb", CFG)
+    assert len(backend.cache) == 0, "an over-budget model must not pin HBM"
+    assert backend.cache.resident_bytes == 0
+
+
+def test_cache_bytes_track_invalidation_and_clear():
+    entry_bytes = 4 * 64 * 4
+    backend = DeviceBackend(capacity=8)
+    store = ModelStore()
+    backend.bind_store(store)
+    ms = [store.add(Interval(float(i), float(i + 1)), 10, 100, "vb",
+                    {"lam": RNG.gamma(1.0, 1.0, (4, 64))
+                     .astype(np.float32)}) for i in range(3)]
+    backend.merge(ms, "vb", CFG)
+    assert backend.cache.resident_bytes == 3 * entry_bytes
+    store.remove(ms[1].model_id)
+    assert backend.cache.resident_bytes == 2 * entry_bytes
+    backend.cache.clear()
+    assert backend.cache.resident_bytes == 0
+
+
+def test_cache_rejects_bad_bounds():
+    with pytest.raises(ValueError, match="max_bytes"):
+        DeviceBackend(max_bytes=0)
+
+
+def test_reports_expose_cache_resident_bytes(train):
+    _, dev = _sessions(train, "vb")
+    rep = dev.submit(QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0))
+    assert rep.cache_resident_bytes == dev.backend.cache.resident_bytes
+    assert rep.cache_resident_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# size-bucketed batch launches (§V.C)
+# ---------------------------------------------------------------------------
+
+def test_bucketed_launches_pad_less_than_widest(train):
+    """A ragged batch must pad ≤ the old pad-to-global-widest scheme
+    while keeping exact parity with per-query host merges."""
+    from repro.core.plan_ir import pad_rows_widest
+
+    host, dev = _sessions(train, "vb",
+                          edges=(0.0, 75.0, 150.0, 225.0, 300.0))
+    specs = [QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.0),   # 4 parts
+             QuerySpec(sigma=Interval(0.0, 75.0), alpha=0.0),    # 1 part
+             QuerySpec(sigma=Interval(75.0, 150.0), alpha=0.0),  # 1 part
+             QuerySpec(sigma=Interval(150.0, 225.0), alpha=0.0)]  # 1 part
+    bh = host.submit_many(specs)
+    bd = dev.submit_many(specs)
+    for rh, rd in zip(bh, bd):
+        np.testing.assert_allclose(rh.beta, rd.beta, rtol=1e-5, atol=1e-5)
+    counts = [r.n_merged for r in bd]
+    assert bd.pad_rows <= pad_rows_widest(counts)
+    assert bd.pad_rows == 0, "1/1/1 bucket together, 4 rides alone"
+    # one launch per occupied bucket, not one per query
+    assert dev.backend.stats.device_launches == 2
+
+
+def test_uniform_batch_single_bucket(train):
+    _, dev = _sessions(train, "vb")
+    specs = [QuerySpec(sigma=Interval(0.0, 200.0), alpha=0.0),
+             QuerySpec(sigma=Interval(100.0, 300.0), alpha=0.0)]
+    bd = dev.submit_many(specs)
+    assert bd.pad_rows == 0
+    assert np.isfinite(bd.reports[0].beta).all()
+
+
 def test_volatile_models_bypass_cache():
     backend = DeviceBackend(capacity=8)
     vol = MaterializedModel(-1, Interval(0.0, 1.0), 10, 100, "vb",

@@ -1,0 +1,179 @@
+"""Cost providers: the analytic/calibrated split, coefficient fitting
+from measured timings, cache-aware fetch pricing, and the version
+counter the session plan cache keys on."""
+import numpy as np
+import pytest
+
+from repro.core.cost import (
+    CalibratedCostModel,
+    Calibration,
+    CostModel,
+    PerformanceLoss,
+)
+from repro.core.plan_ir import Plan, FetchStep, MergeStep
+from repro.core.plans import Interval
+
+BASE = CostModel(kappa_train=1e-9, t_merge=1e-4, max_iters=10, n_topics=4)
+
+
+# ---------------------------------------------------------------------------
+# parity: an unobserved calibrated provider prices like its base
+# ---------------------------------------------------------------------------
+
+def test_unobserved_calibrated_matches_analytic():
+    cal = CalibratedCostModel(BASE)
+    for alpha in (0.0, 0.5, 1.0):
+        for n, unc in ((0, 1000.0), (2, 0.0), (3, 250.0)):
+            assert cal.score(alpha, n, unc, 2000.0) == pytest.approx(
+                BASE.score(alpha, n, unc, 2000.0), rel=1e-12)
+    assert cal.t_merge == BASE.t_merge
+    assert cal.c_train(123.0) == pytest.approx(BASE.c_train(123.0))
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+
+def test_kappa_fit_recovers_synthetic_rate():
+    cal = CalibratedCostModel(BASE)
+    true_kappa = 3e-8
+    for tok in (100, 400, 900):
+        secs = true_kappa * BASE.max_iters * tok ** 2 * BASE.n_topics
+        cal.observe_train(tok, secs)
+    assert cal.c_train(500.0) == pytest.approx(
+        true_kappa * BASE.max_iters * 500.0 ** 2 * BASE.n_topics, rel=1e-6)
+
+
+def test_t_merge_fit_from_host_merges():
+    cal = CalibratedCostModel(BASE)
+    for x in (1, 2, 4):
+        cal.observe_merge_host(x, 2e-3 * x)
+    assert cal.t_merge == pytest.approx(2e-3, rel=1e-6)
+    assert cal.c_merge(3) == pytest.approx(6e-3, rel=1e-6)
+
+
+def test_device_fit_separates_hit_and_miss():
+    cal = CalibratedCostModel(BASE)
+    # synthetic: launch 1ms, hit 0.5ms, miss 4ms
+    for h, m in ((0, 3), (3, 0), (2, 1), (1, 2), (4, 4)):
+        cal.observe_merge_device(h, m, 1e-3 + 0.5e-3 * h + 4e-3 * m)
+    assert cal.version > 0          # reading a price triggers the lazy fit
+    assert cal._t_hit == pytest.approx(0.5e-3, rel=1e-6)
+    assert cal._t_miss == pytest.approx(4e-3, rel=1e-6)
+
+
+def test_underdetermined_device_fit_keeps_hit_below_miss():
+    cal = CalibratedCostModel(BASE)
+    cal.observe_merge_device(2, 2, 4e-3)
+    assert cal.version > 0
+    assert 0.0 <= cal._t_hit < cal._t_miss
+
+
+def test_pad_fit():
+    cal = CalibratedCostModel(BASE)
+    cal.observe_pad(4, 8e-3)
+    cal.observe_pad(2, 4e-3)
+    assert cal.padding_cost(3) == pytest.approx(6e-3, rel=1e-6)
+    assert BASE.padding_cost(3) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# cache-aware fetch pricing
+# ---------------------------------------------------------------------------
+
+class _M:
+    def __init__(self, mid, lo, hi, tok):
+        self.model_id = mid
+        self.o = Interval(lo, hi)
+        self.n_tokens = tok
+
+
+class _Idx:
+    """Stub index: token mass uniform, 1 token per unit length."""
+
+    def tokens_in(self, lo, hi):
+        return max(hi - lo, 0.0)
+
+
+def test_cached_plan_prices_below_uncached():
+    cached_ids = {1, 2}
+    cal = CalibratedCostModel(BASE, cache_probe=lambda mid: mid in cached_ids)
+    for h, m in ((0, 3), (3, 0), (2, 1), (1, 2)):
+        cal.observe_merge_device(h, m, 1e-3 + 0.5e-3 * h + 4e-3 * m)
+    idx = _Idx()
+    q = Interval(0.0, 100.0)
+    # two full-coverage plans with equal merge counts: the cached pair
+    # must price strictly below the uncached pair
+    warm = (_M(1, 0.0, 50.0, 50), _M(2, 50.0, 100.0, 50))
+    cold = (_M(7, 0.0, 50.0, 50), _M(8, 50.0, 100.0, 50))
+    sc_warm = cal.score_models(warm, q, idx, 0.0, 100.0)
+    sc_cold = cal.score_models(cold, q, idx, 0.0, 100.0)
+    assert sc_warm < sc_cold
+    # the analytic provider cannot tell them apart
+    assert BASE.score_models(warm, q, idx, 0.0, 100.0) == pytest.approx(
+        BASE.score_models(cold, q, idx, 0.0, 100.0))
+
+
+def test_price_plan_uses_fetch_ids():
+    cached_ids = {5}
+    cal = CalibratedCostModel(BASE, cache_probe=lambda mid: mid in cached_ids)
+    for h, m in ((0, 2), (2, 0), (1, 1)):
+        cal.observe_merge_device(h, m, 1e-3 + 1e-3 * h + 5e-3 * m)
+    sigma = Interval(0.0, 10.0)
+    warm = Plan(sigma, (FetchStep(5, sigma, 10), MergeStep(1)))
+    cold = Plan(sigma, (FetchStep(9, sigma, 10), MergeStep(1)))
+    assert cal.price_plan(warm, 0.0, 10.0) < cal.price_plan(cold, 0.0, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# version counter (the plan-cache coupling)
+# ---------------------------------------------------------------------------
+
+def test_version_bumps_on_material_refit_only():
+    cal = CalibratedCostModel(BASE)
+    v0 = cal.version
+    cal.observe_train(500, 1.0)
+    assert cal.version > v0, "first fit must change prices"
+    v1 = cal.version
+    # identical repeat observations: coefficients unchanged -> version
+    # stable (repeated interactive queries keep hitting the plan cache)
+    for _ in range(5):
+        cal.observe_train(500, 1.0)
+    assert cal.version == v1
+    # one 10x outlier is jitter/compile noise, not a price change
+    cal.observe_train(500, 10.0)
+    assert cal.version == v1
+    # a *sustained* 10x slower training world is a material change
+    for _ in range(8):
+        cal.observe_train(500, 10.0)
+    assert cal.version > v1
+
+
+def test_warmup_outlier_does_not_skew_device_fit():
+    """The first launch pays jit compile; the fit must not chase it."""
+    cal = CalibratedCostModel(BASE)
+    cal.observe_merge_device(0, 4, 0.5)            # cold: compile-dominated
+    cal.observe_merge_device(4, 0, 4e-3)
+    v = None
+    for _ in range(4):
+        cal.observe_merge_device(4, 0, 4e-3)
+        v = cal.version
+        cal.observe_merge_device(4, 0, 4e-3)
+        assert cal.version == v, "steady-state replays must not reprice"
+    assert cal._t_miss < 0.1, "compile outlier leaked into t_miss"
+
+
+def test_rolling_window_caps_observations():
+    from repro.core.cost import _MAX_OBS
+    cal = CalibratedCostModel(BASE)
+    for i in range(_MAX_OBS + 50):
+        cal.observe_merge_host(1, 1e-3)
+    assert len(cal.calibration.host_obs) == _MAX_OBS
+
+
+def test_performance_loss_fit_roundtrip():
+    pl = PerformanceLoss(rho=0.95)
+    xs = [1, 2, 4, 8]
+    losses = [pl.loss(x) for x in xs]
+    fitted = PerformanceLoss.fit(xs, losses)
+    assert fitted.rho == pytest.approx(0.95, rel=1e-6)

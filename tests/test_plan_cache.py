@@ -1,0 +1,245 @@
+"""Session plan cache: repeated queries skip search, any store
+mutation invalidates, fingerprints are value identities.
+
+The pure cache/store interplay is property-tested (hypothesis, when
+available) against random op sequences; session-level behavior
+(plan_cached on reports, search skipping) uses example tests that run
+everywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Interval, MLegoSession, PlanCache, QuerySpec
+from repro.configs.lda_default import LDAConfig
+from repro.core.search import SearchResult
+from repro.core.store import ModelStore
+from repro.data.corpus import make_corpus, train_test_split
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # optional dev dep (see ci.yml)
+    HAVE_HYPOTHESIS = False
+
+CFG = LDAConfig(n_topics=6, vocab_size=150, alpha=0.5, eta=0.05,
+                max_iters=6, e_step_iters=5, gibbs_sweeps=6)
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def train():
+    corpus, _ = make_corpus(300, CFG.vocab_size, CFG.n_topics,
+                            mean_doc_len=30, seed=3)
+    train, _ = train_test_split(corpus, test_frac=0.1, seed=1)
+    return train
+
+
+def _covered_session(train, edges=(0.0, 100.0, 200.0, 300.0)):
+    """Session whose store fully tiles [0, 300) — full-coverage queries
+    train nothing, so submits leave the store untouched."""
+    store = ModelStore()
+    for lo, hi in zip(edges, edges[1:]):
+        theta = {"lam": RNG.gamma(1.0, 1.0,
+                                  (CFG.n_topics, CFG.vocab_size))
+                 .astype(np.float32)}
+        store.add(Interval(lo, hi), 50, 500, "vb", theta)
+    return MLegoSession(train, CFG, store=store, kind="vb")
+
+
+# ---------------------------------------------------------------------------
+# session-level behavior (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_second_identical_submit_is_a_cache_hit(train):
+    sess = _covered_session(train)
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    first = sess.submit(spec)
+    assert not first.plan_cached
+    assert sess.plan_cache.hits == 0
+    second = sess.submit(spec)
+    assert second.plan_cached, "unchanged store must serve the cached plan"
+    assert sess.plan_cache.hits == 1
+    assert second.model_ids == first.model_ids
+    np.testing.assert_array_equal(first.beta, second.beta)
+
+
+def test_store_mutation_invalidates_plan_cache(train):
+    sess = _covered_session(train)
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    sess.submit(spec)
+    assert len(sess.plan_cache) == 1
+    # any mutation — here an add outside the query — must invalidate
+    sess.store.add(Interval(400.0, 500.0), 10, 100, "vb",
+                   {"lam": np.ones((CFG.n_topics, CFG.vocab_size),
+                                   np.float32)})
+    assert len(sess.plan_cache) == 0
+    rep = sess.submit(spec)
+    assert not rep.plan_cached
+
+
+def test_store_remove_invalidates_plan_cache(train):
+    sess = _covered_session(train)
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    rep = sess.submit(spec)
+    sess.store.remove(rep.model_ids[0])
+    rep2 = sess.submit(spec)
+    assert not rep2.plan_cached
+    assert rep.model_ids[0] not in rep2.model_ids
+
+
+def test_persisting_gap_training_invalidates_own_cache_entry(train):
+    """A submit that grows the store cannot be followed by a stale hit:
+    the fresh models change the plan space."""
+    sess = _covered_session(train, edges=(0.0, 150.0))
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.0)
+    first = sess.submit(spec)
+    assert first.n_trained_tokens > 0          # [150, 300) trained + persisted
+    second = sess.submit(spec)
+    assert not second.plan_cached, "store changed mid-submit"
+    # the re-search sees the persisted gap model: nothing to train now
+    assert second.n_trained_tokens == 0
+
+
+def test_volatile_submit_keeps_cache_warm(train):
+    sess = _covered_session(train, edges=(0.0, 150.0))
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.0,
+                     materialize="volatile")
+    sess.submit(spec)
+    second = sess.submit(spec)
+    assert second.plan_cached, "volatile queries leave the store unchanged"
+    assert second.n_trained_tokens > 0, "the gap is still retrained"
+
+
+def test_union_components_cache_independently(train):
+    sess = _covered_session(train)
+    union = QuerySpec(sigma=[Interval(0.0, 100.0), Interval(200.0, 300.0)],
+                      alpha=1.0)
+    sess.submit(union)
+    assert len(sess.plan_cache) == 2           # one entry per component
+    # a single-interval query on one component reuses its entry
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 100.0), alpha=1.0))
+    assert rep.plan_cached
+
+
+def test_distinct_specs_do_not_collide(train):
+    sess = _covered_session(train)
+    a = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    sess.submit(a)
+    for other in (QuerySpec(sigma=Interval(0.0, 200.0), alpha=1.0),
+                  QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.3),
+                  QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0,
+                            method="psoa")):
+        rep = sess.submit(other)
+        assert not rep.plan_cached, other
+
+
+def test_store_swap_rebinds_plan_cache(train):
+    sess = _covered_session(train)
+    spec = QuerySpec(sigma=Interval(0.0, 300.0), alpha=1.0)
+    sess.submit(spec)
+    assert len(sess.plan_cache) == 1
+    sess.store = _covered_session(train).store      # fresh store object
+    assert len(sess.plan_cache) == 0
+    # mutations of the *new* store keep invalidating
+    sess.submit(spec)
+    assert len(sess.plan_cache) == 1
+    sess.store.add(Interval(400.0, 500.0), 10, 100, "vb",
+                   {"lam": np.ones((CFG.n_topics, CFG.vocab_size),
+                                   np.float32)})
+    assert len(sess.plan_cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# cache/store interplay (pure; property-tested under hypothesis)
+# ---------------------------------------------------------------------------
+
+def _tiny_theta():
+    return {"lam": np.ones((2, 4), np.float32)}
+
+
+def _fake_result(tag):
+    return SearchResult(plan=(), score=float(tag), alpha=0.0)
+
+
+def _run_ops(ops):
+    """Replay (op, arg) sequences against a bound PlanCache; assert the
+    two invariants: (1) immediately after any store mutation the cache
+    is empty; (2) a lookup between a put and the next mutation returns
+    exactly the cached result."""
+    store = ModelStore()
+    cache = PlanCache(max_entries=64)
+    cache.bind_store(store)
+    live_ids = []
+    cached_keys = {}
+    tag = 0
+    for op, arg in ops:
+        if op == "add":
+            m = store.add(Interval(float(arg), float(arg) + 1.0), 1, 10,
+                          "vb", _tiny_theta())
+            live_ids.append(m.model_id)
+            assert len(cache) == 0, "add must clear the cache"
+            cached_keys.clear()
+        elif op == "remove" and live_ids:
+            store.remove(live_ids.pop(arg % len(live_ids)))
+            assert len(cache) == 0, "remove must clear the cache"
+            cached_keys.clear()
+        elif op == "put":
+            tag += 1
+            key = ("q", arg, PlanCache.fingerprint(store.models()))
+            res = _fake_result(tag)
+            cache.put(key, res)
+            cached_keys[key] = res
+        elif op == "get":
+            key = ("q", arg, PlanCache.fingerprint(store.models()))
+            got = cache.get(key)
+            if key in cached_keys:
+                assert got is cached_keys[key], "stale or missing hit"
+            else:
+                assert got is None, "hit for a never-cached key"
+
+
+def test_cache_invalidation_example_sequences():
+    _run_ops([("put", 0), ("get", 0), ("add", 1), ("get", 0),
+              ("put", 0), ("put", 1), ("get", 1), ("remove", 0),
+              ("get", 1), ("put", 2), ("get", 2), ("get", 0)])
+    _run_ops([("add", 0), ("add", 5), ("put", 3), ("get", 3),
+              ("get", 4), ("remove", 1), ("put", 3), ("get", 3)])
+
+
+def test_fingerprint_is_value_identity():
+    store_a, store_b = ModelStore(), ModelStore()
+    for s in (store_a, store_b):
+        s.add(Interval(0.0, 1.0), 1, 10, "vb", _tiny_theta())
+        s.add(Interval(2.0, 3.0), 1, 10, "vb", _tiny_theta())
+    assert PlanCache.fingerprint(store_a.models()) == \
+        PlanCache.fingerprint(store_b.models())
+    store_b.add(Interval(4.0, 5.0), 1, 10, "vb", _tiny_theta())
+    assert PlanCache.fingerprint(store_a.models()) != \
+        PlanCache.fingerprint(store_b.models())
+    # order-insensitive
+    assert PlanCache.fingerprint(list(reversed(store_a.models()))) == \
+        PlanCache.fingerprint(store_a.models())
+
+
+def test_cache_lru_bound():
+    cache = PlanCache(max_entries=4)
+    for i in range(10):
+        cache.put(("k", i), _fake_result(i))
+    assert len(cache) == 4
+    assert cache.get(("k", 0)) is None
+    assert cache.get(("k", 9)) is not None
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.tuples(st.sampled_from(["add", "remove", "put", "get"]),
+                  st.integers(0, 5)),
+        min_size=1, max_size=30)
+
+    @settings(max_examples=50, deadline=None)
+    @given(OPS)
+    def test_cache_invalidation_property(ops):
+        """Any interleaving of store mutations and cache traffic keeps
+        the cache consistent: mutations clear it, lookups never serve
+        an entry across a mutation."""
+        _run_ops(ops)

@@ -1,0 +1,177 @@
+"""Plan IR: lowering correctness, provider pricing equivalence, and the
+frozen-fixture parity regression — the IR-producing searchers and
+batch optimizer must select exactly the model sets the pre-refactor
+tuple path selected under the analytic cost provider
+(tests/fixtures/plan_parity.json was generated at that commit)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.batch_opt import batch_optimize
+from repro.core.cost import CostModel, plan_stats
+from repro.core.plan_ir import (
+    FetchStep,
+    MergeStep,
+    Plan,
+    TrainGapStep,
+    pad_rows_bucketed,
+    pad_rows_widest,
+    size_buckets,
+)
+from repro.core.plans import Interval
+from repro.core.search import SEARCHERS
+from repro.data.corpus import DataIndex, make_corpus
+from tests.conftest import build_store
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "plan_parity.json")
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus, _ = make_corpus(300, 64, 4, mean_doc_len=12, seed=11)
+    index = DataIndex(corpus)
+    cost = CostModel(max_iters=10, n_topics=4)
+    return index, cost
+
+
+# ---------------------------------------------------------------------------
+# frozen parity: IR path == pre-refactor tuple path
+# ---------------------------------------------------------------------------
+
+def _fixture():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_searchers_match_frozen_tuple_path(world):
+    index, cost = world
+    q = Interval(10.0, 280.0)
+    stores = {}
+    for case in _fixture()["search"]:
+        key = (case["seed"], case["n_models"])
+        if key not in stores:
+            stores[key] = build_store(index, n_models=case["n_models"],
+                                      seed=case["seed"], span=(0.0, 300.0),
+                                      k=4, v=64)
+        models = stores[key].models()
+        r = SEARCHERS[case["method"]](models, q, index, cost, case["alpha"])
+        assert list(r.model_ids) == case["model_ids"], case
+        assert r.score == pytest.approx(case["score"], rel=1e-9)
+        # the IR is the same plan, lowered
+        assert r.ir is not None
+        assert list(r.ir.model_ids) == case["model_ids"]
+
+
+def test_batch_optimize_matches_frozen_tuple_path(world):
+    index, cost = world
+    for case in _fixture()["batch"]:
+        store = build_store(index, n_models=6, seed=case["seed"],
+                            span=(0.0, 300.0), k=4, v=64)
+        queries = [Interval(lo, hi) for lo, hi in case["queries"]]
+        b = batch_optimize(store.models(), queries, index, cost)
+        got = [sorted(m.model_id for m in p) for p in b.plans]
+        assert got == case["model_ids"], case
+        assert b.total_time == pytest.approx(case["total_time"], rel=1e-9)
+        assert [list(ir.model_ids) for ir in b.irs] == case["model_ids"]
+
+
+# ---------------------------------------------------------------------------
+# lowering: step structure mirrors the model set + index
+# ---------------------------------------------------------------------------
+
+def test_from_models_structure(world):
+    index, _ = world
+    store = build_store(index, n_models=6, seed=1, span=(0.0, 300.0),
+                        k=4, v=64)
+    models = sorted(store.models(), key=lambda m: m.o.lo)[:2]
+    # force disjointness for a well-formed plan
+    if models[0].o.overlaps(models[1].o):
+        models = models[:1]
+    sigma = Interval(0.0, 300.0)
+    plan = Plan.from_models(models, sigma, index)
+
+    assert len(plan.fetches) == len(models)
+    assert plan.model_ids == tuple(sorted(m.model_id for m in models))
+    # gaps tile sigma minus the fetched ranges
+    fetched = sum(f.o.length for f in plan.fetches)
+    gapped = sum(g.gap.length for g in plan.gaps)
+    assert fetched + gapped == pytest.approx(sigma.length)
+    # tokens agree with plan_stats (what the analytic provider prices)
+    n, unc = plan_stats(tuple(models), sigma, index)
+    assert plan.n_models == n
+    assert plan.uncovered_tokens == pytest.approx(unc)
+    # exactly one merge step, last
+    assert isinstance(plan.steps[-1], MergeStep)
+    assert sum(1 for s in plan.steps if isinstance(s, MergeStep)) == 1
+    assert plan.n_parts == len(models) + sum(
+        1 for g in plan.gaps if g.n_tokens > 0)
+
+
+def test_empty_plan_is_single_train(world):
+    index, _ = world
+    sigma = Interval(0.0, 100.0)
+    plan = Plan.from_models((), sigma, index)
+    assert plan.fetches == ()
+    assert len(plan.gaps) == 1
+    assert plan.gaps[0].gap == sigma
+    assert plan.n_parts == 1
+
+
+def test_plan_key_is_value_identity(world):
+    index, _ = world
+    store = build_store(index, n_models=5, seed=2, span=(0.0, 300.0),
+                        k=4, v=64)
+    sigma = Interval(0.0, 300.0)
+    models = tuple(store.models()[:1])
+    a = Plan.from_models(models, sigma, index)
+    b = Plan.from_models(models, sigma, index)
+    assert a == b and a.key() == b.key() and hash(a) == hash(b)
+    c = Plan.from_models((), sigma, index)
+    assert c.key() != a.key()
+
+
+# ---------------------------------------------------------------------------
+# provider pricing: price_plan(ir) == score_models(tuple) == legacy score
+# ---------------------------------------------------------------------------
+
+def test_price_plan_equals_score_models(world):
+    index, cost = world
+    store = build_store(index, n_models=8, seed=3, span=(0.0, 300.0),
+                        k=4, v=64)
+    q = Interval(10.0, 280.0)
+    scratch = float(index.tokens_in(q.lo, q.hi))
+    for alpha in (0.0, 0.4, 1.0):
+        r = SEARCHERS["psoa++"](store.models(), q, index, cost, alpha)
+        via_models = cost.score_models(r.plan, q, index, alpha, scratch)
+        via_ir = cost.price_plan(r.ir, alpha, scratch)
+        n, unc = plan_stats(r.plan, q, index)
+        legacy = cost.score(alpha, n, unc, scratch)
+        assert via_models == pytest.approx(legacy, rel=1e-12)
+        assert via_ir == pytest.approx(legacy, rel=1e-12)
+        assert r.score == pytest.approx(legacy, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# batched-launch bucketing math (§V.C)
+# ---------------------------------------------------------------------------
+
+def test_bucketed_padding_never_exceeds_widest():
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        counts = rng.integers(1, 33, size=rng.integers(1, 12)).tolist()
+        assert pad_rows_bucketed(counts) <= pad_rows_widest(counts)
+
+
+def test_bucket_grouping_pow2():
+    buckets = size_buckets([1, 2, 3, 4, 5, 9, 16, 17])
+    assert buckets == {1: [0], 2: [1], 4: [2, 3], 8: [4], 16: [5, 6],
+                       32: [7]}
+    # uniform batch: single bucket, zero padding
+    assert pad_rows_bucketed([3, 3, 3]) == 0
+    assert pad_rows_widest([3, 3, 3]) == 0
+    # ragged: one wide plan no longer drags every row to 16
+    assert pad_rows_widest([1, 1, 1, 16]) == 45
+    assert pad_rows_bucketed([1, 1, 1, 16]) == 0

@@ -85,6 +85,60 @@ def test_theorem1_every_plan_from_rl_plans(ranges):
         assert any(k <= r for r in root_sets), (k, root_sets)
 
 
+from repro.core.plans import intersect_lists
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(INTERVALS, min_size=0, max_size=6), INTERVALS)
+def test_subtract_output_disjoint_sorted_idempotent(pieces, universe):
+    """Gaps are sorted, pairwise disjoint, and a fixed point: pulling
+    the same pieces out of any gap changes nothing."""
+    gaps = subtract(universe, pieces)
+    for a, b in zip(gaps, gaps[1:]):
+        assert a.hi <= b.lo, "gaps must be sorted and disjoint"
+    for g in gaps:
+        assert subtract(g, pieces) == [g], "subtract must be idempotent"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(INTERVALS, min_size=0, max_size=6),
+       st.lists(INTERVALS, min_size=0, max_size=6))
+def test_union_length_duplication_and_subadditivity(a, b):
+    """|∪a| ignores duplicates, is monotone in ⊆, and subadditive."""
+    ua, ub, uab = union_length(a), union_length(b), union_length(a + b)
+    assert union_length(a + a) == pytest.approx(ua, abs=1e-9)
+    assert uab >= max(ua, ub) - 1e-9
+    assert uab <= ua + ub + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(INTERVALS, min_size=0, max_size=5),
+       st.lists(INTERVALS, min_size=0, max_size=5), INTERVALS)
+def test_intersect_lists_commutes_and_conserves_length(a, b, universe):
+    """x ∩ y commutes; |σ ∩ pieces| + |gaps| tiles σ exactly (the
+    length-conservation identity the planner's coverage math rests on)."""
+    ab = intersect_lists(a, b)
+    ba = intersect_lists(b, a)
+    assert sorted(ab) == sorted(ba)
+    covered = union_length(intersect_lists([universe], a))
+    gap_len = sum(g.length for g in subtract(universe, a))
+    assert covered + gap_len == pytest.approx(universe.length, abs=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(INTERVALS, min_size=1, max_size=6), INTERVALS)
+def test_intersect_lists_of_disjoint_inputs_stays_disjoint(pieces, universe):
+    """Intersecting two disjoint families (here: gap lists, which
+    subtract guarantees disjoint) yields a disjoint family, and
+    self-intersection of a disjoint family is the identity."""
+    gaps_a = subtract(universe, pieces[:3])
+    gaps_b = subtract(universe, pieces[3:])
+    out = intersect_lists(gaps_a, gaps_b)
+    for x, y in zip(out, out[1:]):
+        assert x.hi <= y.lo
+    assert intersect_lists(gaps_a, gaps_a) == sorted(gaps_a)
+
+
 def test_children_removes_exactly_one():
     ms = [FakeModel(Interval(i * 10.0, i * 10.0 + 5)) for i in range(4)]
     plan = tuple(ms)
