@@ -1,0 +1,83 @@
+"""Gibbs gap training: host exact scan vs doc-blocked device sweep.
+
+The ROADMAP's last sequential host stage in the query hot path: when a
+``gs``-kind query's interval is uncovered, ``submit()`` latency is
+dominated by ``cgs_fit``'s per-token ``lax.scan``.  This section
+measures the blocked replacement (``cgs_fit_blocked``; the
+DeviceBackend gap-training route) against the exact scan on the same
+partition — wall time (warm, compile excluded), speedup, and the
+quality deltas (held-out lpp + greedy-matched top-word overlap) the
+blocked approximation costs.  The host baseline is timed once and
+shared across block widths (it does not depend on them).  Rows
+accumulate in the CI bench JSON so ``BENCH_*.json`` tracks the
+speedup trajectory across commits.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import jax
+
+from benchmarks.common import bench_cfg, bench_world, lpp_of
+from repro.core.gibbs import cgs_fit, cgs_fit_blocked
+from repro.core.lda import greedy_topic_overlap, topics_from_gs
+
+
+def _timed_fit(fn, repeat: int = 2) -> tuple:
+    """(warm seconds, result): first call pays compile, last is timed."""
+    out = fn()
+    t = None
+    for _ in range(max(repeat - 1, 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        t = time.perf_counter() - t0
+    return t, out
+
+
+def rows(quick: bool = False, n_docs: int = None,
+         block_widths: Sequence[int] = None) -> List[Dict]:
+    """One row per doc-block width (the parallelism/staleness knob)."""
+    n_docs = (500 if quick else 1200) if n_docs is None else n_docs
+    if block_widths is None:
+        block_widths = (64, 32) if quick else (128, 64, 32)
+    cfg = bench_cfg(quick)
+    train, test, _, _ = bench_world(n_docs=n_docs, cfg=cfg)
+    key = jax.random.PRNGKey(0)
+    tokens, doc_ids = train.tokens, train.doc_ids
+
+    t_host, nkv_host = _timed_fit(
+        lambda: cgs_fit(tokens, doc_ids, cfg, key))
+    beta_host = topics_from_gs(nkv_host, cfg.eta)
+    lpp_host = lpp_of(beta_host, test)
+
+    out = []
+    for block_docs in block_widths:
+        t_blocked, nkv_blocked = _timed_fit(
+            lambda: cgs_fit_blocked(tokens, doc_ids, cfg, key,
+                                    block_docs=block_docs))
+        beta_blocked = topics_from_gs(nkv_blocked, cfg.eta)
+        lpp_blocked = lpp_of(beta_blocked, test)
+        out.append({
+            "n_docs": train.n_docs,
+            "n_tokens": train.n_tokens,
+            "sweeps": cfg.gibbs_sweeps,
+            "block_docs": block_docs,
+            "n_blocks": -(-train.n_docs // block_docs),
+            "host_scan_s": t_host,
+            "blocked_s": t_blocked,
+            "speedup": (t_host / t_blocked if t_blocked > 0
+                        else float("inf")),
+            "lpp_host": lpp_host,
+            "lpp_blocked": lpp_blocked,
+            "lpp_delta": lpp_blocked - lpp_host,
+            "top_word_overlap": greedy_topic_overlap(beta_host,
+                                                     beta_blocked),
+        })
+    return out
+
+
+def run(n_docs: int = 1200, quick: bool = False,
+        block_docs: int = 64) -> Dict:
+    """Single-width convenience form of :func:`rows`."""
+    return rows(quick=quick, n_docs=n_docs, block_widths=(block_docs,))[0]

@@ -8,6 +8,8 @@
   batch_opt           Fig. 13/14 Alg. 4 cost & benefit
   session             (ours)     unified submit/submit_many API latency
                                  + device-backend cache hit rates
+  gibbs_gap           (ours)     host exact CGS scan vs doc-blocked
+                                 device sweep (latency + quality delta)
   kernels             (ours)     Pallas kernel parity timings
   roofline            (ours)     table from dry-run artifacts, if present
 
@@ -167,6 +169,20 @@ def main() -> None:
                           "device_cache_hit_rate": hit_rate,
                           "providers": [list(r) for r in prov_rows],
                           "padding": pad}
+
+    if want("gibbs_gap"):
+        _section("gibbs_gap (host exact scan vs blocked device sweep)")
+        from benchmarks import gibbs_gap
+        print("block_docs,n_blocks,host_scan_s,blocked_s,speedup,"
+              "lpp_host,lpp_blocked,lpp_delta,top_word_overlap")
+        gg_rows = gibbs_gap.rows(quick=args.quick)
+        for r in gg_rows:
+            print(f"{r['block_docs']},{r['n_blocks']},"
+                  f"{r['host_scan_s']:.4f},{r['blocked_s']:.4f},"
+                  f"{r['speedup']:.2f},{r['lpp_host']:.4f},"
+                  f"{r['lpp_blocked']:.4f},{r['lpp_delta']:.4f},"
+                  f"{r['top_word_overlap']:.3f}")
+        out["gibbs_gap"] = {"rows": gg_rows}
 
     if want("kernels"):
         _section("kernels (interpret-mode parity timings)")

@@ -19,7 +19,11 @@ from repro.api.backend import (
 )
 from repro.api.planner import PlanCache, Planner
 from repro.api.reports import BatchReport, QueryReport
-from repro.api.session import MLegoSession
+from repro.api.session import (
+    CALIBRATION_SIDECAR,
+    MLegoSession,
+    calibration_sidecar,
+)
 from repro.api.spec import (
     MATERIALIZE_POLICIES,
     PERSIST,
@@ -33,7 +37,12 @@ from repro.api.trainers import (
     register_trainer,
     resolve_kind,
 )
-from repro.core.cost import CalibratedCostModel, CostModel, CostProvider
+from repro.core.cost import (
+    CalibratedCostModel,
+    Calibration,
+    CostModel,
+    CostProvider,
+)
 from repro.core.plan_ir import FetchStep, MergeStep, Plan, TrainGapStep
 from repro.core.plans import Interval
 
@@ -41,7 +50,10 @@ __all__ = [
     "BACKEND_NAMES",
     "BackendStats",
     "BatchReport",
+    "CALIBRATION_SIDECAR",
     "CalibratedCostModel",
+    "Calibration",
+    "calibration_sidecar",
     "CostModel",
     "CostProvider",
     "DeviceBackend",

@@ -11,18 +11,24 @@ through the fused Pallas ``merge_topics`` kernel — one padded
 ``(n, K, V)`` launch per query, and *size-bucketed* ``(b, n', K, V)``
 launches for a ``submit_many`` batch (plans grouped by power-of-two
 part count; rows pad only to their bucket's widest plan instead of the
-batch-global widest) — and routes scratch-gap VB training through the
-fused E-step kernel (``vb_estep(..., use_kernel=True)``).
+batch-global widest) — and routes scratch-gap training through the
+kernel paths: VB through the fused E-step kernel
+(``vb_estep(..., use_kernel=True)``), Gibbs through the doc-blocked
+CGS sweep (``cgs_fit_blocked`` / ``kernels/gibbs_sweep``).  A freshly
+trained persisted gap model is warm-inserted into the LRU
+(``note_trained``) so the merge that follows reads it back as a hit.
 
-On CPU hosts the kernels execute in Pallas interpret mode (the CI
-correctness path); on TPU they compile to Mosaic.  Selection flows
-through ``QuerySpec.backend`` / ``MLegoSession(backend=...)``.
+On CPU hosts the merge/E-step kernels execute in Pallas interpret
+mode (the CI correctness path); on TPU they compile to Mosaic.  The
+Gibbs route runs its blocked math as vmapped XLA off-TPU (see
+``kernels/gibbs_sweep/ops.py``).  Selection flows through
+``QuerySpec.backend`` / ``MLegoSession(backend=...)``.
 """
 from __future__ import annotations
 
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, fields, replace
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -37,7 +43,7 @@ from repro.api.trainers import (
 )
 from repro.configs.lda_default import LDAConfig
 from repro.core.lda import MaterializedModel
-from repro.core.merge import device_merge_params
+from repro.core.merge import device_merge_params, device_stat_key
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus, doc_term_matrix
 from repro.kernels.merge_topics.ops import (
@@ -66,21 +72,18 @@ class BackendStats:
     host_fallbacks: int = 0
     merge_device_ms: float = 0.0
     pad_rows: int = 0                 # zero-weight rows in batched launches
+    train_device_ms: float = 0.0      # kernel-route gap-training wall time
+    gap_device_trains: int = 0        # gaps trained through a kernel route
+    train_uploads: int = 0            # fresh gap models warmed into the LRU
     cache_resident_bytes: int = 0     # gauge: bytes resident right now
 
+    _GAUGES = ("cache_resident_bytes",)
+
     def delta(self, since: "BackendStats") -> "BackendStats":
-        return BackendStats(
-            self.cache_hits - since.cache_hits,
-            self.cache_misses - since.cache_misses,
-            self.cache_evictions - since.cache_evictions,
-            self.cache_invalidations - since.cache_invalidations,
-            self.merges - since.merges,
-            self.device_launches - since.device_launches,
-            self.host_fallbacks - since.host_fallbacks,
-            self.merge_device_ms - since.merge_device_ms,
-            self.pad_rows - since.pad_rows,
-            self.cache_resident_bytes,
-        )
+        return BackendStats(**{
+            f.name: getattr(self, f.name) - (
+                0 if f.name in self._GAUGES else getattr(since, f.name))
+            for f in fields(self)})
 
     @property
     def hit_rate(self) -> float:
@@ -120,6 +123,10 @@ class ExecutionBackend:
 
     def trainer(self, kind: str) -> TrainerFn:
         return get_trainer(kind)
+
+    def note_trained(self, model: MaterializedModel) -> None:
+        """Hook: a fresh gap model was persisted after training on this
+        backend (device backends warm their LRU with it)."""
 
     # -- bookkeeping -----------------------------------------------------
     def _count(self, **kw) -> None:
@@ -182,6 +189,12 @@ class _DeviceModelCache:
         self.evictions += 1
         self.epoch += 1
 
+    def _fits_alone(self, arr: jax.Array) -> bool:
+        """A model bigger than the whole byte budget must pass through
+        uncached — inserting it would evict every resident entry
+        before LRU order finally evicted the newcomer itself."""
+        return self.max_bytes is None or int(arr.nbytes) <= self.max_bytes
+
     def get(self, model: MaterializedModel, stat_key: str) -> jax.Array:
         mid = model.model_id
         if mid >= 0 and mid in self._entries:
@@ -190,13 +203,30 @@ class _DeviceModelCache:
             return self._entries[mid]
         self.misses += 1
         arr = jnp.asarray(model.theta[stat_key], jnp.float32)
-        if mid >= 0:
+        if mid >= 0 and self._fits_alone(arr):
             self._entries[mid] = arr
             self.resident_bytes += int(arr.nbytes)
             self.epoch += 1
             while self._entries and self._over_budget():
                 self._evict_lru()
         return arr
+
+    def put(self, model: MaterializedModel, stat_key: str) -> bool:
+        """Warm-insert a model (no hit/miss accounting) — the gap-
+        training upload path.  Returns True if it ended up resident
+        (an over-budget model passes through uncached)."""
+        mid = model.model_id
+        if mid < 0 or mid in self._entries:
+            return mid in self._entries
+        arr = jnp.asarray(model.theta[stat_key], jnp.float32)
+        if not self._fits_alone(arr):
+            return False
+        self._entries[mid] = arr
+        self.resident_bytes += int(arr.nbytes)
+        self.epoch += 1
+        while self._entries and self._over_budget():
+            self._evict_lru()
+        return mid in self._entries
 
     def invalidate(self, model_id: int) -> None:
         arr = self._entries.pop(model_id, None)
@@ -213,7 +243,8 @@ class _DeviceModelCache:
 
 
 class DeviceBackend(ExecutionBackend):
-    """Device-resident merges + kernel E-step training.
+    """Device-resident merges + kernel gap training (VB E-step and the
+    doc-blocked Gibbs sweep).
 
     capacity   : max cached models (LRU-evicted beyond it)
     max_bytes  : optional cap on resident parameter bytes (evicts LRU
@@ -222,8 +253,20 @@ class DeviceBackend(ExecutionBackend):
     interpret  : Pallas interpret override (None = auto: interpret off
                  TPU or when MLEGO_KERNEL_INTERPRET=1)
     kernel_estep : route "vb" gap training through the fused E-step
-                 kernel (True by default; the host trainer registry is
-                 used for every other kind)
+                 kernel (True by default)
+    kernel_gibbs : route "gs" gap training through the doc-blocked CGS
+                 sweep (``core.gibbs.cgs_fit_blocked``; True by
+                 default).  The blocked sampler is statistically — not
+                 bit — equivalent to the host exact scan; HostBackend
+                 keeps the exact ``cgs_fit``.
+    gibbs_block_docs : documents per sampler block on the gs route
+                 (more blocks = shorter sequential chain, slightly
+                 staler topic-word counts within a sweep)
+
+    Every other kind falls back to the host trainer registry.  Fresh
+    gap models are *warm-inserted* into the LRU (``note_trained``) so
+    the merge that follows training hits the cache instead of
+    re-uploading Θ — tracked in ``stats.train_uploads``.
     """
 
     name = "device"
@@ -231,11 +274,15 @@ class DeviceBackend(ExecutionBackend):
     def __init__(self, capacity: int = 64, *,
                  max_bytes: Optional[int] = None,
                  interpret: Optional[bool] = None,
-                 kernel_estep: bool = True):
+                 kernel_estep: bool = True,
+                 kernel_gibbs: bool = True,
+                 gibbs_block_docs: int = 64):
         super().__init__()
         self.cache = _DeviceModelCache(capacity, max_bytes)
         self.interpret = interpret
         self.kernel_estep = kernel_estep
+        self.kernel_gibbs = kernel_gibbs
+        self.gibbs_block_docs = gibbs_block_docs
         self._store: Optional[ModelStore] = None
 
     # -- lifecycle -------------------------------------------------------
@@ -320,14 +367,43 @@ class DeviceBackend(ExecutionBackend):
     def trainer(self, kind: str) -> TrainerFn:
         if kind == "vb" and self.kernel_estep:
             return self._train_vb_kernel
+        if kind == "gs" and self.kernel_gibbs:
+            return self._train_gs_kernel
         return get_trainer(kind)
 
-    @staticmethod
-    def _train_vb_kernel(corpus: Corpus, cfg: LDAConfig,
+    def note_trained(self, model: MaterializedModel) -> None:
+        fam = merge_family_name(model.kind)
+        if fam is None:                  # custom merge: no device form
+            return
+        if self.cache.put(model, device_stat_key(fam)):
+            self._count(train_uploads=1)
+        self._sync_cache_counters()
+
+    def _train_vb_kernel(self, corpus: Corpus, cfg: LDAConfig,
                          key) -> Dict[str, np.ndarray]:
         from repro.core.vb import vb_fit
+        t0 = time.perf_counter()
         x = doc_term_matrix(corpus)
-        return {"lam": np.asarray(vb_fit(x, key, cfg, use_kernel=True))}
+        lam = np.asarray(vb_fit(x, key, cfg, use_kernel=True))
+        self._count(gap_device_trains=1,
+                    train_device_ms=(time.perf_counter() - t0) * 1e3)
+        return {"lam": lam}
+
+    def _train_gs_kernel(self, corpus: Corpus, cfg: LDAConfig,
+                         key) -> Dict[str, np.ndarray]:
+        from repro.core.gibbs import cgs_fit_blocked
+        t0 = time.perf_counter()
+        # an explicit interpret override must reach the Pallas body
+        # like it does on the merge/E-step routes — use_kernel=None
+        # alone would route off-TPU hosts to the jnp reference
+        nkv = cgs_fit_blocked(corpus.tokens, corpus.doc_ids, cfg, key,
+                              block_docs=self.gibbs_block_docs,
+                              use_kernel=(None if self.interpret is None
+                                          else True),
+                              interpret=self.interpret)
+        self._count(gap_device_trains=1,
+                    train_device_ms=(time.perf_counter() - t0) * 1e3)
+        return {"delta_nkv": nkv}
 
 
 _FACTORIES = {"host": HostBackend, "device": DeviceBackend}

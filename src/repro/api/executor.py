@@ -10,8 +10,15 @@ store untouched.
 Both stages execute through a pluggable ``ExecutionBackend``
 (``repro.api.backend``): the host backend preserves the seed's NumPy
 semantics; the device backend runs merges as fused Pallas launches
-over a device-resident model cache.  ``backend=None`` falls back to
-host semantics so direct callers (tests, schedulers) need no wiring.
+over a device-resident model cache and routes gap training through
+the kernel paths (fused VB E-step; doc-blocked Gibbs sweep).  A
+persisted gap model is handed back to the backend (``note_trained``)
+so device backends can warm their cache with it before the merge that
+follows.  ``backend=None`` falls back to host semantics so direct
+callers (tests, schedulers) need no wiring.  ``gather`` returns one
+measured ``(tokens, seconds)`` sample per trained gap — the session
+feeds these to the cost provider keyed by the backend that ran them,
+which is how host and device κ are calibrated separately.
 
 The executor consumes the planner's **Plan IR** (``repro.core.plan_ir``):
 ``gather`` walks a ``Plan``'s ``FetchStep``/``TrainGapStep`` sequence —
@@ -73,8 +80,13 @@ class Executor:
             else get_trainer(kind)
         theta = trainer(sub, self.cfg, self._next_key())
         if persist:
-            return self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
-                                  kind, theta)
+            m = self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
+                               kind, theta)
+            if backend is not None:
+                # warm the backend's device cache with the fresh model —
+                # the merge right after this will read it back
+                backend.note_trained(m)
+            return m
         return MaterializedModel(-1, Interval(lo, hi), sub.n_docs,
                                  sub.n_tokens, kind, theta)
 

@@ -32,11 +32,13 @@ class QueryReport:
     ``backend`` names the execution backend that answered the query.
     On the device backend, ``merge_device_ms`` is the wall time of the
     fused kernel launch (upload + launch + sync; 0.0 on host),
-    ``cache_hits``/``cache_misses`` count device-cache traffic for this
-    query's parts, and ``cache_resident_bytes`` gauges the device
-    model cache's residency right after the merge.  Inside a batch the
-    launch is shared, so the traffic counters live on the
-    ``BatchReport`` and stay zero here.
+    ``train_device_ms`` the wall time of kernel-route gap training
+    (blocked Gibbs sweep / fused E-step; 0.0 on host or when no gap
+    was trained), ``cache_hits``/``cache_misses`` count device-cache
+    traffic for this query's parts, and ``cache_resident_bytes``
+    gauges the device model cache's residency right after the merge.
+    Inside a batch the launch is shared, so the traffic counters live
+    on the ``BatchReport`` and stay zero here.
 
     ``plan_cached`` is True when every component's plan came from the
     session plan cache — the search stage was skipped entirely (and
@@ -54,6 +56,7 @@ class QueryReport:
     materialized: List[MaterializedModel] = field(default_factory=list)
     backend: str = "host"
     merge_device_ms: float = 0.0
+    train_device_ms: float = 0.0
     cache_hits: int = 0
     cache_misses: int = 0
     cache_resident_bytes: int = 0
@@ -94,10 +97,12 @@ class BatchReport:
     materialized: List[MaterializedModel] = field(default_factory=list)
     backend: str = "host"
     merge_device_ms: float = 0.0     # shared bucketed launches (batch total)
+    train_device_ms: float = 0.0     # kernel-route shared gap training
     cache_hits: int = 0
     cache_misses: int = 0
     cache_resident_bytes: int = 0
     pad_rows: int = 0                # zero-weight rows across the launches
+    plan_cached: bool = False        # Alg. 4 result served from the cache
 
     @property
     def merge_s(self) -> float:

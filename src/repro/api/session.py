@@ -36,6 +36,7 @@ overrides the session default per query.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Optional, Sequence, Union
 
@@ -48,13 +49,25 @@ from repro.api.reports import BatchReport, QueryReport
 from repro.api.spec import QuerySpec
 from repro.api.trainers import resolve_kind
 from repro.configs.lda_default import LDAConfig
-from repro.core.batch_opt import _segments
-from repro.core.cost import CalibratedCostModel, CostModel, CostProvider
+from repro.core.batch_opt import BatchResult, _segments
+from repro.core.cost import (
+    CalibratedCostModel,
+    Calibration,
+    CostModel,
+    CostProvider,
+)
 from repro.core.lda import MaterializedModel
 from repro.core.plans import Interval
 from repro.core.search import SearchResult
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus, DataIndex
+
+CALIBRATION_SIDECAR = "calibration.json"
+
+
+def calibration_sidecar(store_path: str) -> str:
+    """Path of the calibration JSON sidecar for a store directory."""
+    return os.path.join(store_path, CALIBRATION_SIDECAR)
 
 
 class MLegoSession:
@@ -65,14 +78,16 @@ class MLegoSession:
                  cost: Union[CostProvider, str, None] = None,
                  kind: str = "vb", seed: int = 0,
                  backend: Union[str, ExecutionBackend] = "host",
-                 plan_cache_entries: int = 256):
+                 plan_cache_entries: int = 256,
+                 calibration_path: Optional[str] = None):
         self.corpus = corpus
         self.index = DataIndex(corpus)
         self._backends = {}
         self._plan_cache = PlanCache(max_entries=plan_cache_entries)
         self.store = store if store is not None else ModelStore()
         self.cfg = cfg
-        self.cost = self._make_cost(cost, cfg)
+        self.calibration_path = calibration_path
+        self.cost = self._make_cost(cost, cfg, calibration_path)
         self.kind = resolve_kind(kind)       # default backend for train_range
         self._key = jax.random.PRNGKey(seed)
         self.planner = Planner(self.index, self.cost)
@@ -82,17 +97,53 @@ class MLegoSession:
 
     @staticmethod
     def _make_cost(cost: Union[CostProvider, str, None],
-                   cfg: LDAConfig) -> CostProvider:
+                   cfg: LDAConfig,
+                   calibration_path: Optional[str] = None) -> CostProvider:
         base = CostModel(max_iters=cfg.max_iters, n_topics=cfg.n_topics)
         if cost is None or cost == "analytic":
+            if calibration_path is not None:
+                # silently ignoring the sidecar would leave the session
+                # at analytic prices while the caller believes it
+                # warm-started
+                raise ValueError(
+                    "calibration_path requires cost='calibrated' (or a "
+                    "CalibratedCostModel instance); the analytic "
+                    "provider has nothing to load it into")
             return base
         if cost == "calibrated":
-            return CalibratedCostModel(base)
+            provider = CalibratedCostModel(base)
+            if calibration_path:
+                provider.load_calibration(calibration_path)
+            return provider
         if isinstance(cost, str):
             raise ValueError(f"unknown cost provider {cost!r}; "
                              f"one of ('analytic', 'calibrated') or a "
                              f"CostProvider instance")
+        if calibration_path is not None:
+            if not isinstance(cost, CalibratedCostModel):
+                raise ValueError(
+                    "calibration_path requires cost='calibrated' (or a "
+                    f"CalibratedCostModel instance), got {cost!r}")
+            if len(cost.calibration) == 0:
+                cost.load_calibration(calibration_path)
         return cost
+
+    def save_calibration(self, path: Optional[str] = None) -> str:
+        """Persist the calibrated provider's measurement log as the
+        store's JSON sidecar (versioned) — the next
+        ``MLegoSession(cost="calibrated", calibration_path=...)`` over
+        this store starts at today's prices instead of the analytic
+        cold start.  Returns the path written."""
+        path = path or self.calibration_path
+        if path is None:
+            raise ValueError("no calibration path: pass one here or set "
+                             "calibration_path= on the session")
+        cal = getattr(self.cost, "calibration", None)
+        if cal is None:
+            raise ValueError("session's cost provider is not calibrated; "
+                             "nothing to persist")
+        cal.save(path)
+        return path
 
     # ------------------------------------------------------------------
     @property
@@ -172,19 +223,25 @@ class MLegoSession:
         # a calibrated provider prices fetches by device-LRU residency
         # (cache_probe), so residency churn must key the cache too —
         # otherwise a cached plan could be served at stale fetch prices
-        epoch = 0
-        if getattr(self.cost, "cache_probe", None) is not None \
-                and isinstance(backend, DeviceBackend):
-            epoch = backend.cache.epoch
+        epoch = self._cache_epoch(backend)
         key = (sigma.lo, sigma.hi, spec.alpha, kind, spec.method,
                backend.name, fingerprint, self.cost,
                getattr(self.cost, "version", 0), epoch)
         cached = self._plan_cache.get(key)
         if cached is not None:
             return cached, True
+        # κ is backend-keyed: gap training must be priced at the rate
+        # of the backend that will actually run it
+        self.cost.set_train_backend(backend.name)
         res = self.planner.plan(models, sigma, spec.alpha, spec.method)
         self._plan_cache.put(key, res)
         return res, False
+
+    def _cache_epoch(self, backend: ExecutionBackend) -> int:
+        if getattr(self.cost, "cache_probe", None) is not None \
+                and isinstance(backend, DeviceBackend):
+            return backend.cache.epoch
+        return 0
 
     def _observe_merge(self, n_merges: int, merge_s: float, d) -> None:
         """Feed measured merge timings to the cost provider."""
@@ -219,6 +276,7 @@ class MLegoSession:
         all_cached = True
         models = self._models(kind)
         fingerprint = PlanCache.fingerprint(models)
+        snap_train = backend.stats
         for sigma in spec.sigma:
             t0 = time.perf_counter()
             res, was_cached = self._plan_component(
@@ -240,10 +298,11 @@ class MLegoSession:
             fresh.extend(c_fresh)
             n_tok += c_tok
             for tok, secs in obs:
-                self.cost.observe_train(tok, secs)
+                self.cost.observe_train(tok, secs, backend=backend.name)
 
         if not parts:
             raise ValueError(f"query {spec.sigma} selects no data")
+        train_device_ms = backend.stats.delta(snap_train).train_device_ms
         snap = backend.stats
         t2 = time.perf_counter()
         beta = self.executor.merge(parts, backend=backend)
@@ -254,6 +313,7 @@ class MLegoSession:
                            train_s, merge_s, search_s, materialized=fresh,
                            backend=backend.name,
                            merge_device_ms=d.merge_device_ms,
+                           train_device_ms=train_device_ms,
                            cache_hits=d.cache_hits,
                            cache_misses=d.cache_misses,
                            cache_resident_bytes=d.cache_resident_bytes,
@@ -264,13 +324,22 @@ class MLegoSession:
         """§V.C batch path: Alg. 4 plan combination, shared gap training.
 
         All specs must use one trainer kind (shared segments are merged
-        into every covering query, so their Θ must be homogeneous), one
-        execution backend (the merge stage launches as size-bucketed
-        batched kernels), and one α (the batch is planned jointly, and
-        α seeds every query's initial plan).  Union predicates are
-        supported: each component interval enters the joint
-        optimization as its own range, and the owning query merges
-        parts from all its components.
+        into every covering query, so their Θ must be homogeneous) and
+        one execution backend (the merge stage launches as
+        size-bucketed batched kernels).  The joint optimization runs
+        under one α (it seeds every query's initial plan); a mixed-α
+        batch is *auto-split* into per-α sub-batches — each planned and
+        trained jointly on its own, reports re-interleaved into
+        submission order (no gap sharing happens *across* α groups).
+        Union predicates are supported: each component interval enters
+        the joint optimization as its own range, and the owning query
+        merges parts from all its components.
+
+        A uniform-α batch consults the session plan cache first: the
+        whole Alg. 4 result is memoized under the batch's spec
+        fingerprints + store fingerprint, so a repeated identical batch
+        over an unchanged store skips the joint search entirely
+        (``BatchReport.plan_cached``).
 
         The batch is *reordered* for joint planning — Alg. 4 visits the
         widest query first so the shared-segment structure is anchored
@@ -283,9 +352,7 @@ class MLegoSession:
             return BatchReport([], self.planner.plan_batch([], []), 0.0, 0.0)
         alphas = {s.alpha for s in specs}
         if len(alphas) != 1:
-            raise ValueError(
-                f"submit_many plans the batch jointly under one alpha, got "
-                f"{sorted(alphas)} — split the batch or align the specs")
+            return self._submit_many_split(specs)
         alpha = alphas.pop()
         kinds = {s.kind or self.kind for s in specs}
         if len(kinds) != 1:
@@ -307,14 +374,28 @@ class MLegoSession:
                 owner.append(i)
                 sigmas.append(sigma)
 
+        # batch-level plan cache: repeated identical batches over an
+        # unchanged store (same specs, prices, residency) skip Alg. 4
+        models = self._models(kind)
+        bkey = ("batch",
+                tuple((s.lo, s.hi) for s in sigmas), tuple(owner),
+                alpha, kind, backend.name, PlanCache.fingerprint(models),
+                self.cost, getattr(self.cost, "version", 0),
+                self._cache_epoch(backend))
         t0 = time.perf_counter()
-        opt = self.planner.plan_batch(self._models(kind), sigmas, alpha)
+        opt = self._plan_cache.get(bkey)
+        batch_cached = opt is not None
+        if opt is None:
+            self.cost.set_train_backend(backend.name)
+            opt = self.planner.plan_batch(models, sigmas, alpha)
+            self._plan_cache.put(bkey, opt)
         shared_search_s = time.perf_counter() - t0
 
         # train every atomic shared gap segment exactly once (gap
         # structure read off the lowered Plan IR)
         gap_lists = [[g.gap for g in ir.gaps] for ir in opt.irs]
         seg_models = {}
+        snap_train = backend.stats
         t1 = time.perf_counter()
         for lo, hi, _ in _segments(gap_lists):
             persist = any(
@@ -327,8 +408,10 @@ class MLegoSession:
             if m is not None:
                 seg_models[(lo, hi)] = m
                 self.cost.observe_train(m.n_tokens,
-                                        time.perf_counter() - t_gap)
+                                        time.perf_counter() - t_gap,
+                                        backend=backend.name)
         shared_train_s = time.perf_counter() - t1
+        train_device_ms = backend.stats.delta(snap_train).train_device_ms
 
         # assemble every query's part list from its components' IR
         # (fetches resolved by id), then merge the whole batch through
@@ -380,7 +463,56 @@ class MLegoSession:
                            materialized=list(seg_models.values()),
                            backend=backend.name,
                            merge_device_ms=d.merge_device_ms,
+                           train_device_ms=train_device_ms,
                            cache_hits=d.cache_hits,
                            cache_misses=d.cache_misses,
                            cache_resident_bytes=d.cache_resident_bytes,
-                           pad_rows=d.pad_rows)
+                           pad_rows=d.pad_rows,
+                           plan_cached=batch_cached)
+
+    def _submit_many_split(self, specs: List[QuerySpec]) -> BatchReport:
+        """Mixed-α batch: one Alg. 4 sub-batch per α, reports stitched
+        back into submission order.  Gap segments are shared *within*
+        each α group only — queries under different α chose their
+        plans under different accuracy/latency preferences, so their
+        joint pruning is not comparable."""
+        # kind/backend uniformity is a *batch-wide* contract — validate
+        # before splitting so a mixed batch fails the same way whether
+        # or not its α values happen to coincide
+        kinds = {s.kind or self.kind for s in specs}
+        if len(kinds) != 1:
+            raise ValueError(f"submit_many requires one backend kind per "
+                             f"batch, got {sorted(kinds)}")
+        if len({self._backend_for(s) for s in specs}) != 1:
+            raise ValueError(
+                "submit_many requires one execution backend per batch")
+        groups: "dict[float, List[int]]" = {}
+        for i, s in enumerate(specs):
+            groups.setdefault(s.alpha, []).append(i)
+        reports: List[Optional[QueryReport]] = [None] * len(specs)
+        subs: List[BatchReport] = []
+        for idxs in groups.values():
+            sub = self.submit_many([specs[i] for i in idxs])
+            subs.append(sub)
+            for i, rep in zip(idxs, sub.reports):
+                reports[i] = rep
+        opt = BatchResult(
+            plans=[], total_time=sum(s.opt.total_time for s in subs),
+            naive_time=sum(s.opt.naive_time for s in subs),
+            benefit=sum(s.opt.benefit for s in subs),
+            n_scored=sum(s.opt.n_scored for s in subs),
+            elapsed_s=sum(s.opt.elapsed_s for s in subs),
+            method="ALG4/alpha-split")
+        return BatchReport(
+            reports, opt,
+            shared_search_s=sum(s.shared_search_s for s in subs),
+            shared_train_s=sum(s.shared_train_s for s in subs),
+            materialized=[m for s in subs for m in s.materialized],
+            backend=subs[0].backend,
+            merge_device_ms=sum(s.merge_device_ms for s in subs),
+            train_device_ms=sum(s.train_device_ms for s in subs),
+            cache_hits=sum(s.cache_hits for s in subs),
+            cache_misses=sum(s.cache_misses for s in subs),
+            cache_resident_bytes=subs[-1].cache_resident_bytes,
+            pad_rows=sum(s.pad_rows for s in subs),
+            plan_cached=all(s.plan_cached for s in subs))

@@ -33,8 +33,11 @@ roughly geometrically with merge count) and can be re-fit from the
 """
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -160,8 +163,14 @@ class CostProvider:
         return 0.0
 
     # --- measurement intake (no-ops except on calibrated providers) ------
-    def observe_train(self, n_tokens: float, seconds: float) -> None:
+    def observe_train(self, n_tokens: float, seconds: float,
+                      backend: str = "host") -> None:
         pass
+
+    def set_train_backend(self, backend: str) -> None:
+        """Name the execution backend whose gap training the next plan
+        prices — host and device samplers have different κ (the device
+        route runs the blocked Gibbs sweep / fused E-step kernel)."""
 
     def observe_merge_host(self, n_merges: int, seconds: float) -> None:
         pass
@@ -196,18 +205,26 @@ class CostModel(CostProvider):
 
 _MAX_OBS = 512    # rolling window per observation kind
 
+# JSON sidecar format version; unknown versions load as a cold start
+# (never crash a session over a stale sidecar)
+CALIBRATION_FORMAT = 1
+
 
 @dataclass
 class Calibration:
     """Rolling measurement log a session accumulates per backend.
 
-    train_obs  : (tokens, seconds) per trained gap
+    train_obs  : backend name -> (tokens, seconds) per trained gap —
+                 κ is fit per backend, so the planner can price host
+                 (exact scan) and device (blocked kernel) gap training
+                 separately
     host_obs   : (x merges, seconds) per host merge
     device_obs : (hits, misses, seconds) per fused device launch
     pad_obs    : (pad rows, seconds) per *bucketed batch* launch
     """
 
-    train_obs: List[Tuple[float, float]] = field(default_factory=list)
+    train_obs: Dict[str, List[Tuple[float, float]]] = field(
+        default_factory=dict)
     host_obs: List[Tuple[int, float]] = field(default_factory=list)
     device_obs: List[Tuple[int, int, float]] = field(default_factory=list)
     pad_obs: List[Tuple[int, float]] = field(default_factory=list)
@@ -216,6 +233,62 @@ class Calibration:
         log.append(sample)
         if len(log) > _MAX_OBS:
             del log[: len(log) - _MAX_OBS]
+
+    def push_train(self, backend: str, sample: Tuple[float, float]) -> None:
+        self._push(self.train_obs.setdefault(backend, []), sample)
+
+    def __len__(self) -> int:
+        return (sum(len(o) for o in self.train_obs.values())
+                + len(self.host_obs) + len(self.device_obs)
+                + len(self.pad_obs))
+
+    # --- persistence (the store's JSON sidecar) ---------------------------
+    def to_json_dict(self) -> dict:
+        return {
+            "format": CALIBRATION_FORMAT,
+            "train_obs": {b: [list(s) for s in obs]
+                          for b, obs in self.train_obs.items()},
+            "host_obs": [list(s) for s in self.host_obs],
+            "device_obs": [list(s) for s in self.device_obs],
+            "pad_obs": [list(s) for s in self.pad_obs],
+        }
+
+    @classmethod
+    def from_json_dict(cls, doc: dict) -> Optional["Calibration"]:
+        """None on a version/shape mismatch (callers cold-start)."""
+        if not isinstance(doc, dict) \
+                or doc.get("format") != CALIBRATION_FORMAT:
+            return None
+        try:
+            return cls(
+                train_obs={str(b): [(float(t), float(s)) for t, s in obs]
+                           for b, obs in doc["train_obs"].items()},
+                host_obs=[(int(x), float(s)) for x, s in doc["host_obs"]],
+                device_obs=[(int(h), int(m), float(s))
+                            for h, m, s in doc["device_obs"]],
+                pad_obs=[(int(p), float(s)) for p, s in doc["pad_obs"]],
+            )
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def save(self, path: str) -> None:
+        """Atomic write of the JSON sidecar."""
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with tempfile.NamedTemporaryFile("w", dir=d, delete=False) as f:
+            json.dump(self.to_json_dict(), f, indent=1)
+            tmp = f.name
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> Optional["Calibration"]:
+        """None when missing/unreadable/stale-format (cold start)."""
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return None
+        return cls.from_json_dict(doc)
 
     # Fits are *robust*: jit compilation inflates the first launch /
     # first training call by orders of magnitude, and a mean over raw
@@ -233,12 +306,23 @@ class Calibration:
         return float(np.median(rates))
 
     # --- fits -------------------------------------------------------------
-    def fit_kappa(self, base: CostModel) -> Optional[float]:
+    def fit_kappa(self, base: CostModel,
+                  backend: str = "host") -> Optional[float]:
         """κ from seconds ≈ κ · M_i · tokens^e · K per trained gap."""
         return self._robust(
             [(s / (base.max_iters * t ** base.train_exponent
                    * base.n_topics))
-             for t, s in self.train_obs if t > 0 and s > 0])
+             for t, s in self.train_obs.get(backend, ())
+             if t > 0 and s > 0])
+
+    def fit_kappas(self, base: CostModel) -> Dict[str, float]:
+        """Backend name -> fitted κ, for every backend with samples."""
+        out = {}
+        for backend in self.train_obs:
+            kappa = self.fit_kappa(base, backend)
+            if kappa is not None:
+                out[backend] = kappa
+        return out
 
     def fit_t_merge(self) -> Optional[float]:
         return self._robust(
@@ -274,7 +358,11 @@ class CalibratedCostModel(CostProvider):
     Starts at exact parity with ``base`` (no observations → analytic
     prices) and tightens as the session feeds it measurements:
 
-      κ, e          training cost per token^e (κ refit, e kept)
+      κ (per backend) training cost per token^e, fit separately per
+                    execution backend (host exact Gibbs scan vs the
+                    blocked device sweep have very different rates);
+                    ``set_train_backend`` names the backend whose κ
+                    the next plan search prices
       t_merge       per-merge host cost
       t_hit/t_miss  per-part device fetch cost split by cache state —
                     ``cache_probe(model_id)`` (wired to the device
@@ -282,17 +370,23 @@ class CalibratedCostModel(CostProvider):
       t_pad         per padding row in bucketed batch launches
 
     ``version`` increments on every refit so the session plan cache
-    drops plans priced under stale coefficients.
+    drops plans priced under stale coefficients.  ``calibration`` can
+    be preloaded from the store's JSON sidecar (``Calibration.load``)
+    so a new session starts at the previous session's prices instead
+    of the analytic cold start.
     """
 
     def __init__(self, base: Optional[CostModel] = None, *,
-                 cache_probe: Optional[Callable[[int], bool]] = None):
+                 cache_probe: Optional[Callable[[int], bool]] = None,
+                 calibration: Optional[Calibration] = None):
         self.base = base or CostModel()
-        self.calibration = Calibration()
+        self.calibration = calibration if calibration is not None \
+            else Calibration()
         self.cache_probe = cache_probe
+        self.train_backend = "host"
         self._version = 0
-        self._dirty = False
-        self._kappa: Optional[float] = None
+        self._dirty = len(self.calibration) > 0
+        self._kappa: Dict[str, float] = {}
         self._t_merge: Optional[float] = None
         self._t_hit = self._t_miss = 0.0
         self._t_pad: Optional[float] = None
@@ -321,10 +415,27 @@ class CalibratedCostModel(CostProvider):
         return self._t_merge if self._t_merge is not None \
             else self.base.t_merge
 
+    def set_train_backend(self, backend: str) -> None:
+        self.train_backend = backend
+
+    def load_calibration(self, path: str) -> bool:
+        """Replace the measurement log with a persisted sidecar's.
+        False (and no change) when missing/unreadable/stale-format."""
+        cal = Calibration.load(path)
+        if cal is None:
+            return False
+        self.calibration = cal
+        self._dirty = len(cal) > 0
+        return True
+
     def c_train(self, n_tokens: float) -> float:
         self._ensure_fit()
-        kappa = self._kappa if self._kappa is not None \
-            else self.base.kappa_train
+        # the active backend's fitted κ; an unfit device backend falls
+        # back to the host fit (closer than the analytic prior), then
+        # to the analytic base
+        kappa = self._kappa.get(self.train_backend,
+                                self._kappa.get("host",
+                                                self.base.kappa_train))
         return (kappa * self.base.max_iters
                 * float(n_tokens) ** self.base.train_exponent
                 * self.base.n_topics)
@@ -347,9 +458,10 @@ class CalibratedCostModel(CostProvider):
         return (self._t_pad or 0.0) * max(pad_rows, 0)
 
     # --- measurement intake -------------------------------------------------
-    def observe_train(self, n_tokens: float, seconds: float) -> None:
-        self.calibration._push(self.calibration.train_obs,
-                               (float(n_tokens), float(seconds)))
+    def observe_train(self, n_tokens: float, seconds: float,
+                      backend: str = "host") -> None:
+        self.calibration.push_train(backend,
+                                    (float(n_tokens), float(seconds)))
         self._dirty = True
 
     def observe_merge_host(self, n_merges: int, seconds: float) -> None:
@@ -388,7 +500,7 @@ class CalibratedCostModel(CostProvider):
 
     def refit(self) -> None:
         c = self.calibration
-        kappa = c.fit_kappa(self.base)
+        kappas = c.fit_kappas(self.base)
         t_merge = c.fit_t_merge()
         t_hit, t_miss = self._t_hit, self._t_miss
         dev = c.fit_device()
@@ -402,10 +514,12 @@ class CalibratedCostModel(CostProvider):
         if t_pad is None and dev is not None:
             # padding rows stream like one cached row of bandwidth
             t_pad = t_hit
-        new = (kappa, t_merge, t_hit, t_miss, t_pad)
-        old = (self._kappa, self._t_merge, self._t_hit, self._t_miss,
-               self._t_pad)
-        self._kappa, self._t_merge = kappa, t_merge
+        backends = sorted(set(kappas) | set(self._kappa))
+        new = tuple(kappas.get(b) for b in backends) + (
+            t_merge, t_hit, t_miss, t_pad)
+        old = tuple(self._kappa.get(b) for b in backends) + (
+            self._t_merge, self._t_hit, self._t_miss, self._t_pad)
+        self._kappa, self._t_merge = kappas, t_merge
         self._t_hit, self._t_miss, self._t_pad = t_hit, t_miss, t_pad
         # version gates the session plan cache: bump only when prices
         # moved materially, so a converged calibration keeps repeated

@@ -58,6 +58,25 @@ def model_topics(model: MaterializedModel, cfg: LDAConfig) -> np.ndarray:
     return topics_from_gs(model.delta_nkv, cfg.eta)
 
 
+def greedy_topic_overlap(beta_a: np.ndarray, beta_b: np.ndarray,
+                         top_n: int = 20) -> float:
+    """Fraction of shared top-``top_n`` words under greedy 1:1 topic
+    matching — the sampler-agnostic quality-parity metric the blocked
+    Gibbs bench and its regression tests share (samplers permute
+    topics, so rows must be matched before comparing)."""
+    k = beta_a.shape[0]
+    tops_a = [set(np.argsort(beta_a[i])[-top_n:].tolist()) for i in range(k)]
+    tops_b = [set(np.argsort(beta_b[i])[-top_n:].tolist()) for i in range(k)]
+    m = np.array([[len(a & b) for b in tops_b] for a in tops_a])
+    total = 0
+    for _ in range(k):
+        i, j = np.unravel_index(np.argmax(m), m.shape)
+        total += m[i, j]
+        m[i, :] = -1
+        m[:, j] = -1
+    return total / (k * top_n)
+
+
 def log_predictive_probability(
     beta: np.ndarray,
     x_test: np.ndarray,

@@ -82,6 +82,18 @@ def merged_theta(models: Sequence[MaterializedModel], cfg: LDAConfig):
 
 DEVICE_MERGE_FAMILIES = ("vb", "gs")
 
+_DEVICE_STAT_KEYS = {"vb": "lam", "gs": "delta_nkv"}
+
+
+def device_stat_key(kind: str) -> str:
+    """Θ entry that is the merge statistic for a device family
+    (cfg-free subset of :func:`device_merge_params`)."""
+    try:
+        return _DEVICE_STAT_KEYS[kind]
+    except KeyError:
+        raise KeyError(f"kind {kind!r} has no device merge form "
+                       f"(one of {DEVICE_MERGE_FAMILIES})") from None
+
 
 def device_merge_params(kind: str, cfg: LDAConfig):
     """(stat_key, bias, base, finisher) for a kernel-mergeable kind.

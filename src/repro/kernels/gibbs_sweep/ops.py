@@ -1,0 +1,83 @@
+"""jit'd public wrapper for the doc-blocked CGS sweep kernel.
+
+``gibbs_sweep`` runs ONE blocked sweep.  Route selection mirrors the
+other kernel packages but adds a host route: on TPU (or when
+``MLEGO_KERNEL_INTERPRET=1`` forces the CI correctness leg) the Pallas
+kernel body executes; everywhere else the vmapped jnp reference runs —
+it is the same math, and XLA's batched lowering of the vmap IS the
+blocked algorithm's speedup on hosts (sequential chain length drops
+from Σ tokens to max tokens-per-block).  Interpret-mode Pallas would
+serialize the grid and forfeit exactly that win, so it is reserved for
+the kernel-exercising CI leg.
+
+The kernel path pads K/V/T/BD to tile alignment (K, T lane-padded to
+128; V, BD sublane-padded to 8 — V also to 128 for the (K, V) count
+output) and strips the padding on the way out; pad topics are masked
+out of the conditional (``k_real``), pad tokens carry zero mask, and
+the snapshot is fed to the kernel transposed as (V, K) so the
+per-token topic gather is a lane-aligned row slice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, interpret_forced, on_tpu
+from repro.kernels.gibbs_sweep.gibbs_sweep import gibbs_sweep_pallas
+from repro.kernels.gibbs_sweep.ref import gibbs_sweep_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def default_use_kernel(use_kernel: Optional[bool] = None) -> bool:
+    """Resolve the kernel-vs-host-route default (see module docstring)."""
+    if use_kernel is not None:
+        return use_kernel
+    return interpret_forced() or on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "use_kernel",
+                                             "interpret"))
+def gibbs_sweep(words, ldoc, mask, u, z, nkd, prior, prior_k,
+                alpha: float, *, use_kernel: Optional[bool] = None,
+                interpret: Optional[bool] = None):
+    """One blocked CGS sweep.
+
+    words/ldoc/mask/u/z: (B, T); nkd: (B, BD, K); prior: (K, V)
+    snapshot + global + β; prior_k: (K,) row sums (with Vβ).
+    Returns (z', nkd', nkv (K, V)) with nkv the new assignments' count
+    matrix (the next snapshot / final ΔN_kv source).
+    """
+    use_kernel = default_use_kernel(use_kernel)
+    k, v = prior.shape
+    if not use_kernel:
+        return gibbs_sweep_ref(words, ldoc, mask, u, z, nkd, prior,
+                               prior_k, alpha)
+    interpret = default_interpret(interpret)
+    b, t = words.shape
+    bd = nkd.shape[1]
+    kp, vp = _round_up(k, 128), _round_up(v, 128)
+    tp, bdp = _round_up(t, 128), _round_up(bd, 8)
+    if (kp, vp, tp, bdp) != (k, v, t, bd):
+        pad_row = ((0, 0), (0, tp - t))
+        words = jnp.pad(words, pad_row)
+        ldoc = jnp.pad(ldoc, pad_row)
+        mask = jnp.pad(mask, pad_row)
+        u = jnp.pad(u, pad_row)
+        z = jnp.pad(z, pad_row)
+        nkd = jnp.pad(nkd, ((0, 0), (0, bdp - bd), (0, kp - k)))
+        # pad topics/words carry 1.0 so den stays finite; they are
+        # masked out of the conditional via k_real and never sampled
+        prior = jnp.pad(prior, ((0, kp - k), (0, vp - v)),
+                        constant_values=1.0)
+        prior_k = jnp.pad(prior_k, (0, kp - k), constant_values=1.0)
+    z_new, nkd_new, nkv = gibbs_sweep_pallas(
+        words, ldoc, mask, u, z, nkd,
+        jnp.transpose(prior), prior_k.reshape(1, kp),
+        alpha, k, interpret=interpret)
+    return z_new[:, :t], nkd_new[:, :bd, :k], nkv[:k, :v]

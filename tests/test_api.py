@@ -256,13 +256,47 @@ def test_mixed_kind_batch_rejected(train):
                           QuerySpec(sigma=Interval(0.0, 100.0), kind="gs")])
 
 
-def test_batch_rejects_mixed_alpha_specs(train):
-    """The batch is planned jointly under one alpha — mixed weights
-    cannot be honored and must not be silently dropped."""
+def test_batch_splits_mixed_alpha_specs(train):
+    """A mixed-alpha batch is auto-split into per-alpha sub-batches —
+    every weight honored, reports back in submission order."""
+    def covered_session():
+        s = _session(train)
+        s.train_range(0.0, 100.0)
+        s.train_range(100.0, 120.0)
+        return s
+
+    sess = covered_session()
+    specs = [QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5),
+             QuerySpec(sigma=Interval(0.0, 120.0), alpha=0.0),
+             QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5)]
+    br = sess.submit_many(specs)
+    assert len(br) == 3
+    for rep, spec in zip(br.reports, specs):
+        assert rep.spec is spec, "reports must stay in submission order"
+        assert np.isfinite(rep.beta).all()
+    assert br.opt.method == "ALG4/alpha-split"
+    # parity with the single-alpha paths, query by query (the store
+    # covers every query, so answers are key-stream independent)
+    for i, spec in enumerate(specs):
+        solo = covered_session()
+        np.testing.assert_allclose(
+            solo.submit_many([spec]).reports[0].beta, br.reports[i].beta,
+            rtol=1e-5, atol=1e-5)
+
+
+def test_batch_split_rejects_mixed_kinds_and_backends(train):
+    """Auto-split covers alpha only — kind/backend stay batch-wide
+    contracts even when the alphas differ."""
     sess = _session(train)
-    with pytest.raises(ValueError, match="one alpha"):
-        sess.submit_many([QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5),
-                          QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.0)])
+    with pytest.raises(ValueError, match="one backend kind"):
+        sess.submit_many([
+            QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5, kind="vb"),
+            QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.0, kind="gs")])
+    with pytest.raises(ValueError, match="one execution backend"):
+        sess.submit_many([
+            QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.5, backend="host"),
+            QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.0,
+                      backend="device")])
 
 
 def test_batch_threads_uniform_alpha(train):

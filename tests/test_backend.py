@@ -180,6 +180,28 @@ def test_cache_byte_bound_oversized_model_passes_through():
     assert backend.cache.resident_bytes == 0
 
 
+def test_oversized_model_does_not_evict_residents():
+    """A model bigger than the whole byte budget must pass through
+    without wiping the resident working set on its way out (matters
+    once heterogeneous (K, V) shards land)."""
+    entry_bytes = 4 * 64 * 4
+    backend = DeviceBackend(capacity=64, max_bytes=3 * entry_bytes)
+    small = [_dummy_model(i) for i in range(2)]
+    backend.merge(small, "vb", CFG)
+    assert len(backend.cache) == 2
+    big = MaterializedModel(9, Interval(9.0, 10.0), 10, 100, "vb",
+                            {"lam": RNG.gamma(1.0, 1.0, (16, 256))
+                             .astype(np.float32)})    # 4x the budget
+    backend.cache.get(big, "lam")                     # miss + pass through
+    assert 9 not in backend.cache
+    assert 0 in backend.cache and 1 in backend.cache, \
+        "residents must survive an oversized pass-through"
+    # warm-insert path shares the guard
+    assert backend.cache.put(big, "lam") is False
+    assert len(backend.cache) == 2
+    assert backend.cache.resident_bytes == 2 * entry_bytes
+
+
 def test_cache_bytes_track_invalidation_and_clear():
     entry_bytes = 4 * 64 * 4
     backend = DeviceBackend(capacity=8)

@@ -177,3 +177,147 @@ def test_performance_loss_fit_roundtrip():
     losses = [pl.loss(x) for x in xs]
     fitted = PerformanceLoss.fit(xs, losses)
     assert fitted.rho == pytest.approx(0.95, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend-keyed kappa (host vs device gap training priced separately)
+# ---------------------------------------------------------------------------
+
+def test_backend_keyed_kappa_prices_backends_separately():
+    cal = CalibratedCostModel(BASE)
+    # host trains 10x slower than device on this synthetic machine
+    for tok in (100, 400, 900):
+        unit = BASE.max_iters * tok ** 2 * BASE.n_topics
+        cal.observe_train(tok, 1e-7 * unit, backend="host")
+        cal.observe_train(tok, 1e-8 * unit, backend="device")
+    cal.set_train_backend("host")
+    host_price = cal.c_train(500.0)
+    cal.set_train_backend("device")
+    dev_price = cal.c_train(500.0)
+    assert host_price == pytest.approx(10 * dev_price, rel=1e-6)
+
+
+def test_unfit_device_backend_falls_back_to_host_kappa():
+    cal = CalibratedCostModel(BASE)
+    for tok in (100, 400):
+        unit = BASE.max_iters * tok ** 2 * BASE.n_topics
+        cal.observe_train(tok, 5e-8 * unit)          # host default
+    cal.set_train_backend("device")
+    assert cal.c_train(300.0) == pytest.approx(
+        5e-8 * BASE.max_iters * 300.0 ** 2 * BASE.n_topics, rel=1e-6)
+
+
+def test_new_backend_kappa_bumps_version():
+    cal = CalibratedCostModel(BASE)
+    cal.observe_train(500, 1.0, backend="host")
+    v = cal.version
+    cal.observe_train(500, 0.001, backend="device")
+    assert cal.version > v, "a newly priced backend is a material change"
+
+
+# ---------------------------------------------------------------------------
+# calibration persistence (the store's JSON sidecar)
+# ---------------------------------------------------------------------------
+
+def test_calibration_sidecar_roundtrip(tmp_path):
+    cal = CalibratedCostModel(BASE)
+    for tok in (100, 400, 900):
+        unit = BASE.max_iters * tok ** 2 * BASE.n_topics
+        cal.observe_train(tok, 3e-8 * unit, backend="device")
+    cal.observe_merge_host(2, 4e-3)
+    cal.observe_merge_device(1, 2, 9e-3)
+    cal.observe_pad(4, 8e-3)
+    cal.set_train_backend("device")
+    warm_price = cal.c_train(500.0)
+
+    path = str(tmp_path / "calibration.json")
+    cal.calibration.save(path)
+
+    loaded = Calibration.load(path)
+    assert loaded is not None
+    assert loaded == cal.calibration
+    warm = CalibratedCostModel(BASE, calibration=loaded)
+    warm.set_train_backend("device")
+    assert warm.c_train(500.0) == pytest.approx(warm_price, rel=1e-9)
+    assert warm.version > 0, "a preloaded calibration is already priced"
+
+
+def test_calibration_load_missing_or_stale_is_cold_start(tmp_path):
+    assert Calibration.load(str(tmp_path / "absent.json")) is None
+    stale = tmp_path / "stale.json"
+    stale.write_text('{"format": 999, "train_obs": {}}')
+    assert Calibration.load(str(stale)) is None
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("not json at all {")
+    assert Calibration.load(str(garbage)) is None
+
+
+def test_session_calibration_path_warm_starts(tmp_path):
+    """MLegoSession(cost="calibrated", calibration_path=...) must load
+    the sidecar and price like the session that wrote it."""
+    from repro.api import MLegoSession
+    from repro.configs.lda_default import LDAConfig
+    from repro.data.corpus import make_corpus
+
+    cfg = LDAConfig(n_topics=4, vocab_size=60, max_iters=4,
+                    e_step_iters=3, gibbs_sweeps=3)
+    corpus, _ = make_corpus(60, cfg.vocab_size, cfg.n_topics,
+                            mean_doc_len=15, seed=2)
+    path = str(tmp_path / "calibration.json")
+
+    from repro.api import Interval, QuerySpec
+    first = MLegoSession(corpus, cfg, cost="calibrated",
+                         calibration_path=path)
+    first.submit(QuerySpec(sigma=Interval(0.0, 40.0)))
+    assert len(first.cost.calibration) > 0
+    assert first.save_calibration() == path
+
+    warm = MLegoSession(corpus, cfg, cost="calibrated",
+                        calibration_path=path)
+    assert warm.cost.calibration == first.cost.calibration
+    assert warm.cost.c_train(1000.0) == pytest.approx(
+        first.cost.c_train(1000.0))
+    # and an analytic cold-start session prices differently
+    cold = MLegoSession(corpus, cfg, cost="calibrated")
+    assert cold.cost.c_train(1000.0) != pytest.approx(
+        warm.cost.c_train(1000.0))
+
+
+def test_calibration_path_on_uncalibrated_provider_raises(tmp_path):
+    """A sidecar path the provider can't load into must fail loudly at
+    construction, not silently plan at analytic prices."""
+    from repro.api import MLegoSession
+    from repro.configs.lda_default import LDAConfig
+    from repro.data.corpus import make_corpus
+
+    cfg = LDAConfig(n_topics=4, vocab_size=60, max_iters=4,
+                    e_step_iters=3, gibbs_sweeps=3)
+    corpus, _ = make_corpus(40, cfg.vocab_size, cfg.n_topics,
+                            mean_doc_len=10, seed=2)
+    path = str(tmp_path / "calibration.json")
+    with pytest.raises(ValueError, match="calibration_path requires"):
+        MLegoSession(corpus, cfg, calibration_path=path)
+    with pytest.raises(ValueError, match="calibration_path requires"):
+        MLegoSession(corpus, cfg, cost=CostModel(), calibration_path=path)
+    # a caller-supplied CalibratedCostModel instance loads the sidecar
+    Calibration(host_obs=[(1, 2e-3)]).save(path)
+    provider = CalibratedCostModel(BASE)
+    MLegoSession(corpus, cfg, cost=provider, calibration_path=path)
+    assert len(provider.calibration) == 1
+
+
+def test_session_save_calibration_requires_a_path_and_provider():
+    from repro.api import MLegoSession
+    from repro.configs.lda_default import LDAConfig
+    from repro.data.corpus import make_corpus
+
+    cfg = LDAConfig(n_topics=4, vocab_size=60, max_iters=4,
+                    e_step_iters=3, gibbs_sweeps=3)
+    corpus, _ = make_corpus(40, cfg.vocab_size, cfg.n_topics,
+                            mean_doc_len=10, seed=2)
+    sess = MLegoSession(corpus, cfg, cost="calibrated")
+    with pytest.raises(ValueError, match="calibration path"):
+        sess.save_calibration()
+    analytic = MLegoSession(corpus, cfg)
+    with pytest.raises(ValueError, match="not calibrated"):
+        analytic.save_calibration("/tmp/never-written.json")

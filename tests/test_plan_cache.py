@@ -150,6 +150,62 @@ def test_store_swap_rebinds_plan_cache(train):
 
 
 # ---------------------------------------------------------------------------
+# batch-level entries (submit_many memoizes the whole Alg. 4 result)
+# ---------------------------------------------------------------------------
+
+def _batch_specs():
+    return [QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.0),
+            QuerySpec(sigma=Interval(100.0, 300.0), alpha=0.0)]
+
+
+def test_repeated_identical_batch_is_a_cache_hit(train):
+    sess = _covered_session(train)
+    first = sess.submit_many(_batch_specs())
+    assert not first.plan_cached
+    second = sess.submit_many(_batch_specs())
+    assert second.plan_cached, "repeated batch must skip Alg. 4"
+    assert second.opt is first.opt, "the memoized BatchResult is served"
+    for a, b in zip(first.reports, second.reports):
+        np.testing.assert_array_equal(a.beta, b.beta)
+
+
+def test_batch_cache_invalidates_on_store_mutation(train):
+    sess = _covered_session(train)
+    sess.submit_many(_batch_specs())
+    sess.store.add(Interval(400.0, 500.0), 10, 100, "vb",
+                   {"lam": np.ones((CFG.n_topics, CFG.vocab_size),
+                                   np.float32)})
+    rerun = sess.submit_many(_batch_specs())
+    assert not rerun.plan_cached, "store mutation must drop batch entries"
+
+
+def test_different_batches_do_not_collide(train):
+    sess = _covered_session(train)
+    sess.submit_many(_batch_specs())
+    # same sigmas, different grouping: two specs vs one union spec
+    union = sess.submit_many([QuerySpec(
+        sigma=[Interval(0.0, 100.0), Interval(200.0, 300.0)], alpha=0.0)])
+    assert not union.plan_cached
+    reordered = sess.submit_many(list(reversed(_batch_specs())))
+    assert not reordered.plan_cached
+    assert sess.submit_many(_batch_specs()).plan_cached
+
+
+def test_gap_training_batch_invalidates_own_entry(train):
+    """A batch that persists gap models mutates the store mid-run; the
+    next identical batch must re-plan against the grown model set."""
+    sess = _covered_session(train, edges=(0.0, 150.0))
+    specs = [QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.0)]
+    first = sess.submit_many(specs)
+    assert first.materialized, "the [150, 300) gap was trained + persisted"
+    second = sess.submit_many(specs)
+    assert not second.plan_cached
+    assert not second.materialized, "re-plan fetches the persisted model"
+    third = sess.submit_many(specs)
+    assert third.plan_cached
+
+
+# ---------------------------------------------------------------------------
 # cache/store interplay (pure; property-tested under hypothesis)
 # ---------------------------------------------------------------------------
 
