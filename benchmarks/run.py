@@ -8,6 +8,10 @@
   batch_opt           Fig. 13/14 Alg. 4 cost & benefit
   session             (ours)     unified submit/submit_many API latency
                                  + device-backend cache hit rates
+  serve               (ours)     multi-tenant service: coalesced vs
+                                 serial throughput/p50/p95 under
+                                 concurrent traffic + cross-session
+                                 cache reuse
   gibbs_gap           (ours)     host exact CGS scan vs doc-blocked
                                  device sweep (latency + quality delta)
   kernels             (ours)     Pallas kernel parity timings
@@ -169,6 +173,27 @@ def main() -> None:
                           "device_cache_hit_rate": hit_rate,
                           "providers": [list(r) for r in prov_rows],
                           "padding": pad}
+
+    if want("serve"):
+        _section("serve (coalesced service vs serial session)")
+        from benchmarks import serve_bench
+        sv = serve_bench.run(n_docs=600 if args.quick else 1200,
+                             quick=args.quick)
+        s, c = sv["serial"], sv["coalesced"]
+        print("mode,queries,wall_s,qps,p50_s,p95_s")
+        for label, m in (("serial", s), ("coalesced", c)):
+            print(f"{label},{m['queries']},{m['wall_s']:.3f},"
+                  f"{m['qps']:.2f},{m['p50_s']:.4f},{m['p95_s']:.4f}")
+        print(f"# speedup {sv['speedup']:.2f}x, mean coalesce width "
+              f"{sv['mean_coalesce_width']:.2f} (max "
+              f"{sv['max_coalesce_width']}), coalesce rate "
+              f"{sv['coalesce_rate']:.2f}")
+        cross = serve_bench.run_cross_session(
+            n_docs=600 if args.quick else 1200, quick=args.quick)
+        print(f"# cross-session: plan_cached={cross['second_plan_cached']} "
+              f"device hits={cross['second_cache_hits']} "
+              f"misses={cross['second_cache_misses']}")
+        out["serve"] = {**sv, "cross_session": cross}
 
     if want("gibbs_gap"):
         _section("gibbs_gap (host exact scan vs blocked device sweep)")

@@ -1,0 +1,181 @@
+"""Concurrent-traffic serving benchmark: coalesced service vs serial
+session on one synthetic trace.
+
+The trace models n interactive analysts over one shared store whose
+capital covers half the corpus: every client repeatedly asks volatile
+queries whose plans reuse the covered half and train the uncovered
+half.  The serial baseline answers the whole trace through one
+blocking ``MLegoSession.submit`` loop — every query pays its own gap
+training.  The service answers the same trace submitted concurrently:
+queries landing inside the coalescing window fuse into ``submit_many``
+batches, so each round's shared gap segment trains ~once instead of
+once per client — which is exactly the §V.C sharing the paper builds
+Alg. 4 for, harvested at serve time.
+
+``run`` reports wall-clock throughput and client-observed p50/p95
+latency for both modes plus the realized coalesce width;
+``run_cross_session`` demonstrates end-to-end cross-session reuse (the
+acceptance check): a repeated query from a *second* session over the
+shared store reports ``plan_cached=True`` and reads the first
+session's device-resident parameters as cache hits.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+from benchmarks.common import bench_cfg, bench_world
+from repro.api import (
+    DeviceBackend,
+    Interval,
+    MLegoSession,
+    PlanCache,
+    QuerySpec,
+)
+from repro.core.store import ModelStore
+from repro.serve import MLegoService
+
+
+def _percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(int(round(p / 100.0 * (len(xs) - 1))), len(xs) - 1)
+    return xs[i]
+
+
+def _trace(hi: float, per_client: int) -> List[QuerySpec]:
+    """One client's query sequence: volatile full-range explorations
+    (reuse the covered half, train the uncovered half) with a narrower
+    pan every other round."""
+    specs = []
+    for r in range(per_client):
+        if r % 2 == 0:
+            specs.append(QuerySpec(sigma=Interval(0.0, hi),
+                                   materialize="volatile"))
+        else:
+            specs.append(QuerySpec(sigma=Interval(0.25 * hi, hi),
+                                   materialize="volatile"))
+    return specs
+
+
+def _summary(lat: List[float], wall: float) -> Dict[str, float]:
+    return {
+        "queries": len(lat),
+        "wall_s": wall,
+        "qps": len(lat) / wall if wall > 0 else 0.0,
+        "p50_s": _percentile(lat, 50.0),
+        "p95_s": _percentile(lat, 95.0),
+    }
+
+
+def run(n_docs=600, seed=0, quick=False, n_clients=4, per_client=4,
+        window_s=0.1) -> Dict:
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    capital = [(i * hi / 4, (i + 1) * hi / 4) for i in range(2)]
+
+    # --- serial baseline: one blocking session, whole trace in order ---
+    sess = MLegoSession(train, cfg, kind="vb", seed=seed)
+    for lo, hi_e in capital:
+        sess.train_range(lo, hi_e)
+    serial_lat: List[float] = []
+    t0 = time.perf_counter()
+    for _ in range(n_clients):
+        for spec in _trace(hi, per_client):
+            t = time.perf_counter()
+            sess.submit(spec)
+            serial_lat.append(time.perf_counter() - t)
+    serial_wall = time.perf_counter() - t0
+
+    # --- coalesced service: same trace, n concurrent clients -----------
+    svc = MLegoService(train, cfg, kind="vb", seed=seed,
+                       window_s=window_s, max_width=2 * n_clients)
+    for lo, hi_e in capital:
+        svc.train_range(lo, hi_e)
+    svc_lat: List[float] = []
+    lat_lock = threading.Lock()
+
+    def client(name: str) -> None:
+        for spec in _trace(hi, per_client):
+            t = time.perf_counter()
+            svc.submit(spec, tenant=name).result()
+            with lat_lock:
+                svc_lat.append(time.perf_counter() - t)
+
+    threads = [threading.Thread(target=client, args=(f"client{i}",))
+               for i in range(n_clients)]
+    t1 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    svc_wall = time.perf_counter() - t1
+    report = svc.report()
+    svc.close()
+
+    serial = _summary(serial_lat, serial_wall)
+    coalesced = _summary(svc_lat, svc_wall)
+    return {
+        "n_clients": n_clients,
+        "per_client": per_client,
+        "window_s": window_s,
+        "serial": serial,
+        "coalesced": coalesced,
+        "speedup": serial["wall_s"] / coalesced["wall_s"]
+        if coalesced["wall_s"] > 0 else 0.0,
+        "mean_coalesce_width": report.mean_coalesce_width,
+        "max_coalesce_width": report.max_coalesce_width,
+        "coalesce_rate": report.coalesce_rate,
+        "plan_cache_hits": report.plan_cache_hits,
+        "plan_cache_misses": report.plan_cache_misses,
+    }
+
+
+def run_cross_session(n_docs=600, seed=0, quick=False) -> Dict:
+    """The acceptance demonstration: session B repeats session A's
+    query over the shared store/plan-cache/device-LRU and must report
+    ``plan_cached=True`` with device-cache hits > 0."""
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+
+    store, backend, cache = ModelStore(), DeviceBackend(), PlanCache()
+    a = MLegoSession(train, cfg, store=store, backend=backend,
+                     plan_cache=cache, kind="vb", seed=0)
+    b = MLegoSession(train, cfg, store=store, backend=backend,
+                     plan_cache=cache, kind="vb", seed=1)
+    for i in range(4):
+        a.train_range(i * hi / 4, (i + 1) * hi / 4)
+    spec = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+    ra = a.submit(spec)
+    rb = b.submit(spec)
+    return {
+        "first_plan_cached": ra.plan_cached,
+        "second_plan_cached": rb.plan_cached,
+        "second_cache_hits": rb.cache_hits,
+        "second_cache_misses": rb.cache_misses,
+        "second_merge_device_ms": rb.merge_device_ms,
+    }
+
+
+def main() -> None:
+    out = run()
+    s, c = out["serial"], out["coalesced"]
+    print("mode,queries,wall_s,qps,p50_s,p95_s")
+    print(f"serial,{s['queries']},{s['wall_s']:.3f},{s['qps']:.2f},"
+          f"{s['p50_s']:.4f},{s['p95_s']:.4f}")
+    print(f"coalesced,{c['queries']},{c['wall_s']:.3f},{c['qps']:.2f},"
+          f"{c['p50_s']:.4f},{c['p95_s']:.4f}")
+    print(f"# speedup {out['speedup']:.2f}x, mean width "
+          f"{out['mean_coalesce_width']:.2f}, max {out['max_coalesce_width']}")
+    cross = run_cross_session()
+    print(f"# cross-session: plan_cached={cross['second_plan_cached']} "
+          f"hits={cross['second_cache_hits']} "
+          f"misses={cross['second_cache_misses']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ Gibbs route runs its blocked math as vmapped XLA off-TPU (see
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, fields, replace
@@ -65,6 +66,8 @@ class BackendStats:
 
     cache_hits: int = 0
     cache_misses: int = 0
+    cache_hit_bytes: int = 0          # bytes read from the device cache
+    cache_miss_bytes: int = 0         # bytes transferred host->device
     cache_evictions: int = 0
     cache_invalidations: int = 0
     merges: int = 0
@@ -72,6 +75,7 @@ class BackendStats:
     host_fallbacks: int = 0
     merge_device_ms: float = 0.0
     pad_rows: int = 0                 # zero-weight rows in batched launches
+    pad_bytes: int = 0                # bytes those zero-weight rows carry
     train_device_ms: float = 0.0      # kernel-route gap-training wall time
     gap_device_trains: int = 0        # gaps trained through a kernel route
     train_uploads: int = 0            # fresh gap models warmed into the LRU
@@ -98,6 +102,14 @@ class ExecutionBackend:
 
     def __init__(self):
         self.stats = BackendStats()
+        self._stats_lock = threading.Lock()
+        # Sessions attribute per-query work by diffing two stats
+        # snapshots; on a *shared* backend a concurrent session's
+        # launch landing inside that window would be mis-attributed
+        # (and fed to the calibrated cost model as this query's
+        # bytes).  Callers hold this around snapshot -> launch -> diff
+        # sections — coarse, but the device serializes launches anyway.
+        self.measure_lock = threading.RLock()
 
     # -- lifecycle -------------------------------------------------------
     def bind_store(self, store: ModelStore) -> None:
@@ -107,7 +119,9 @@ class ExecutionBackend:
     def bound_store(self) -> Optional[ModelStore]:
         """The store this backend caches against; None if stateless.
 
-        Sessions refuse to adopt a backend whose ``bound_store`` is a
+        Any number of sessions may share one backend **over the same
+        store** (the multi-tenant serving layer does exactly that);
+        sessions refuse to adopt a backend whose ``bound_store`` is a
         *different* live store — the cache is keyed by model id alone,
         and ids from two stores collide silently."""
         return None
@@ -130,9 +144,12 @@ class ExecutionBackend:
 
     # -- bookkeeping -----------------------------------------------------
     def _count(self, **kw) -> None:
-        self.stats = replace(
-            self.stats, **{k: getattr(self.stats, k) + v
-                           for k, v in kw.items()})
+        # read-modify-write on the immutable snapshot; locked so two
+        # sessions sharing the backend can't lose each other's counts
+        with self._stats_lock:
+            self.stats = replace(
+                self.stats, **{k: getattr(self.stats, k) + v
+                               for k, v in kw.items()})
 
 
 class HostBackend(ExecutionBackend):
@@ -155,6 +172,9 @@ class _DeviceModelCache:
     allows.  Volatile models (id −1, never in the store) pass through
     without being cached — there is no id under which an invalidation
     for them could ever arrive.
+
+    Mutation is lock-serialized: one device cache may be shared by
+    every session of a multi-tenant service over the same store.
     """
 
     def __init__(self, capacity: int, max_bytes: Optional[int] = None):
@@ -165,8 +185,10 @@ class _DeviceModelCache:
         self.capacity = capacity
         self.max_bytes = max_bytes
         self._entries: "OrderedDict[int, jax.Array]" = OrderedDict()
+        self._lock = threading.RLock()
         self.resident_bytes = 0
         self.hits = self.misses = self.evictions = self.invalidations = 0
+        self.hit_bytes = self.miss_bytes = 0
         # residency epoch: bumps whenever the resident *set* changes
         # (insert/evict/invalidate/clear) — the session plan cache keys
         # on it for providers that price fetches by cache state
@@ -197,49 +219,55 @@ class _DeviceModelCache:
 
     def get(self, model: MaterializedModel, stat_key: str) -> jax.Array:
         mid = model.model_id
-        if mid >= 0 and mid in self._entries:
-            self.hits += 1
-            self._entries.move_to_end(mid)
-            return self._entries[mid]
-        self.misses += 1
-        arr = jnp.asarray(model.theta[stat_key], jnp.float32)
-        if mid >= 0 and self._fits_alone(arr):
-            self._entries[mid] = arr
-            self.resident_bytes += int(arr.nbytes)
-            self.epoch += 1
-            while self._entries and self._over_budget():
-                self._evict_lru()
-        return arr
+        with self._lock:
+            if mid >= 0 and mid in self._entries:
+                self.hits += 1
+                self.hit_bytes += int(self._entries[mid].nbytes)
+                self._entries.move_to_end(mid)
+                return self._entries[mid]
+            self.misses += 1
+            arr = jnp.asarray(model.theta[stat_key], jnp.float32)
+            self.miss_bytes += int(arr.nbytes)
+            if mid >= 0 and self._fits_alone(arr):
+                self._entries[mid] = arr
+                self.resident_bytes += int(arr.nbytes)
+                self.epoch += 1
+                while self._entries and self._over_budget():
+                    self._evict_lru()
+            return arr
 
     def put(self, model: MaterializedModel, stat_key: str) -> bool:
         """Warm-insert a model (no hit/miss accounting) — the gap-
         training upload path.  Returns True if it ended up resident
         (an over-budget model passes through uncached)."""
         mid = model.model_id
-        if mid < 0 or mid in self._entries:
+        with self._lock:
+            if mid < 0 or mid in self._entries:
+                return mid in self._entries
+            arr = jnp.asarray(model.theta[stat_key], jnp.float32)
+            if not self._fits_alone(arr):
+                return False
+            self._entries[mid] = arr
+            self.resident_bytes += int(arr.nbytes)
+            self.epoch += 1
+            while self._entries and self._over_budget():
+                self._evict_lru()
             return mid in self._entries
-        arr = jnp.asarray(model.theta[stat_key], jnp.float32)
-        if not self._fits_alone(arr):
-            return False
-        self._entries[mid] = arr
-        self.resident_bytes += int(arr.nbytes)
-        self.epoch += 1
-        while self._entries and self._over_budget():
-            self._evict_lru()
-        return mid in self._entries
 
     def invalidate(self, model_id: int) -> None:
-        arr = self._entries.pop(model_id, None)
-        if arr is not None:
-            self.resident_bytes -= int(arr.nbytes)
-            self.invalidations += 1
-            self.epoch += 1
+        with self._lock:
+            arr = self._entries.pop(model_id, None)
+            if arr is not None:
+                self.resident_bytes -= int(arr.nbytes)
+                self.invalidations += 1
+                self.epoch += 1
 
     def clear(self) -> None:
-        if self._entries:
-            self.epoch += 1
-        self._entries.clear()
-        self.resident_bytes = 0
+        with self._lock:
+            if self._entries:
+                self.epoch += 1
+            self._entries.clear()
+            self.resident_bytes = 0
 
 
 class DeviceBackend(ExecutionBackend):
@@ -350,18 +378,25 @@ class DeviceBackend(ExecutionBackend):
         for row in merged:
             row.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
+        # a padding row carries one part's worth of (K, V) f32 bytes —
+        # the per-byte cost calibration prices it from this
+        row_nbytes = int(stats_list[0][0].nbytes)
         self._sync_cache_counters()
         self._count(merges=len(part_lists), device_launches=launches,
-                    merge_device_ms=ms, pad_rows=pad_rows)
+                    merge_device_ms=ms, pad_rows=pad_rows,
+                    pad_bytes=pad_rows * row_nbytes)
         return [finish(np.asarray(row)) for row in merged]
 
     def _sync_cache_counters(self) -> None:
         c = self.cache
-        self.stats = replace(self.stats, cache_hits=c.hits,
-                             cache_misses=c.misses,
-                             cache_evictions=c.evictions,
-                             cache_invalidations=c.invalidations,
-                             cache_resident_bytes=c.resident_bytes)
+        with self._stats_lock:
+            self.stats = replace(self.stats, cache_hits=c.hits,
+                                 cache_misses=c.misses,
+                                 cache_hit_bytes=c.hit_bytes,
+                                 cache_miss_bytes=c.miss_bytes,
+                                 cache_evictions=c.evictions,
+                                 cache_invalidations=c.invalidations,
+                                 cache_resident_bytes=c.resident_bytes)
 
     # -- training --------------------------------------------------------
     def trainer(self, kind: str) -> TrainerFn:
@@ -389,14 +424,16 @@ class DeviceBackend(ExecutionBackend):
                     train_device_ms=(time.perf_counter() - t0) * 1e3)
         return {"lam": lam}
 
-    def _train_gs_kernel(self, corpus: Corpus, cfg: LDAConfig,
-                         key) -> Dict[str, np.ndarray]:
+    def _train_gs_kernel(self, corpus: Corpus, cfg: LDAConfig, key,
+                         global_nkv: Optional[np.ndarray] = None
+                         ) -> Dict[str, np.ndarray]:
         from repro.core.gibbs import cgs_fit_blocked
         t0 = time.perf_counter()
         # an explicit interpret override must reach the Pallas body
         # like it does on the merge/E-step routes — use_kernel=None
         # alone would route off-TPU hosts to the jnp reference
         nkv = cgs_fit_blocked(corpus.tokens, corpus.doc_ids, cfg, key,
+                              global_nkv=global_nkv,
                               block_docs=self.gibbs_block_docs,
                               use_kernel=(None if self.interpret is None
                                           else True),

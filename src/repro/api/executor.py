@@ -29,19 +29,39 @@ calibration.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.api.backend import ExecutionBackend, HostBackend
-from repro.api.trainers import get_trainer, resolve_kind
+from repro.api.trainers import get_trainer, merge_family_name, resolve_kind
 from repro.configs.lda_default import LDAConfig
 from repro.core.lda import MaterializedModel
 from repro.core.plan_ir import Plan
 from repro.core.plans import Interval
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
+
+
+def _resolves_to(tag: str, kind: str) -> bool:
+    """Store tags may be aliases ("gibbs") or foreign kinds entirely."""
+    try:
+        return resolve_kind(tag) == kind
+    except ValueError:
+        return tag == kind
+
+
+def _accepts_global_nkv(trainer) -> bool:
+    """Trainer registry signatures are (corpus, cfg, key); the DSGS
+    prior reaches only trainers that declare the keyword (built-in gs
+    and the device blocked route) — custom trainers keep the seed
+    contract untouched."""
+    try:
+        return "global_nkv" in inspect.signature(trainer).parameters
+    except (TypeError, ValueError):
+        return False
 
 
 def _parts_kind(parts: Sequence[MaterializedModel]) -> str:
@@ -62,15 +82,37 @@ class Executor:
                  next_key: Callable[[], object]):
         self.corpus = corpus
         self.cfg = cfg
+        # (kind, frozenset(model ids), summed ΔN_kv) — see _gs_prior.
+        # Keyed by id set, which is unambiguous only within one store
+        # (ids are never reused there) — so a store swap must drop it.
+        self._gs_prior_memo = None
         self.store = store
         self._next_key = next_key
         self._host = HostBackend()
+
+    @property
+    def store(self) -> ModelStore:
+        return self._store
+
+    @store.setter
+    def store(self, v: ModelStore) -> None:
+        self._store = v
+        self._gs_prior_memo = None
 
     def train_gap(self, lo: float, hi: float, kind: str,
                   *, persist: bool = True,
                   backend: Optional[ExecutionBackend] = None
                   ) -> Optional[MaterializedModel]:
-        """Train one fresh model on [lo, hi); None if the range is empty."""
+        """Train one fresh model on [lo, hi); None if the range is empty.
+
+        For Gibbs-family kinds the store's merged counts ride along as
+        the DSGS ``global_nkv`` prior (Eq. 8): the gap samples against
+        the reuse capital's topic structure instead of the zero prior
+        the seed used, so fresh gap topics align with the models they
+        are about to be merged with.  (The trained model still carries
+        only its *own* token counts — the prior shapes the conditional,
+        it is never added to ΔN_kv — so merges don't double count.)
+        """
         d0, d1 = self.corpus.doc_slice(lo, hi)
         if d1 <= d0:
             return None
@@ -78,7 +120,12 @@ class Executor:
         sub = self.corpus.subset(lo, hi)
         trainer = backend.trainer(kind) if backend is not None \
             else get_trainer(kind)
-        theta = trainer(sub, self.cfg, self._next_key())
+        kwargs = {}
+        if merge_family_name(kind) == "gs" and _accepts_global_nkv(trainer):
+            prior = self._gs_prior(kind)
+            if prior is not None:
+                kwargs["global_nkv"] = prior
+        theta = trainer(sub, self.cfg, self._next_key(), **kwargs)
         if persist:
             m = self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
                                kind, theta)
@@ -89,6 +136,43 @@ class Executor:
             return m
         return MaterializedModel(-1, Interval(lo, hi), sub.n_docs,
                                  sub.n_tokens, kind, theta)
+
+    def _gs_prior(self, kind: str) -> Optional[np.ndarray]:
+        """Σ ΔN_kv over the store's models of ``kind`` — the global
+        topic-word counts a DSGS step conditions on.  None when the
+        store holds no usable counts (cold store: zero prior, exactly
+        the seed behavior).
+
+        Memoized on the eligible model-id set: a submit_many segment
+        loop persists one gap per segment, so the common transition is
+        "same set plus a few fresh ids" — extended incrementally with
+        just the new deltas instead of re-summing the whole store's
+        (K, V) arrays per trained gap."""
+        eligible = {
+            m.model_id: m for m in self.store.models()
+            if "delta_nkv" in m.theta and _resolves_to(m.kind, kind)
+            and m.theta["delta_nkv"].shape == (self.cfg.n_topics,
+                                               self.cfg.vocab_size)}
+        if not eligible:
+            self._gs_prior_memo = None
+            return None
+        ids = frozenset(eligible)
+        memo = self._gs_prior_memo
+        if memo is not None and memo[0] == kind:
+            _, mids, mval = memo
+            if mids == ids:
+                return mval
+            if mids < ids:
+                val = mval + np.sum(
+                    [np.asarray(eligible[i].theta["delta_nkv"], np.float32)
+                     for i in ids - mids], axis=0, dtype=np.float32)
+                self._gs_prior_memo = (kind, ids, val)
+                return val
+        val = np.sum(
+            [np.asarray(m.theta["delta_nkv"], np.float32)
+             for m in eligible.values()], axis=0, dtype=np.float32)
+        self._gs_prior_memo = (kind, ids, val)
+        return val
 
     def gather(self, plan: Plan, kind: str, *, persist: bool = True,
                backend: Optional[ExecutionBackend] = None

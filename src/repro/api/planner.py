@@ -11,13 +11,22 @@ interactive exploration replays near-identical queries (pan/zoom over
 σ, re-render after a UI tweak), and for those the search is pure —
 same predicate, same model set, same α, same prices ⇒ same plan.
 Entries are keyed by (normalized σ, model-set fingerprint, α, trainer
-kind, search method, backend, cost-provider version) and the whole
+kind, search method, backend, cost provider + version) and the whole
 cache drops on any ``ModelStore`` mutation through the store's
 ``subscribe`` channel — the same transport the device backend's model
 cache invalidates over.
+
+One ``PlanCache`` may be **shared by many sessions over the same
+store** (``MLegoSession(plan_cache=...)``, the serving layer's
+default): every key carries the model-set fingerprint *and* the cost
+provider identity + version, so entries are value-addressed — a hit in
+session B for a plan session A searched is correct by construction,
+and sessions pricing through different providers can never serve each
+other's plans.  Lookup/insert are lock-serialized.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
@@ -40,6 +49,7 @@ class PlanCache:
     def __init__(self, max_entries: int = 256):
         self.max_entries = max_entries
         self._entries: "OrderedDict[Tuple, SearchResult]" = OrderedDict()
+        self._lock = threading.RLock()
         self._store = None
         self.hits = 0
         self.misses = 0
@@ -48,24 +58,38 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    @property
+    def store(self):
+        """The store this cache invalidates over (None if unbound)."""
+        return self._store
+
     # --- store subscription -------------------------------------------------
     def bind_store(self, store) -> None:
-        if store is self._store:
-            return
-        if self._store is not None:
-            self._store.unsubscribe(self._on_store_event)
-        self._store = store
-        self.clear()
-        if store is not None:
-            store.subscribe(self._on_store_event)
+        """Subscribe to ``store``'s mutations.  Binding the already-
+        bound store is a no-op, which is what lets many sessions over
+        one shared store adopt one shared cache; binding a *different*
+        store clears the cache and re-homes the subscription (the
+        legacy store-swap path — every sharing session sees the
+        clear)."""
+        with self._lock:
+            if store is self._store:
+                return
+            if self._store is not None:
+                self._store.unsubscribe(self._on_store_event)
+            self._store = store
+            self.clear()
+            if store is not None:
+                store.subscribe(self._on_store_event)
 
     def _on_store_event(self, event: str, model_id: int) -> None:
-        if self._entries:
-            self.invalidations += 1
-        self.clear()
+        with self._lock:
+            if self._entries:
+                self.invalidations += 1
+            self.clear()
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._lock:
+            self._entries.clear()
 
     # --- lookup ---------------------------------------------------------------
     @staticmethod
@@ -75,18 +99,20 @@ class PlanCache:
             (m.model_id, m.o.lo, m.o.hi) for m in models)))
 
     def get(self, key: Tuple) -> Optional[SearchResult]:
-        res = self._entries.get(key)
-        if res is None:
-            self.misses += 1
-            return None
-        self.hits += 1
-        self._entries.move_to_end(key)
-        return res
+        with self._lock:
+            res = self._entries.get(key)
+            if res is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return res
 
     def put(self, key: Tuple, res: SearchResult) -> None:
-        self._entries[key] = res
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[key] = res
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
 
 
 class Planner:

@@ -37,6 +37,7 @@ overrides the session default per query.
 from __future__ import annotations
 
 import os
+import threading
 import time
 from typing import List, Optional, Sequence, Union
 
@@ -70,6 +71,18 @@ def calibration_sidecar(store_path: str) -> str:
     return os.path.join(store_path, CALIBRATION_SIDECAR)
 
 
+def _store_size_probe(store: ModelStore):
+    """Byte-size probe closed over one store (None for unknown ids) —
+    homed on the store, not a session, so a session's later store swap
+    cannot silently re-aim a probe other sessions price through."""
+    def probe(model_id: int) -> Optional[int]:
+        try:
+            return store.get(model_id).nbytes()
+        except KeyError:
+            return None
+    return probe
+
+
 class MLegoSession:
     """One corpus + one model store + one RNG stream; many queries."""
 
@@ -78,22 +91,45 @@ class MLegoSession:
                  cost: Union[CostProvider, str, None] = None,
                  kind: str = "vb", seed: int = 0,
                  backend: Union[str, ExecutionBackend] = "host",
+                 plan_cache: Optional[PlanCache] = None,
                  plan_cache_entries: int = 256,
                  calibration_path: Optional[str] = None):
         self.corpus = corpus
         self.index = DataIndex(corpus)
         self._backends = {}
-        self._plan_cache = PlanCache(max_entries=plan_cache_entries)
-        self.store = store if store is not None else ModelStore()
+        store = store if store is not None else ModelStore()
+        # an externally-owned plan cache (the serving layer's shared
+        # cache) must already be homed on this session's store — keys
+        # are value-addressed, but adopting a cache that invalidates
+        # over a *different* store would clear it out from under its
+        # other sessions on the bind below
+        if plan_cache is not None and plan_cache.store is not None \
+                and plan_cache.store is not store:
+            raise ValueError(
+                "plan_cache is bound to a different store; a shared "
+                "plan cache requires the sharing sessions to share the "
+                "store it invalidates over")
+        self._owns_plan_cache = plan_cache is None
+        self._adopted_backends = set()   # backend *instances* handed in
+        self._plan_cache = plan_cache if plan_cache is not None \
+            else PlanCache(max_entries=plan_cache_entries)
+        self.store = store
         self.cfg = cfg
         self.calibration_path = calibration_path
+        # provider *instances* may be shared across sessions (the
+        # serving layer's one calibration log); string/None selections
+        # construct a private provider this session may re-home freely
+        self._owns_cost = cost is None or isinstance(cost, str)
         self.cost = self._make_cost(cost, cfg, calibration_path)
+        self._wire_cost_probes()
         self.kind = resolve_kind(kind)       # default backend for train_range
         self._key = jax.random.PRNGKey(seed)
+        self._key_lock = threading.Lock()
         self.planner = Planner(self.index, self.cost)
         self.executor = Executor(corpus, cfg, self.store, self._next_key)
         self.backend = self._register_backend(
-            make_backend(backend) if isinstance(backend, str) else backend)
+            make_backend(backend) if isinstance(backend, str) else backend,
+            adopted=not isinstance(backend, str))
 
     @staticmethod
     def _make_cost(cost: Union[CostProvider, str, None],
@@ -128,6 +164,27 @@ class MLegoSession:
                 cost.load_calibration(calibration_path)
         return cost
 
+    def _wire_cost_probes(self) -> None:
+        """Point a calibrated provider's byte-size probe at the store
+        (fetch terms are per-byte) and seed the part-size hint from the
+        config's (K, V) f32 shape.  The probe is homed on the *store*
+        (not this session), so sharing the provider requires sharing
+        that store — model ids collide across stores, and a foreign
+        probe would silently mis-size every fetch."""
+        if getattr(self.cost, "size_probe", False) is None:
+            self.cost.size_probe = _store_size_probe(self.store)
+            self.cost._size_probe_store = self.store
+        else:
+            wired = getattr(self.cost, "_size_probe_store", None)
+            if wired is not None and wired is not self.store:
+                raise ValueError(
+                    "cost provider's size probe is wired to a different "
+                    "store; share a calibrated provider only between "
+                    "sessions that share one store")
+        if getattr(self.cost, "part_bytes_hint", False) is None:
+            self.cost.part_bytes_hint = float(
+                self.cfg.n_topics * self.cfg.vocab_size * 4)
+
     def save_calibration(self, path: Optional[str] = None) -> str:
         """Persist the calibrated provider's measurement log as the
         store's JSON sidecar (versioned) — the next
@@ -152,13 +209,53 @@ class MLegoSession:
 
     @store.setter
     def store(self, v: ModelStore) -> None:
-        # swapping the store (the legacy-shim path) must re-home every
+        # Swapping the store (the legacy-shim path) must re-home every
         # backend cache — stale subscriptions would miss invalidations —
-        # and the plan cache, whose entries reference the old model set
+        # and the plan cache, whose entries reference the old model set.
+        # Shared resources are the exception: an *adopted* backend may
+        # serve other sessions over the old store, so rebinding it here
+        # would silently break them — the caller must re-home it
+        # explicitly (backend.bind_store) before the swap; a shared
+        # plan cache is simply left behind (still homed on the old
+        # store, still serving its other sessions) and replaced with a
+        # fresh private one.
+        for name, b in self._backends.items():
+            if name in getattr(self, "_adopted_backends", ()) \
+                    and b.bound_store is not None and b.bound_store is not v:
+                raise ValueError(
+                    "cannot swap the store under an adopted execution "
+                    "backend (it may be shared by other sessions over "
+                    "the old store); call backend.bind_store(new_store) "
+                    "first if the backend really is private")
+        probe_store = getattr(getattr(self, "cost", None),
+                              "_size_probe_store", None)
+        if probe_store is not None and probe_store is not v:
+            if getattr(self, "_owns_cost", True):
+                # private provider: re-home its byte-size probe
+                self.cost.size_probe = _store_size_probe(v)
+                self.cost._size_probe_store = v
+            else:
+                raise ValueError(
+                    "cannot swap the store under a shared cost provider "
+                    "(its size probe prices fetches against the old "
+                    "store, which other sessions may still use)")
         self._store = v
         for b in self._backends.values():
             b.bind_store(v)
-        self._plan_cache.bind_store(v)
+        if getattr(self, "_owns_plan_cache", True) \
+                or self._plan_cache.store is None \
+                or self._plan_cache.store is v:
+            # private cache, or shared cache being adopted/kept on its
+            # home store: (re)bind — no-op when already homed on v
+            self._plan_cache.bind_store(v)
+        else:
+            # swapping away from a shared cache's home store: leave it
+            # behind (still serving its other sessions) and continue
+            # with a fresh private cache on the new store
+            self._plan_cache = PlanCache(
+                max_entries=self._plan_cache.max_entries)
+            self._plan_cache.bind_store(v)
+            self._owns_plan_cache = True
         if hasattr(self, "executor"):       # unset during __init__
             self.executor.store = v
 
@@ -167,16 +264,30 @@ class MLegoSession:
         return self._plan_cache
 
     def _next_key(self):
-        self._key, k = jax.random.split(self._key)
-        return k
+        # locked: a service tenant may build capital on its own thread
+        # while the worker loop executes the same session — an unlocked
+        # read-split-write here would hand both threads the same key
+        # (duplicate RNG streams, silently correlated samples)
+        with self._key_lock:
+            self._key, k = jax.random.split(self._key)
+            return k
 
-    def _register_backend(self, inst: ExecutionBackend) -> ExecutionBackend:
+    def _register_backend(self, inst: ExecutionBackend,
+                          adopted: bool = False) -> ExecutionBackend:
         bound = inst.bound_store
+        if adopted:
+            self._adopted_backends.add(inst.name)
         if bound is not None and bound is not self.store:
+            # sharing one backend across sessions is supported *over
+            # one shared store* (the serving layer's device LRU); two
+            # different stores both allocate model id 0, so a shared
+            # cache would silently cross-serve parameters
             raise ValueError(
-                "execution backend is already bound to another session's "
+                "execution backend is already bound to a different "
                 "store; its device cache is keyed by model id and ids "
-                "collide across stores — create one backend per session")
+                "collide across stores — share a backend only between "
+                "sessions that share one store (one backend per session "
+                "otherwise)")
         inst.bind_store(self.store)
         self._backends[inst.name] = inst
         # a calibrated provider prices fetches by device-cache state;
@@ -244,19 +355,21 @@ class MLegoSession:
         return 0
 
     def _observe_merge(self, n_merges: int, merge_s: float, d) -> None:
-        """Feed measured merge timings to the cost provider."""
+        """Feed measured merge timings to the cost provider (fetch and
+        pad terms are per-byte, read off the backend's traffic
+        counters)."""
         if d.merge_device_ms > 0.0:
             secs = d.merge_device_ms * 1e-3
-            rows = d.cache_hits + d.cache_misses + d.pad_rows
-            if d.pad_rows > 0 and rows > 0:
-                # apportion the launch by rows: the pad share is the
+            traffic = d.cache_hit_bytes + d.cache_miss_bytes + d.pad_bytes
+            if d.pad_bytes > 0 and traffic > 0:
+                # apportion the launch by bytes: the pad share is the
                 # *marginal* time the zero-weight rows cost, the rest
                 # stays attributed to the real fetches below
-                pad_secs = secs * d.pad_rows / rows
-                self.cost.observe_pad(d.pad_rows, pad_secs)
+                pad_secs = secs * d.pad_bytes / traffic
+                self.cost.observe_pad(d.pad_bytes, pad_secs)
                 secs -= pad_secs
-            self.cost.observe_merge_device(d.cache_hits, d.cache_misses,
-                                           secs)
+            self.cost.observe_merge_device(d.cache_hit_bytes,
+                                           d.cache_miss_bytes, secs)
         elif n_merges > 0:
             self.cost.observe_merge_host(n_merges, merge_s)
 
@@ -303,11 +416,16 @@ class MLegoSession:
         if not parts:
             raise ValueError(f"query {spec.sigma} selects no data")
         train_device_ms = backend.stats.delta(snap_train).train_device_ms
-        snap = backend.stats
-        t2 = time.perf_counter()
-        beta = self.executor.merge(parts, backend=backend)
-        merge_s = time.perf_counter() - t2
-        d = backend.stats.delta(snap)
+        # the snapshot->merge->diff window is held against concurrent
+        # sessions sharing this backend: their launches inside it
+        # would corrupt this query's counters and the per-byte
+        # calibration samples derived from them
+        with backend.measure_lock:
+            snap = backend.stats
+            t2 = time.perf_counter()
+            beta = self.executor.merge(parts, backend=backend)
+            merge_s = time.perf_counter() - t2
+            d = backend.stats.delta(snap)
         self._observe_merge(len(parts) - 1, merge_s, d)
         return QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
                            train_s, merge_s, search_s, materialized=fresh,
@@ -444,12 +562,13 @@ class MLegoSession:
             ntok_per_q.append(n_tok)
             gather_s.append(time.perf_counter() - t2)
 
-        snap = backend.stats
-        t3 = time.perf_counter()
-        betas = self.executor.merge_many(part_lists, backend=backend)
-        batch_merge_s = time.perf_counter() - t3
+        with backend.measure_lock:
+            snap = backend.stats
+            t3 = time.perf_counter()
+            betas = self.executor.merge_many(part_lists, backend=backend)
+            batch_merge_s = time.perf_counter() - t3
+            d = backend.stats.delta(snap)
         launch_share = batch_merge_s / len(specs)
-        d = backend.stats.delta(snap)
         self._observe_merge(sum(max(len(p) - 1, 0) for p in part_lists),
                             batch_merge_s, d)
 

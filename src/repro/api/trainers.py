@@ -129,8 +129,14 @@ def _train_vb(corpus: Corpus, cfg: LDAConfig, key) -> Dict[str, np.ndarray]:
     return {"lam": np.asarray(vb_fit(x, key, cfg))}
 
 
-def _train_gibbs(corpus: Corpus, cfg: LDAConfig, key) -> Dict[str, np.ndarray]:
-    return {"delta_nkv": cgs_fit(corpus.tokens, corpus.doc_ids, cfg, key)}
+def _train_gibbs(corpus: Corpus, cfg: LDAConfig, key,
+                 global_nkv: Optional[np.ndarray] = None
+                 ) -> Dict[str, np.ndarray]:
+    # global_nkv is the DSGS Eq. 8 prior — the store's merged counts,
+    # threaded in by the executor so a gap trains against the reuse
+    # capital's topic structure instead of a zero prior
+    return {"delta_nkv": cgs_fit(corpus.tokens, corpus.doc_ids, cfg, key,
+                                 global_nkv=global_nkv)}
 
 
 register_trainer("vb", _train_vb, merge="vb")

@@ -36,6 +36,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -175,11 +176,14 @@ class CostProvider:
     def observe_merge_host(self, n_merges: int, seconds: float) -> None:
         pass
 
-    def observe_merge_device(self, hits: int, misses: int,
+    def observe_merge_device(self, hit_bytes: int, miss_bytes: int,
                              seconds: float) -> None:
-        pass
+        """One fused device launch: *bytes* read from the device cache
+        (hits) vs transferred host→device (misses).  Per-byte, not
+        per-part, so prices stay correct once heterogeneous model
+        shapes land."""
 
-    def observe_pad(self, pad_rows: int, seconds: float) -> None:
+    def observe_pad(self, pad_bytes: int, seconds: float) -> None:
         pass
 
 
@@ -206,8 +210,10 @@ class CostModel(CostProvider):
 _MAX_OBS = 512    # rolling window per observation kind
 
 # JSON sidecar format version; unknown versions load as a cold start
-# (never crash a session over a stale sidecar)
-CALIBRATION_FORMAT = 1
+# (never crash a session over a stale sidecar).  2: device_obs/pad_obs
+# record *bytes* (hit_bytes, miss_bytes / pad_bytes), not part/row
+# counts — format-1 sidecars cold-start rather than mis-scale.
+CALIBRATION_FORMAT = 2
 
 
 @dataclass
@@ -219,8 +225,13 @@ class Calibration:
                  (exact scan) and device (blocked kernel) gap training
                  separately
     host_obs   : (x merges, seconds) per host merge
-    device_obs : (hits, misses, seconds) per fused device launch
-    pad_obs    : (pad rows, seconds) per *bucketed batch* launch
+    device_obs : (hit_bytes, miss_bytes, seconds) per fused device
+                 launch — bytes read from the device cache vs bytes
+                 transferred host→device
+    pad_obs    : (pad_bytes, seconds) per *bucketed batch* launch
+
+    Mutation is serialized by an internal lock: service workers and
+    concurrent sessions feed one shared log.
     """
 
     train_obs: Dict[str, List[Tuple[float, float]]] = field(
@@ -229,13 +240,18 @@ class Calibration:
     device_obs: List[Tuple[int, int, float]] = field(default_factory=list)
     pad_obs: List[Tuple[int, float]] = field(default_factory=list)
 
+    def __post_init__(self):
+        self._lock = threading.RLock()
+
     def _push(self, log: list, sample) -> None:
-        log.append(sample)
-        if len(log) > _MAX_OBS:
-            del log[: len(log) - _MAX_OBS]
+        with self._lock:
+            log.append(sample)
+            if len(log) > _MAX_OBS:
+                del log[: len(log) - _MAX_OBS]
 
     def push_train(self, backend: str, sample: Tuple[float, float]) -> None:
-        self._push(self.train_obs.setdefault(backend, []), sample)
+        with self._lock:
+            self._push(self.train_obs.setdefault(backend, []), sample)
 
     def __len__(self) -> int:
         return (sum(len(o) for o in self.train_obs.values())
@@ -244,14 +260,15 @@ class Calibration:
 
     # --- persistence (the store's JSON sidecar) ---------------------------
     def to_json_dict(self) -> dict:
-        return {
-            "format": CALIBRATION_FORMAT,
-            "train_obs": {b: [list(s) for s in obs]
-                          for b, obs in self.train_obs.items()},
-            "host_obs": [list(s) for s in self.host_obs],
-            "device_obs": [list(s) for s in self.device_obs],
-            "pad_obs": [list(s) for s in self.pad_obs],
-        }
+        with self._lock:
+            return {
+                "format": CALIBRATION_FORMAT,
+                "train_obs": {b: [list(s) for s in obs]
+                              for b, obs in self.train_obs.items()},
+                "host_obs": [list(s) for s in self.host_obs],
+                "device_obs": [list(s) for s in self.device_obs],
+                "pad_obs": [list(s) for s in self.pad_obs],
+            }
 
     @classmethod
     def from_json_dict(cls, doc: dict) -> Optional["Calibration"]:
@@ -271,12 +288,48 @@ class Calibration:
         except (KeyError, TypeError, ValueError):
             return None
 
-    def save(self, path: str) -> None:
-        """Atomic write of the JSON sidecar."""
+    def merged_with(self, other: "Calibration") -> "Calibration":
+        """Union of two observation logs, deduplicated by observation
+        identity (the sample tuples themselves).  ``other``'s samples
+        that this log doesn't already hold are *prepended* — this log
+        is the fresher one, so under the rolling window its samples
+        survive trimming first."""
+        def union(theirs: list, ours: list) -> list:
+            have = set(map(tuple, ours))
+            out = [s for s in map(tuple, theirs) if s not in have]
+            out.extend(map(tuple, ours))
+            return out[-_MAX_OBS:]
+
+        with self._lock:
+            merged = Calibration(
+                host_obs=union(other.host_obs, self.host_obs),
+                device_obs=union(other.device_obs, self.device_obs),
+                pad_obs=union(other.pad_obs, self.pad_obs),
+            )
+            for b in set(self.train_obs) | set(other.train_obs):
+                merged.train_obs[b] = union(other.train_obs.get(b, []),
+                                            self.train_obs.get(b, []))
+        return merged
+
+    def save(self, path: str, merge: bool = True) -> None:
+        """Atomic write of the JSON sidecar.
+
+        With ``merge`` (the default) the on-disk log is first merged in
+        (dedup by observation identity), so two sessions saving to one
+        shared sidecar union their logs instead of last-writer-wins
+        clobbering.  The read-merge-replace is not a transaction — a
+        truly simultaneous pair of writers can still lose the slower
+        one's *newest* samples — but no writer ever wipes another's
+        whole log."""
+        out = self
+        if merge:
+            existing = Calibration.load(path)
+            if existing is not None:
+                out = self.merged_with(existing)
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
         with tempfile.NamedTemporaryFile("w", dir=d, delete=False) as f:
-            json.dump(self.to_json_dict(), f, indent=1)
+            json.dump(out.to_json_dict(), f, indent=1)
             tmp = f.name
         os.replace(tmp, path)
 
@@ -329,25 +382,27 @@ class Calibration:
             [s / x for x, s in self.host_obs if x > 0 and s > 0])
 
     def fit_device(self) -> Optional[Tuple[float, float, float]]:
-        """(t_launch, t_hit, t_miss): seconds ≈ t_launch + t_hit·hits
-        + t_miss·misses, nonnegative least squares over the log."""
+        """(t_launch, t_hit, t_miss): seconds ≈ t_launch
+        + t_hit·hit_bytes + t_miss·miss_bytes, nonnegative least
+        squares over the log.  t_hit/t_miss are **per byte**."""
         obs = [(h, m, s) for h, m, s in self.device_obs if s > 0]
         if not obs:
             return None
         if len(obs) >= 3:
-            # drop the hottest per-part launch (jit compile warm-up)
+            # drop the hottest per-byte launch (jit compile warm-up)
             obs.remove(max(obs, key=lambda o: o[2] / max(o[0] + o[1], 1)))
         a = np.array([[1.0, h, m] for h, m, _ in obs])
         y = np.array([s for _, _, s in obs])
         if len(obs) < 3 or np.linalg.matrix_rank(a) < 3:
-            # under-determined: attribute the median per-part launch
-            # cost to the parts actually moved/read, keeping hit < miss
-            t_part = float(np.median(y / np.maximum(a[:, 1] + a[:, 2], 1)))
-            return 0.0, 0.25 * t_part, t_part
+            # under-determined: attribute the median per-byte launch
+            # cost to the bytes actually moved/read, keeping hit < miss
+            t_byte = float(np.median(y / np.maximum(a[:, 1] + a[:, 2], 1)))
+            return 0.0, 0.25 * t_byte, t_byte
         sol, *_ = np.linalg.lstsq(a, y, rcond=None)
         return tuple(float(max(v, 0.0)) for v in sol)
 
     def fit_t_pad(self) -> Optional[float]:
+        """Per padding *byte* in bucketed batch launches."""
         return self._robust(
             [s / p for p, s in self.pad_obs if p > 0 and s > 0])
 
@@ -364,26 +419,37 @@ class CalibratedCostModel(CostProvider):
                     ``set_train_backend`` names the backend whose κ
                     the next plan search prices
       t_merge       per-merge host cost
-      t_hit/t_miss  per-part device fetch cost split by cache state —
-                    ``cache_probe(model_id)`` (wired to the device
-                    backend's LRU by the session) decides which applies
-      t_pad         per padding row in bucketed batch launches
+      t_hit/t_miss  per-**byte** device fetch cost split by cache
+                    state — ``cache_probe(model_id)`` (wired to the
+                    device backend's LRU by the session) decides which
+                    applies; ``size_probe(model_id)`` supplies each
+                    part's byte size (wired to the store), falling
+                    back to ``part_bytes_hint`` so prices stay correct
+                    once heterogeneous model shapes land
+      t_pad         per padding **byte** in bucketed batch launches
 
     ``version`` increments on every refit so the session plan cache
     drops plans priced under stale coefficients.  ``calibration`` can
     be preloaded from the store's JSON sidecar (``Calibration.load``)
     so a new session starts at the previous session's prices instead
-    of the analytic cold start.
+    of the analytic cold start.  Observation intake and refits are
+    lock-serialized, so one provider can be shared by every session
+    of a multi-tenant service.
     """
 
     def __init__(self, base: Optional[CostModel] = None, *,
                  cache_probe: Optional[Callable[[int], bool]] = None,
+                 size_probe: Optional[Callable[[int], Optional[int]]] = None,
+                 part_bytes_hint: Optional[float] = None,
                  calibration: Optional[Calibration] = None):
         self.base = base or CostModel()
         self.calibration = calibration if calibration is not None \
             else Calibration()
         self.cache_probe = cache_probe
+        self.size_probe = size_probe
+        self.part_bytes_hint = part_bytes_hint
         self.train_backend = "host"
+        self._lock = threading.RLock()
         self._version = 0
         self._dirty = len(self.calibration) > 0
         self._kappa: Dict[str, float] = {}
@@ -395,9 +461,10 @@ class CalibratedCostModel(CostProvider):
     # refit runs at most once per price read, not once per observe_*
     # call on the submit hot path.
     def _ensure_fit(self) -> None:
-        if self._dirty:
-            self._dirty = False
-            self.refit()
+        with self._lock:
+            if self._dirty:
+                self._dirty = False
+                self.refit()
 
     @property
     def version(self) -> int:
@@ -411,9 +478,10 @@ class CalibratedCostModel(CostProvider):
 
     @property
     def t_merge(self) -> float:
-        self._ensure_fit()
-        return self._t_merge if self._t_merge is not None \
-            else self.base.t_merge
+        with self._lock:
+            self._ensure_fit()
+            return self._t_merge if self._t_merge is not None \
+                else self.base.t_merge
 
     def set_train_backend(self, backend: str) -> None:
         self.train_backend = backend
@@ -429,33 +497,54 @@ class CalibratedCostModel(CostProvider):
         return True
 
     def c_train(self, n_tokens: float) -> float:
-        self._ensure_fit()
         # the active backend's fitted κ; an unfit device backend falls
         # back to the host fit (closer than the analytic prior), then
-        # to the analytic base
-        kappa = self._kappa.get(self.train_backend,
-                                self._kappa.get("host",
-                                                self.base.kappa_train))
+        # to the analytic base.  Coefficients are snapshotted under the
+        # lock so a concurrent refit can't tear the read.
+        with self._lock:
+            self._ensure_fit()
+            kappa = self._kappa.get(self.train_backend,
+                                    self._kappa.get("host",
+                                                    self.base.kappa_train))
         return (kappa * self.base.max_iters
                 * float(n_tokens) ** self.base.train_exponent
                 * self.base.n_topics)
 
+    def _part_bytes(self, model_id: Optional[int] = None) -> float:
+        """Byte size of one merge part: the store-wired probe when it
+        answers, else the session's hint, else 1.0 (which degrades
+        per-byte pricing to the old per-part pricing — relative plan
+        ordering survives even unwired)."""
+        if model_id is not None and self.size_probe is not None:
+            nbytes = self.size_probe(model_id)
+            if nbytes is not None:
+                return float(nbytes)
+        return float(self.part_bytes_hint) if self.part_bytes_hint else 1.0
+
     def fetch_cost(self, model_ids: Tuple[int, ...],
                    uncovered_tokens: float) -> float:
-        self._ensure_fit()
-        if self._t_hit == self._t_miss == 0.0:
+        with self._lock:                     # consistent (t_hit, t_miss)
+            self._ensure_fit()
+            t_hit, t_miss = self._t_hit, self._t_miss
+        if t_hit == t_miss == 0.0:
             return 0.0
         cost = 0.0
         for mid in model_ids:
             hit = self.cache_probe is not None and self.cache_probe(mid)
-            cost += self._t_hit if hit else self._t_miss
+            cost += (t_hit if hit else t_miss) * self._part_bytes(mid)
         if uncovered_tokens > 0:
-            cost += self._t_miss        # the fresh gap model always uploads
+            # the fresh gap model always uploads (hint-sized: it does
+            # not exist yet, so no probe can size it)
+            cost += t_miss * self._part_bytes()
         return cost
 
     def padding_cost(self, pad_rows: int) -> float:
-        self._ensure_fit()
-        return (self._t_pad or 0.0) * max(pad_rows, 0)
+        """Padding rows share the merge statistic's shape, so one row
+        is one (hint-sized) part's worth of bytes."""
+        with self._lock:
+            self._ensure_fit()
+            t_pad = self._t_pad
+        return (t_pad or 0.0) * max(pad_rows, 0) * self._part_bytes()
 
     # --- measurement intake -------------------------------------------------
     def observe_train(self, n_tokens: float, seconds: float,
@@ -469,18 +558,19 @@ class CalibratedCostModel(CostProvider):
                                (int(n_merges), float(seconds)))
         self._dirty = True
 
-    def observe_merge_device(self, hits: int, misses: int,
+    def observe_merge_device(self, hit_bytes: int, miss_bytes: int,
                              seconds: float) -> None:
         self.calibration._push(self.calibration.device_obs,
-                               (int(hits), int(misses), float(seconds)))
+                               (int(hit_bytes), int(miss_bytes),
+                                float(seconds)))
         self._dirty = True
 
-    def observe_pad(self, pad_rows: int, seconds: float) -> None:
+    def observe_pad(self, pad_bytes: int, seconds: float) -> None:
         """``seconds`` must be the *marginal* time attributable to the
-        padding rows (callers apportion the launch wall time), not the
-        whole launch — t_pad multiplies per row."""
+        padding bytes (callers apportion the launch wall time), not
+        the whole launch — t_pad multiplies per byte."""
         self.calibration._push(self.calibration.pad_obs,
-                               (int(pad_rows), float(seconds)))
+                               (int(pad_bytes), float(seconds)))
         self._dirty = True
 
     # Prices within 25% of each other rarely flip a plan choice (the
@@ -499,33 +589,36 @@ class CalibratedCostModel(CostProvider):
         return False
 
     def refit(self) -> None:
-        c = self.calibration
-        kappas = c.fit_kappas(self.base)
-        t_merge = c.fit_t_merge()
-        t_hit, t_miss = self._t_hit, self._t_miss
-        dev = c.fit_device()
-        if dev is not None:
-            _, t_hit, t_miss = dev
-            if t_merge is None:
-                # device sessions never see a host merge; the launch
-                # cost amortized per part is the closest t_m analogue
-                t_merge = max(t_hit, self.base.t_merge)
-        t_pad = c.fit_t_pad()
-        if t_pad is None and dev is not None:
-            # padding rows stream like one cached row of bandwidth
-            t_pad = t_hit
-        backends = sorted(set(kappas) | set(self._kappa))
-        new = tuple(kappas.get(b) for b in backends) + (
-            t_merge, t_hit, t_miss, t_pad)
-        old = tuple(self._kappa.get(b) for b in backends) + (
-            self._t_merge, self._t_hit, self._t_miss, self._t_pad)
-        self._kappa, self._t_merge = kappas, t_merge
-        self._t_hit, self._t_miss, self._t_pad = t_hit, t_miss, t_pad
-        # version gates the session plan cache: bump only when prices
-        # moved materially, so a converged calibration keeps repeated
-        # queries on the cached plan
-        if self._materially_different(new, old):
-            self._version += 1
+        with self._lock:
+            c = self.calibration
+            kappas = c.fit_kappas(self.base)
+            t_merge = c.fit_t_merge()
+            t_hit, t_miss = self._t_hit, self._t_miss
+            dev = c.fit_device()
+            if dev is not None:
+                _, t_hit, t_miss = dev
+                if t_merge is None:
+                    # device sessions never see a host merge; the
+                    # launch cost amortized over one part's bytes is
+                    # the closest t_m analogue
+                    t_merge = max(t_hit * self._part_bytes(),
+                                  self.base.t_merge)
+            t_pad = c.fit_t_pad()
+            if t_pad is None and dev is not None:
+                # padding bytes stream like cached bytes of bandwidth
+                t_pad = t_hit
+            backends = sorted(set(kappas) | set(self._kappa))
+            new = tuple(kappas.get(b) for b in backends) + (
+                t_merge, t_hit, t_miss, t_pad)
+            old = tuple(self._kappa.get(b) for b in backends) + (
+                self._t_merge, self._t_hit, self._t_miss, self._t_pad)
+            self._kappa, self._t_merge = kappas, t_merge
+            self._t_hit, self._t_miss, self._t_pad = t_hit, t_miss, t_pad
+            # version gates the session plan cache: bump only when
+            # prices moved materially, so a converged calibration keeps
+            # repeated queries on the cached plan
+            if self._materially_different(new, old):
+                self._version += 1
 
 
 def plan_stats(plan: Tuple, query: Interval, index) -> Tuple[int, float]:

@@ -40,15 +40,21 @@ class ModelStore:
     # copies.  Listeners fire outside the lock with (event, model_id),
     # event in {"add", "remove"}.
     def subscribe(self, fn: StoreListener) -> None:
-        if fn not in self._listeners:
-            self._listeners.append(fn)
+        """Idempotent: a listener is registered at most once, however
+        many sessions over this store bind the same shared cache."""
+        with self._lock:
+            if fn not in self._listeners:
+                self._listeners.append(fn)
 
     def unsubscribe(self, fn: StoreListener) -> None:
-        if fn in self._listeners:
-            self._listeners.remove(fn)
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
 
     def _notify(self, event: str, model_id: int) -> None:
-        for fn in list(self._listeners):
+        with self._lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
             fn(event, model_id)
 
     # --- CRUD ---------------------------------------------------------
@@ -75,7 +81,11 @@ class ModelStore:
         return len(self._models)
 
     def models(self, kind: Optional[str] = None) -> List[MaterializedModel]:
-        ms = list(self._models.values())
+        # snapshot under the lock: the store is shared by concurrent
+        # sessions (the serving layer), and a mid-iteration add/remove
+        # must not corrupt a reader's view
+        with self._lock:
+            ms = list(self._models.values())
         return ms if kind is None else [m for m in ms if m.kind == kind]
 
     def usable(self, query: Interval, kind: Optional[str] = None

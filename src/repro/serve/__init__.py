@@ -1,0 +1,27 @@
+"""MLego serving layer — multi-tenant queries over one shared store.
+
+    from repro.serve import MLegoService
+    from repro.api import Interval, QuerySpec
+
+    svc = MLegoService(corpus, cfg, backend="device")
+    fut = svc.submit(QuerySpec(sigma=Interval(0.0, 500.0)), tenant="ana")
+    report = fut.result()
+
+One ``ModelStore``, one execution backend (one device model LRU), one
+cross-session ``PlanCache``, one calibration log — shared by every
+tenant; concurrent specs coalesce into Alg. 4 batches inside a
+configurable time/size window.  See ``repro.api`` README's "Serving
+layer" section.
+"""
+from repro.serve.queue import CoalescingQueue, PendingQuery
+from repro.serve.reports import ServiceReport, TenantStats
+from repro.serve.service import DEFAULT_TENANT, MLegoService
+
+__all__ = [
+    "CoalescingQueue",
+    "DEFAULT_TENANT",
+    "MLegoService",
+    "PendingQuery",
+    "ServiceReport",
+    "TenantStats",
+]

@@ -1,0 +1,114 @@
+"""Coalescing queue — the mechanism that turns concurrent interactive
+users into Alg. 4 batches.
+
+Independent analysts submitting within a few milliseconds of each
+other would each pay a full plan search + gap training + merge launch.
+The paper's batch optimizer exists precisely because those queries
+share structure; ``CoalescingQueue.drain`` is where the sharing is
+*harvested* at serve time: the worker blocks for one pending query,
+then keeps collecting arrivals for a configurable time window (or
+until a width cap), and hands the whole bundle back so the service can
+fuse compatible specs into one ``submit_many`` call.
+
+The window is a latency/throughput dial: every query waits at most
+``window_s`` beyond its own execution time, and in exchange a burst of
+n compatible queries rides one joint plan search, trains every shared
+gap segment once, and merges in size-bucketed batched launches.
+``window_s=0`` degenerates to FIFO serial service (drain returns
+whatever is already queued, never waits for more).
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.api.spec import QuerySpec
+
+
+@dataclass
+class PendingQuery:
+    """One enqueued spec awaiting execution."""
+
+    spec: QuerySpec
+    tenant: str
+    future: "Future" = field(default_factory=Future)
+    enqueued_at: float = field(default_factory=time.perf_counter)
+
+
+class CoalescingQueue:
+    """Thread-safe FIFO with windowed batch drains.
+
+    window_s  : how long a drain keeps collecting after its first item
+                (0 = take only what is already queued)
+    max_width : hard cap on one drain's size — bounds both the fused
+                batch's device footprint and the worst-case head-of-
+                line wait a giant burst can impose
+    """
+
+    def __init__(self, window_s: float = 0.005, max_width: int = 16):
+        if window_s < 0:
+            raise ValueError(f"window_s must be >= 0, got {window_s}")
+        if max_width < 1:
+            raise ValueError(f"max_width must be >= 1, got {max_width}")
+        self.window_s = window_s
+        self.max_width = max_width
+        self._q: "_queue.Queue[PendingQuery]" = _queue.Queue()
+        self._closed = False
+        # put's closed-check and enqueue must be atomic against
+        # close(): otherwise a submitter preempted between them lands
+        # an item in a queue whose worker already drained and exited,
+        # hanging that future forever
+        self._close_lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return self._q.qsize()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Refuse new work; queued items remain drainable.  Blocks
+        until every in-flight ``put`` that already passed its closed
+        check has enqueued, so callers may safely drain-then-join
+        after this returns."""
+        with self._close_lock:
+            self._closed = True
+
+    def put(self, item: PendingQuery) -> None:
+        with self._close_lock:
+            if self._closed:
+                raise RuntimeError("queue is closed to new queries")
+            self._q.put(item)
+
+    def drain(self, timeout: float = 0.05) -> List[PendingQuery]:
+        """One coalescing round.
+
+        Blocks up to ``timeout`` for a first pending query ([] if none
+        arrives — the worker's idle poll), then keeps collecting until
+        the window closes or ``max_width`` is reached.  The window is
+        anchored at the *first* item's drain, not at each arrival, so
+        a steady trickle cannot hold a batch open forever.
+        """
+        try:
+            first = self._q.get(timeout=timeout) if timeout > 0 \
+                else self._q.get_nowait()
+        except _queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.window_s
+        while len(batch) < self.max_width:
+            remaining = deadline - time.perf_counter()
+            try:
+                batch.append(self._q.get(timeout=remaining)
+                             if remaining > 0 else self._q.get_nowait())
+            except _queue.Empty:
+                break
+        return batch
+
+
+__all__ = ["CoalescingQueue", "PendingQuery"]

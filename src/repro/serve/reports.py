@@ -1,0 +1,110 @@
+"""Service-level telemetry — what a multi-tenant operator watches.
+
+``QueryReport``/``BatchReport`` answer *one* query or batch;
+``ServiceReport`` answers "how is the service doing": per-tenant queue
+waits and coalesce widths (``TenantStats``), shared-cache traffic (the
+cross-session plan cache and the device model LRU), and the coalescing
+queue's fusion efficiency.  Snapshots are plain frozen dataclasses —
+``MLegoService.report()`` reads the tenant/group counters under the
+service stats lock (mutually consistent), while the shared-structure
+counters (plan cache, backend stats, calibration size) are
+point-in-time reads of independently-locked structures: each is valid,
+but a query completing mid-snapshot can land between them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Tuple
+
+from repro.api.backend import BackendStats
+
+
+@dataclass(frozen=True)
+class TenantStats:
+    """One tenant's view of the service.
+
+    queue_wait_s sums the time each of the tenant's queries sat in the
+    coalescing queue before its group started executing (the price of
+    the coalescing window); width_sum sums the widths of the groups
+    its queries rode in, so ``mean_width`` > 1 means this tenant's
+    traffic actually fused with other queries.
+    """
+
+    tenant: str
+    queries: int = 0
+    errors: int = 0
+    queue_wait_s: float = 0.0
+    max_queue_wait_s: float = 0.0
+    coalesced_queries: int = 0      # answered inside a width>1 group
+    width_sum: int = 0
+    max_width: int = 0
+    plan_cached_queries: int = 0    # answered off the shared plan cache
+
+    @property
+    def mean_queue_wait_s(self) -> float:
+        return self.queue_wait_s / self.queries if self.queries else 0.0
+
+    @property
+    def mean_width(self) -> float:
+        return self.width_sum / self.queries if self.queries else 0.0
+
+    def absorb(self, *, wait_s: float, width: int, plan_cached: bool,
+               error: bool = False) -> "TenantStats":
+        """One answered (or failed) query folded in; returns the new
+        frozen snapshot."""
+        return replace(
+            self,
+            queries=self.queries + 1,
+            errors=self.errors + (1 if error else 0),
+            queue_wait_s=self.queue_wait_s + wait_s,
+            max_queue_wait_s=max(self.max_queue_wait_s, wait_s),
+            coalesced_queries=self.coalesced_queries + (1 if width > 1 else 0),
+            width_sum=self.width_sum + width,
+            max_width=max(self.max_width, width),
+            plan_cached_queries=self.plan_cached_queries
+            + (1 if plan_cached else 0))
+
+
+@dataclass(frozen=True)
+class ServiceReport:
+    """Point-in-time snapshot of the whole service.
+
+    ``groups``/``coalesced_groups`` count drained execution groups
+    (a group is one ``submit_many`` launch when its width > 1);
+    ``plan_cache_hits``/``misses`` read the *shared* plan cache, so
+    they include hits one tenant earned from another tenant's
+    searches; ``backend`` is the shared execution backend's cumulative
+    counters (device-cache traffic across every session).
+    """
+
+    tenants: Dict[str, TenantStats] = field(default_factory=dict)
+    queries: int = 0
+    errors: int = 0
+    groups: int = 0
+    coalesced_groups: int = 0
+    max_coalesce_width: int = 0
+    width_sum: int = 0
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_cache_entries: int = 0
+    backend: BackendStats = field(default_factory=BackendStats)
+    calibration_samples: int = 0
+
+    @property
+    def mean_coalesce_width(self) -> float:
+        """Mean width over *groups* (1.0 = nothing ever fused)."""
+        return self.width_sum / self.groups if self.groups else 0.0
+
+    @property
+    def coalesce_rate(self) -> float:
+        """Fraction of queries answered inside a width>1 group."""
+        if not self.queries:
+            return 0.0
+        return sum(t.coalesced_queries for t in self.tenants.values()) \
+            / self.queries
+
+    def tenant(self, name: str) -> TenantStats:
+        return self.tenants.get(name, TenantStats(tenant=name))
+
+
+__all__ = ["ServiceReport", "TenantStats"]

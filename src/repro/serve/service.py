@@ -1,0 +1,347 @@
+"""``MLegoService`` — the multi-tenant front door over one shared store.
+
+``MLegoSession`` is a single-caller object: its plan cache, device
+model LRU, and calibration log are private, so every concurrent
+analyst over the same materialized capital rebuilds all three.  The
+service owns exactly one of each — one ``ModelStore``, one execution
+backend (one device LRU), one store-homed ``PlanCache``, one cost
+provider (one calibration log) — and hands every tenant a session
+wired to the shared set:
+
+    svc = MLegoService(corpus, cfg, backend="device", window_s=0.005)
+    svc.train_range(0.0, 500.0)                   # shared capital
+    fut = svc.submit(QuerySpec(sigma=Interval(0.0, 1000.0)), tenant="ana")
+    report = fut.result()                         # a QueryReport
+
+``submit`` is asynchronous: specs land on a **coalescing queue** and a
+worker loop drains it in time/size windows.  Specs that drained
+together and are compatible — same trainer kind, same execution
+backend; α may differ, the session's α-split machinery handles it —
+are fused into one ``submit_many`` call, so independent interactive
+users ride Alg. 4's joint planning (shared gap segments trained once)
+and the size-bucketed batched merge launches instead of issuing n
+serial single-query merges.  A group whose fused execution fails is
+retried query-by-query, so one malformed spec cannot poison its
+coalescing window's neighbors.
+
+Cross-session reuse is the point: tenant B's repeated query over a
+plan tenant A already searched reports ``plan_cached=True``, and its
+merge reads A's device-resident model parameters as cache hits.
+Per-tenant queue waits and coalesce widths land on ``ServiceReport``
+(``svc.report()``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.api.backend import ExecutionBackend, make_backend
+from repro.api.planner import PlanCache
+from repro.api.session import MLegoSession
+from repro.api.spec import QuerySpec
+from repro.api.trainers import resolve_kind
+from repro.configs.lda_default import LDAConfig
+from repro.core.cost import CostProvider
+from repro.core.lda import MaterializedModel
+from repro.core.store import ModelStore
+from repro.data.corpus import Corpus
+from repro.serve.queue import CoalescingQueue, PendingQuery
+from repro.serve.reports import ServiceReport, TenantStats
+
+DEFAULT_TENANT = "default"
+
+
+def _resolve(future: "Future", result) -> None:
+    """Set a result, tolerating futures a client already finalized —
+    the worker must never die over one future's state."""
+    try:
+        future.set_result(result)
+    except Exception:
+        pass
+
+
+def _reject(future: "Future", exc: BaseException) -> None:
+    try:
+        future.set_exception(
+            exc if isinstance(exc, Exception) else RuntimeError(repr(exc)))
+    except Exception:
+        pass
+
+
+class MLegoService:
+    """One shared store, many tenants, one coalescing worker loop.
+
+    corpus/cfg       : the Def. 1 D and F every tenant shares
+    store            : shared ``ModelStore`` (fresh one if omitted)
+    kind             : default trainer kind for specs that name none
+    backend          : the *shared* execution backend ("host"/"device"
+                       or an instance) — one device LRU for everyone
+    cost             : shared cost provider ("analytic"/"calibrated"/
+                       instance); a calibrated provider accumulates one
+                       calibration log across all tenants
+    calibration_path : sidecar to warm-start from and to merge-save
+                       into on ``close()``
+    window_s         : coalescing window — max extra latency a query
+                       pays to let neighbors fuse with it
+    max_width        : cap on one coalesced group's size
+    seed             : base RNG seed; each tenant's session derives a
+                       stable per-tenant stream from it
+    """
+
+    def __init__(self, corpus: Corpus, cfg: LDAConfig, *,
+                 store: Optional[ModelStore] = None,
+                 kind: str = "vb",
+                 backend: Union[str, ExecutionBackend] = "host",
+                 cost: Union[CostProvider, str, None] = None,
+                 calibration_path: Optional[str] = None,
+                 window_s: float = 0.005, max_width: int = 16,
+                 plan_cache_entries: int = 1024,
+                 seed: int = 0, poll_s: float = 0.02):
+        self.corpus = corpus
+        self.cfg = cfg
+        self.store = store if store is not None else ModelStore()
+        self.kind = resolve_kind(kind)
+        self.backend = make_backend(backend) if isinstance(backend, str) \
+            else backend
+        self.plan_cache = PlanCache(max_entries=plan_cache_entries)
+        self.cost = MLegoSession._make_cost(cost, cfg, calibration_path)
+        self.calibration_path = calibration_path
+        self._seed = seed
+        self._poll_s = poll_s
+
+        self._sessions: Dict[str, MLegoSession] = {}
+        self._session_lock = threading.RLock()
+
+        self._stats_lock = threading.Lock()
+        self._tenants: Dict[str, TenantStats] = {}
+        self._queries = self._errors = 0
+        self._groups = self._coalesced_groups = 0
+        self._width_sum = self._max_width = 0
+
+        self._queue = CoalescingQueue(window_s=window_s,
+                                      max_width=max_width)
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._run,
+                                        name="mlego-service-worker",
+                                        daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "MLegoService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._queue.closed
+
+    def close(self) -> None:
+        """Stop accepting queries, drain everything pending, join the
+        worker, and (for a calibrated provider with a sidecar path)
+        merge-save the shared calibration log."""
+        if self._queue.closed:
+            if self._worker.is_alive():
+                self._worker.join()
+            return
+        self._queue.close()
+        self._stop.set()
+        self._worker.join()
+        if self.calibration_path is not None \
+                and getattr(self.cost, "calibration", None) is not None:
+            self.save_calibration()
+
+    # ------------------------------------------------------------------
+    # tenants
+    # ------------------------------------------------------------------
+    def _tenant_seed(self, tenant: str) -> int:
+        # stable across runs and processes (no hash randomization)
+        return (self._seed + zlib.crc32(tenant.encode("utf-8"))) & 0x7FFFFFFF
+
+    def session(self, tenant: str = DEFAULT_TENANT) -> MLegoSession:
+        """The tenant's session — lazily built, permanently wired to
+        the shared store/backend/plan-cache/cost provider.  Usable
+        directly for synchronous work (capital building, debugging);
+        interactive traffic should go through ``submit``."""
+        with self._session_lock:
+            sess = self._sessions.get(tenant)
+            if sess is None:
+                sess = MLegoSession(
+                    self.corpus, self.cfg, store=self.store,
+                    cost=self.cost, kind=self.kind,
+                    seed=self._tenant_seed(tenant),
+                    backend=self.backend, plan_cache=self.plan_cache)
+                self._sessions[tenant] = sess
+            return sess
+
+    def tenants(self) -> Tuple[str, ...]:
+        with self._session_lock:
+            return tuple(sorted(self._sessions))
+
+    # ------------------------------------------------------------------
+    # front door
+    # ------------------------------------------------------------------
+    def submit(self, spec: QuerySpec,
+               tenant: str = DEFAULT_TENANT) -> "Future":
+        """Enqueue one query; resolves to its ``QueryReport``.
+
+        The future raises what the query raised (e.g. ``ValueError``
+        for an empty predicate) — never its coalescing neighbors'
+        errors."""
+        if self._queue.closed:
+            raise RuntimeError("service is closed")
+        self.session(tenant)           # construct early: fail fast here
+        item = PendingQuery(spec=spec, tenant=tenant)
+        self._queue.put(item)
+        return item.future
+
+    def train_range(self, lo: float, hi: float,
+                    kind: Optional[str] = None,
+                    tenant: str = DEFAULT_TENANT
+                    ) -> Optional[MaterializedModel]:
+        """Synchronous capital building into the shared store."""
+        return self.session(tenant).train_range(lo, hi, kind)
+
+    def save_calibration(self, path: Optional[str] = None) -> str:
+        path = path or self.calibration_path
+        if path is None:
+            raise ValueError("no calibration path: pass one here or set "
+                             "calibration_path= on the service")
+        cal = getattr(self.cost, "calibration", None)
+        if cal is None:
+            raise ValueError("service cost provider is not calibrated; "
+                             "nothing to persist")
+        cal.save(path)                  # merge-on-save (concurrent-safe)
+        return path
+
+    # ------------------------------------------------------------------
+    # worker loop
+    # ------------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            batch = self._queue.drain(timeout=self._poll_s)
+            if batch:
+                try:
+                    self._execute(batch)
+                except BaseException as exc:     # noqa: BLE001
+                    # the worker must survive anything — a dead worker
+                    # silently strands every queued and future query.
+                    # Fail the batch's unresolved futures instead.
+                    for it in batch:
+                        _reject(it.future, exc)
+            elif self._stop.is_set() and len(self._queue) == 0:
+                return
+
+    def _group_key(self, spec: QuerySpec) -> Tuple[str, str]:
+        # submit_many's batch-wide contracts: one trainer kind, one
+        # execution backend.  α may vary inside a group — the session
+        # auto-splits mixed-α batches into per-α Alg. 4 sub-batches.
+        # spec.kind is already canonical (QuerySpec resolves aliases
+        # like "gibbs" at construction), as is self.kind, so aliased
+        # spellings of one kind land in one group.
+        return (spec.kind or self.kind,
+                spec.backend or self.backend.name)
+
+    def _execute(self, batch: List[PendingQuery]) -> None:
+        groups: Dict[Tuple[str, str], List[PendingQuery]] = {}
+        for item in batch:
+            groups.setdefault(self._group_key(item.spec), []).append(item)
+        for items in groups.values():
+            self._execute_group(items)
+
+    def _execute_group(self, items: List[PendingQuery]) -> None:
+        # transition every future PENDING -> RUNNING exactly once; a
+        # future the client cancelled while queued is dropped here (and
+        # can no longer be cancelled mid-execution), so set_result
+        # below can never race a cancellation into InvalidStateError
+        items = [it for it in items
+                 if it.future.set_running_or_notify_cancel()]
+        width = len(items)
+        if width == 0:
+            return
+        if width == 1:
+            self._execute_serial(items)
+            return
+        # queue wait is measured to the group's own execution start —
+        # a group stuck behind its batch-mates' execution is still
+        # waiting, and the operator should see that head-of-line time
+        t0 = time.perf_counter()
+        # the executing session only contributes its RNG stream — every
+        # shared structure (store, plan cache, device LRU, calibration)
+        # is common to all tenants, so any member's session is correct
+        sess = self.session(items[0].tenant)
+        try:
+            br = sess.submit_many([it.spec for it in items])
+        except Exception:
+            # isolate the offender: re-run the group query-by-query so
+            # only the failing spec's future carries the error
+            self._execute_serial(items)
+            return
+        with self._stats_lock:
+            self._groups += 1
+            self._coalesced_groups += 1
+            self._width_sum += width
+            self._max_width = max(self._max_width, width)
+        for it, rep in zip(items, br.reports):
+            self._record(it, t0, width, br.plan_cached)
+            _resolve(it.future, rep)
+
+    def _execute_serial(self, items: List[PendingQuery]) -> None:
+        """Width-1 groups and the failed-batch isolation retry.  The
+        futures are already RUNNING (gated in ``_execute_group``)."""
+        for it in items:
+            t0 = time.perf_counter()     # this query's own start
+            with self._stats_lock:
+                self._groups += 1
+                self._width_sum += 1
+                self._max_width = max(self._max_width, 1)
+            try:
+                rep = self.session(it.tenant).submit(it.spec)
+            except Exception as exc:
+                self._record(it, t0, 1, False, error=True)
+                _reject(it.future, exc)
+            else:
+                self._record(it, t0, 1, rep.plan_cached)
+                _resolve(it.future, rep)
+
+    def _record(self, item: PendingQuery, t0: float, width: int,
+                plan_cached: bool, error: bool = False) -> None:
+        wait = max(t0 - item.enqueued_at, 0.0)
+        with self._stats_lock:
+            self._queries += 1
+            if error:
+                self._errors += 1
+            ts = self._tenants.get(item.tenant,
+                                   TenantStats(tenant=item.tenant))
+            self._tenants[item.tenant] = ts.absorb(
+                wait_s=wait, width=width, plan_cached=plan_cached,
+                error=error)
+
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+    def report(self) -> ServiceReport:
+        cal = getattr(self.cost, "calibration", None)
+        with self._stats_lock:
+            return ServiceReport(
+                tenants=dict(self._tenants),
+                queries=self._queries,
+                errors=self._errors,
+                groups=self._groups,
+                coalesced_groups=self._coalesced_groups,
+                max_coalesce_width=self._max_width,
+                width_sum=self._width_sum,
+                plan_cache_hits=self.plan_cache.hits,
+                plan_cache_misses=self.plan_cache.misses,
+                plan_cache_entries=len(self.plan_cache),
+                backend=self.backend.stats,
+                calibration_samples=len(cal) if cal is not None else 0)
+
+
+__all__ = ["DEFAULT_TENANT", "MLegoService"]

@@ -320,6 +320,75 @@ def test_alias_cannot_shadow_registered_kind():
 
 
 # ---------------------------------------------------------------------------
+# DSGS global prior threading (store's merged counts -> gap training)
+# ---------------------------------------------------------------------------
+
+def test_gs_gap_trains_against_store_merged_counts(train, monkeypatch):
+    """A gs gap must sample against the store's merged N_kv (Eq. 8),
+    not the seed's zero prior."""
+    import repro.api.trainers as tr
+
+    seen = {}
+    real = tr.cgs_fit
+
+    def spy(tokens, doc_ids, cfg, key, global_nkv=None, sweeps=None):
+        seen["global_nkv"] = global_nkv
+        return real(tokens, doc_ids, cfg, key, global_nkv=global_nkv,
+                    sweeps=sweeps)
+
+    monkeypatch.setattr(tr, "cgs_fit", spy)
+    sess = _session(train, kind="gs")
+    m = sess.train_range(0.0, 150.0)          # cold store: zero prior
+    assert seen["global_nkv"] is None
+    sess.submit(QuerySpec(sigma=Interval(0.0, 300.0)))  # gap 150..300
+    assert seen["global_nkv"] is not None, \
+        "warm store must thread its merged counts as the DSGS prior"
+    np.testing.assert_array_equal(seen["global_nkv"],
+                                  m.theta["delta_nkv"])
+
+
+def test_gs_prior_sums_all_store_counts(train, monkeypatch):
+    import repro.api.trainers as tr
+
+    seen = {}
+    real = tr.cgs_fit
+
+    def spy(tokens, doc_ids, cfg, key, global_nkv=None, sweeps=None):
+        seen["global_nkv"] = global_nkv
+        return real(tokens, doc_ids, cfg, key, global_nkv=global_nkv,
+                    sweeps=sweeps)
+
+    monkeypatch.setattr(tr, "cgs_fit", spy)
+    sess = _session(train, kind="gs")
+    m1 = sess.train_range(0.0, 100.0)
+    m2 = sess.train_range(100.0, 200.0)       # trained under m1's prior
+    np.testing.assert_array_equal(seen["global_nkv"],
+                                  m1.theta["delta_nkv"])
+    sess.submit(QuerySpec(sigma=Interval(0.0, 300.0)))  # gap 200..300
+    np.testing.assert_allclose(
+        seen["global_nkv"],
+        m1.theta["delta_nkv"] + m2.theta["delta_nkv"], rtol=1e-6)
+
+
+def test_custom_trainer_without_prior_kwarg_still_works(train):
+    """The registry contract stays (corpus, cfg, key) — trainers that
+    don't declare global_nkv never receive it."""
+    def plain_gs(corpus, cfg, key):
+        return get_trainer("gs")(corpus, cfg, key)
+
+    register_trainer("plain_gs", plain_gs, merge="gs")
+    try:
+        sess = _session(train, kind="plain_gs")
+        sess.train_range(0.0, 100.0)
+        rep = sess.submit(QuerySpec(sigma=Interval(0.0, 200.0)))
+        assert np.isfinite(rep.beta).all()
+    finally:
+        from repro.api import trainers as tr
+        tr._TRAINERS.pop("plain_gs", None)
+        tr._MERGES.pop("plain_gs", None)
+
+
+# ---------------------------------------------------------------------------
 # batch cost attribution (regression for the results[0] smearing bug)
 # ---------------------------------------------------------------------------
 

@@ -306,6 +306,131 @@ def test_calibration_path_on_uncalibrated_provider_raises(tmp_path):
     assert len(provider.calibration) == 1
 
 
+def test_calibration_save_merges_with_disk_sidecar(tmp_path):
+    """Two sessions saving into one sidecar must union their logs
+    (dedup by observation identity), not last-writer-wins clobber."""
+    path = str(tmp_path / "calibration.json")
+    first = Calibration(host_obs=[(1, 1e-3), (2, 2e-3)])
+    first.train_obs["host"] = [(100.0, 0.5)]
+    first.save(path)
+
+    second = Calibration(host_obs=[(2, 2e-3), (3, 3e-3)])
+    second.train_obs["device"] = [(100.0, 0.05)]
+    second.save(path)
+
+    merged = Calibration.load(path)
+    assert sorted(merged.host_obs) == [(1, 1e-3), (2, 2e-3), (3, 3e-3)], \
+        "shared samples dedup, disjoint samples union"
+    assert merged.train_obs["host"] == [(100.0, 0.5)]
+    assert merged.train_obs["device"] == [(100.0, 0.05)]
+
+
+def test_calibration_save_merge_opt_out_clobbers(tmp_path):
+    path = str(tmp_path / "calibration.json")
+    Calibration(host_obs=[(1, 1e-3)]).save(path)
+    Calibration(host_obs=[(9, 9e-3)]).save(path, merge=False)
+    assert Calibration.load(path).host_obs == [(9, 9e-3)]
+
+
+def test_calibration_merge_respects_rolling_window(tmp_path):
+    from repro.core.cost import _MAX_OBS
+    path = str(tmp_path / "calibration.json")
+    Calibration(host_obs=[(i, 1e-3) for i in range(1, _MAX_OBS + 1)]) \
+        .save(path)
+    fresh = Calibration(host_obs=[(-1, 5e-3)])
+    fresh.save(path)
+    merged = Calibration.load(path)
+    assert len(merged.host_obs) == _MAX_OBS
+    assert merged.host_obs[-1] == (-1, 5e-3), \
+        "the saving session's fresh samples must survive the trim"
+
+
+def test_concurrent_observers_lose_nothing():
+    """The calibration log is shared by every session of a service —
+    concurrent observe_* calls must all land."""
+    import threading
+
+    cal = CalibratedCostModel(BASE)
+    n, threads = 200, []
+
+    def observer(tid):
+        for i in range(n):
+            cal.observe_train(100 + i, 1e-3, backend=f"b{tid}")
+            cal.observe_merge_host(1, 1e-3)
+
+    for t in range(4):
+        threads.append(threading.Thread(target=observer, args=(t,)))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for t in range(4):
+        assert len(cal.calibration.train_obs[f"b{t}"]) == n
+    assert cal.version >= 0          # refit under contention must not throw
+
+
+# ---------------------------------------------------------------------------
+# per-byte fetch terms (heterogeneous model shapes price correctly)
+# ---------------------------------------------------------------------------
+
+def test_fetch_cost_scales_with_model_bytes():
+    """t_miss is per byte: a plan over a 4x-bigger model must price
+    ~4x the fetch, which per-part pricing could never see."""
+    sizes = {1: 1000, 2: 4000}
+    cal = CalibratedCostModel(BASE, cache_probe=lambda mid: False,
+                              size_probe=sizes.get)
+    for hb, mb in ((0, 3000), (3000, 0), (2000, 1000), (1000, 2000)):
+        cal.observe_merge_device(hb, mb, 1e-3 + 2e-7 * hb + 8e-7 * mb)
+    small = cal.fetch_cost((1,), 0.0)
+    big = cal.fetch_cost((2,), 0.0)
+    assert big == pytest.approx(4 * small, rel=1e-3)
+
+
+def test_fetch_cost_falls_back_to_hint_then_unit():
+    cal = CalibratedCostModel(BASE, cache_probe=lambda mid: False,
+                              part_bytes_hint=500.0)
+    for hb, mb in ((0, 3000), (3000, 0), (2000, 1000), (1000, 2000)):
+        cal.observe_merge_device(hb, mb, 1e-3 + 2e-7 * hb + 8e-7 * mb)
+    hinted = cal.fetch_cost((7,), 0.0)           # unknown id -> hint
+    assert hinted == pytest.approx(cal._t_miss * 500.0, rel=1e-6)
+    bare = CalibratedCostModel(BASE, cache_probe=lambda mid: False)
+    for hb, mb in ((0, 3000), (3000, 0), (2000, 1000), (1000, 2000)):
+        bare.observe_merge_device(hb, mb, 1e-3 + 2e-7 * hb + 8e-7 * mb)
+    assert bare.fetch_cost((7,), 0.0) == pytest.approx(bare._t_miss)
+
+
+def test_padding_cost_prices_rows_at_hint_bytes():
+    cal = CalibratedCostModel(BASE, part_bytes_hint=100.0)
+    cal.observe_pad(400, 8e-3)                    # 2e-5 s per byte
+    cal.observe_pad(200, 4e-3)
+    assert cal.padding_cost(3) == pytest.approx(3 * 100.0 * 2e-5, rel=1e-6)
+
+
+def test_session_wires_size_probe_and_hint(tmp_path):
+    from repro.api import Interval, MLegoSession, QuerySpec
+    from repro.configs.lda_default import LDAConfig
+    from repro.data.corpus import make_corpus
+
+    cfg = LDAConfig(n_topics=4, vocab_size=60, max_iters=4,
+                    e_step_iters=3, gibbs_sweeps=3)
+    corpus, _ = make_corpus(60, cfg.vocab_size, cfg.n_topics,
+                            mean_doc_len=15, seed=2)
+    sess = MLegoSession(corpus, cfg, cost="calibrated")
+    assert sess.cost.part_bytes_hint == cfg.n_topics * cfg.vocab_size * 4
+    m = sess.train_range(0.0, 40.0)
+    assert sess.cost.size_probe(m.model_id) == m.nbytes()
+    assert sess.cost.size_probe(999_999) is None
+
+
+def test_format1_sidecar_cold_starts(tmp_path):
+    """Pre-per-byte sidecars carry part counts, not bytes — loading
+    them would mis-scale prices by ~KV·4, so they must cold-start."""
+    stale = tmp_path / "v1.json"
+    stale.write_text('{"format": 1, "train_obs": {}, "host_obs": [], '
+                     '"device_obs": [[1, 2, 0.003]], "pad_obs": []}')
+    assert Calibration.load(str(stale)) is None
+
+
 def test_session_save_calibration_requires_a_path_and_provider():
     from repro.api import MLegoSession
     from repro.configs.lda_default import LDAConfig

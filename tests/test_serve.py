@@ -1,0 +1,396 @@
+"""Multi-tenant serving layer: the coalescing queue, MLegoService's
+async front door (fusion into submit_many, failure isolation,
+per-tenant stats, shutdown), and cross-session sharing of the plan
+cache / device model LRU / calibration log over one store."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DeviceBackend,
+    Interval,
+    MLegoSession,
+    PlanCache,
+    QuerySpec,
+    get_trainer,
+    register_trainer,
+)
+from repro.configs.lda_default import LDAConfig
+from repro.core.store import ModelStore
+from repro.data.corpus import make_corpus, train_test_split
+from repro.serve import CoalescingQueue, MLegoService, PendingQuery
+
+CFG = LDAConfig(n_topics=6, vocab_size=150, alpha=0.5, eta=0.05,
+                max_iters=8, e_step_iters=5, gibbs_sweeps=6)
+
+
+@pytest.fixture(scope="module")
+def train():
+    corpus, _ = make_corpus(300, CFG.vocab_size, CFG.n_topics,
+                            mean_doc_len=30, seed=3)
+    train, _ = train_test_split(corpus, test_frac=0.1, seed=1)
+    return train
+
+
+def _hi(train):
+    return float(train.attr[-1]) + 1.0
+
+
+# ---------------------------------------------------------------------------
+# CoalescingQueue
+# ---------------------------------------------------------------------------
+
+def _pending(lo=0.0, hi=10.0, tenant="t"):
+    return PendingQuery(spec=QuerySpec(sigma=Interval(lo, hi)),
+                        tenant=tenant)
+
+
+def test_queue_drains_window_batch():
+    q = CoalescingQueue(window_s=0.2, max_width=8)
+    for i in range(3):
+        q.put(_pending(lo=float(i)))
+    batch = q.drain(timeout=0.1)
+    assert len(batch) == 3, "items already queued must drain together"
+    assert q.drain(timeout=0.01) == []
+
+
+def test_queue_respects_max_width():
+    q = CoalescingQueue(window_s=0.2, max_width=2)
+    for i in range(5):
+        q.put(_pending(lo=float(i)))
+    assert len(q.drain(timeout=0.1)) == 2
+    assert len(q.drain(timeout=0.1)) == 2
+    assert len(q.drain(timeout=0.1)) == 1
+
+
+def test_queue_zero_window_is_fifo_serial():
+    q = CoalescingQueue(window_s=0.0, max_width=8)
+    q.put(_pending(lo=0.0))
+    q.put(_pending(lo=1.0))
+    first = q.drain(timeout=0.1)
+    assert [p.spec.sigma[0].lo for p in first] == [0.0, 1.0] or \
+        len(first) == 1, "window 0 takes only what is instantly available"
+
+
+def test_queue_window_collects_late_arrivals():
+    q = CoalescingQueue(window_s=0.5, max_width=8)
+    q.put(_pending(lo=0.0))
+
+    def late():
+        time.sleep(0.05)
+        q.put(_pending(lo=1.0))
+
+    t = threading.Thread(target=late)
+    t.start()
+    batch = q.drain(timeout=0.1)
+    t.join()
+    assert len(batch) == 2, "an arrival inside the window must fuse"
+
+
+def test_queue_close_rejects_put_but_drains():
+    q = CoalescingQueue(window_s=0.0)
+    q.put(_pending())
+    q.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        q.put(_pending())
+    assert len(q.drain(timeout=0.01)) == 1
+
+
+def test_queue_rejects_bad_params():
+    with pytest.raises(ValueError, match="window_s"):
+        CoalescingQueue(window_s=-1.0)
+    with pytest.raises(ValueError, match="max_width"):
+        CoalescingQueue(max_width=0)
+
+
+# ---------------------------------------------------------------------------
+# MLegoService: correctness of the async front door
+# ---------------------------------------------------------------------------
+
+def test_service_answer_matches_direct_session(train):
+    """Over identical capital the async front door answers exactly
+    what a synchronous session answers (merges are deterministic)."""
+    hi = _hi(train)
+    spec = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+
+    direct = MLegoSession(train, CFG, seed=0)
+    for i in range(3):
+        direct.train_range(i * hi / 3, (i + 1) * hi / 3)
+    want = direct.submit(spec)
+
+    with MLegoService(train, CFG, store=direct.store,
+                      window_s=0.0) as svc:
+        got = svc.submit(spec).result(timeout=60)
+    np.testing.assert_array_equal(got.beta, want.beta)
+    assert got.model_ids == want.model_ids
+
+
+def test_service_coalesces_burst_into_one_batch(train):
+    """A burst of compatible volatile specs must ride one submit_many:
+    every shared gap segment trains exactly once for the whole group."""
+    calls = []
+
+    def counting_vb(corpus, cfg, key):
+        calls.append(corpus.n_docs)
+        return get_trainer("vb")(corpus, cfg, key)
+
+    register_trainer("count_vb", counting_vb, merge="vb")
+    try:
+        hi = _hi(train)
+        with MLegoService(train, CFG, kind="count_vb", window_s=0.5,
+                          max_width=8) as svc:
+            specs = [QuerySpec(sigma=Interval(0.0, hi / 2),
+                               kind="count_vb", materialize="volatile")
+                     for _ in range(4)]
+            futs = [svc.submit(s, tenant=f"t{i}")
+                    for i, s in enumerate(specs)]
+            reps = [f.result(timeout=60) for f in futs]
+            rep = svc.report()
+        assert len(calls) == 1, \
+            "the shared gap segment must train once for the whole group"
+        for r in reps:
+            assert np.isfinite(r.beta).all()
+        assert rep.queries == 4
+        assert rep.coalesced_groups >= 1
+        assert rep.max_coalesce_width == 4
+        for t in ("t0", "t1", "t2", "t3"):
+            assert rep.tenant(t).queries == 1
+            assert rep.tenant(t).max_width == 4
+    finally:
+        from repro.api import trainers as tr
+        tr._TRAINERS.pop("count_vb", None)
+        tr._MERGES.pop("count_vb", None)
+
+
+def test_service_groups_incompatible_kinds_separately(train):
+    """vb and gs specs in one window must execute as separate groups
+    (submit_many's one-kind contract), both successfully."""
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.5, max_width=8) as svc:
+        fa = svc.submit(QuerySpec(sigma=Interval(0.0, hi / 4), kind="vb"))
+        fb = svc.submit(QuerySpec(sigma=Interval(0.0, hi / 4), kind="gs"))
+        ra, rb = fa.result(timeout=120), fb.result(timeout=120)
+    assert np.isfinite(ra.beta).all() and np.isfinite(rb.beta).all()
+
+
+def test_service_mixed_alpha_group_rides_alpha_split(train):
+    """α may differ inside a group — the session's α-split machinery
+    handles it, so the group still fuses instead of failing."""
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.5, max_width=8) as svc:
+        svc.train_range(0.0, hi)
+        futs = [svc.submit(QuerySpec(sigma=Interval(0.0, hi), alpha=a))
+                for a in (0.0, 1.0, 0.0)]
+        reps = [f.result(timeout=60) for f in futs]
+        rep = svc.report()
+    assert all(np.isfinite(r.beta).all() for r in reps)
+    assert rep.max_coalesce_width == 3
+
+
+def test_service_isolates_failing_spec(train):
+    """One empty-predicate spec must not poison its coalescing
+    neighbors: its future raises, theirs resolve."""
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.5, max_width=8) as svc:
+        svc.train_range(0.0, hi)
+        good1 = svc.submit(QuerySpec(sigma=Interval(0.0, hi)))
+        bad = svc.submit(QuerySpec(sigma=Interval(hi + 10.0, hi + 20.0)))
+        good2 = svc.submit(QuerySpec(sigma=Interval(0.0, hi / 2)))
+        assert np.isfinite(good1.result(timeout=60).beta).all()
+        assert np.isfinite(good2.result(timeout=60).beta).all()
+        with pytest.raises(ValueError, match="selects no data"):
+            bad.result(timeout=60)
+        rep = svc.report()
+    assert rep.errors == 1
+    assert rep.queries == 3
+
+
+def test_service_tenant_stats_and_queue_wait(train):
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.2, max_width=8) as svc:
+        svc.train_range(0.0, hi)
+        futs = [svc.submit(QuerySpec(sigma=Interval(0.0, hi)),
+                           tenant="ana") for _ in range(2)]
+        futs.append(svc.submit(QuerySpec(sigma=Interval(0.0, hi / 2)),
+                               tenant="bob"))
+        for f in futs:
+            f.result(timeout=60)
+        rep = svc.report()
+    assert set(rep.tenants) == {"ana", "bob"}
+    assert rep.tenant("ana").queries == 2
+    assert rep.tenant("bob").queries == 1
+    assert rep.tenant("ana").queue_wait_s >= 0.0
+    assert rep.queries == 3
+    # an unknown tenant reads as zeros, not a KeyError
+    assert rep.tenant("nobody").queries == 0
+
+
+def test_service_close_rejects_new_drains_pending(train):
+    hi = _hi(train)
+    svc = MLegoService(train, CFG, window_s=0.0)
+    svc.train_range(0.0, hi)
+    fut = svc.submit(QuerySpec(sigma=Interval(0.0, hi)))
+    svc.close()
+    assert np.isfinite(fut.result(timeout=60).beta).all(), \
+        "close() must drain already-accepted queries"
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(QuerySpec(sigma=Interval(0.0, hi)))
+    svc.close()      # idempotent
+
+
+def test_cancelled_future_does_not_kill_worker(train):
+    """A client cancelling a queued future must not strand the rest
+    of the batch (regression: set_result on a cancelled future raises
+    InvalidStateError, which used to kill the worker thread)."""
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.5, max_width=8) as svc:
+        svc.train_range(0.0, hi)
+        doomed = svc.submit(QuerySpec(sigma=Interval(0.0, hi)))
+        alive = svc.submit(QuerySpec(sigma=Interval(0.0, hi / 2)))
+        cancelled = doomed.cancel()      # races the worker; both fine
+        rep = alive.result(timeout=60)
+        assert np.isfinite(rep.beta).all(), \
+            "neighbor of a cancelled future must still resolve"
+        if cancelled:
+            assert doomed.cancelled()
+        # the worker survived: it keeps answering
+        again = svc.submit(QuerySpec(sigma=Interval(0.0, hi)))
+        assert np.isfinite(again.result(timeout=60).beta).all()
+
+
+def test_service_concurrent_submitters(train):
+    """Many client threads hammering submit concurrently: every future
+    resolves, nothing deadlocks, counts add up."""
+    hi = _hi(train)
+    results = []
+    with MLegoService(train, CFG, window_s=0.05, max_width=8) as svc:
+        svc.train_range(0.0, hi)
+
+        def client(name):
+            futs = [svc.submit(QuerySpec(sigma=Interval(0.0, hi)),
+                               tenant=name) for _ in range(3)]
+            results.extend(f.result(timeout=120) for f in futs)
+
+        threads = [threading.Thread(target=client, args=(f"c{i}",))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        rep = svc.report()
+    assert len(results) == 12
+    assert all(np.isfinite(r.beta).all() for r in results)
+    assert rep.queries == 12
+    assert sum(t.queries for t in rep.tenants.values()) == 12
+
+
+# ---------------------------------------------------------------------------
+# cross-session sharing (the acceptance criterion): a second session /
+# tenant over the shared store reuses the first one's plan search and
+# device-resident parameters
+# ---------------------------------------------------------------------------
+
+def test_second_session_reuses_plan_and_device_cache(train):
+    hi = _hi(train)
+    store, backend, cache = ModelStore(), DeviceBackend(), PlanCache()
+    a = MLegoSession(train, CFG, store=store, backend=backend,
+                     plan_cache=cache, seed=0)
+    b = MLegoSession(train, CFG, store=store, backend=backend,
+                     plan_cache=cache, seed=1)
+    for i in range(3):
+        a.train_range(i * hi / 3, (i + 1) * hi / 3)
+    spec = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+    ra = a.submit(spec)
+    rb = b.submit(spec)
+    np.testing.assert_allclose(ra.beta, rb.beta, rtol=1e-5, atol=1e-5)
+    assert not ra.plan_cached, "first search over this store is cold"
+    assert rb.plan_cached, \
+        "second session must ride the shared plan cache"
+    assert rb.cache_hits > 0 and rb.cache_misses == 0, \
+        "second session must read A's device-resident parameters"
+
+
+def test_service_tenants_share_plan_cache(train):
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.0) as svc:
+        svc.train_range(0.0, hi)
+        spec = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+        first = svc.submit(spec, tenant="ana").result(timeout=60)
+        second = svc.submit(spec, tenant="bob").result(timeout=60)
+    assert not first.plan_cached
+    assert second.plan_cached, \
+        "tenant bob must reuse tenant ana's plan search"
+
+
+def test_shared_plan_cache_requires_shared_store(train):
+    cache = PlanCache()
+    MLegoSession(train, CFG, store=ModelStore(), plan_cache=cache)
+    with pytest.raises(ValueError, match="different store"):
+        MLegoSession(train, CFG, store=ModelStore(), plan_cache=cache)
+
+
+def test_shared_calibrated_provider_requires_shared_store(train):
+    """A calibrated provider's size probe reads one store; adopting it
+    into a session over a different store would mis-size every fetch
+    via id collisions — it must refuse, like backend/plan-cache
+    sharing does."""
+    from repro.core.cost import CalibratedCostModel
+
+    provider = CalibratedCostModel()
+    store = ModelStore()
+    first = MLegoSession(train, CFG, store=store, cost=provider)
+    MLegoSession(train, CFG, store=store, cost=provider)   # same store: fine
+    with pytest.raises(ValueError, match="wired to a different store"):
+        MLegoSession(train, CFG, store=ModelStore(), cost=provider)
+    # and the wiring session can't pull the probe's store out from
+    # under the other sharers either
+    with pytest.raises(ValueError, match="shared cost provider"):
+        first.store = ModelStore()
+
+
+def test_store_mutation_invalidates_both_sessions(train):
+    """Mutating the shared store from one session must drop the shared
+    plan cache (visible to both) exactly once per mutation."""
+    hi = _hi(train)
+    store, cache = ModelStore(), PlanCache()
+    a = MLegoSession(train, CFG, store=store, plan_cache=cache, seed=0)
+    b = MLegoSession(train, CFG, store=store, plan_cache=cache, seed=1)
+    a.train_range(0.0, hi)
+    spec = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+    assert b.submit(spec).plan_cached is False
+    assert a.submit(spec).plan_cached is True      # b's entry, a's hit
+    inv0 = cache.invalidations
+    b.train_range(0.0, hi / 2)                     # mutate from session b
+    assert cache.invalidations == inv0 + 1
+    assert len(cache) == 0
+    assert a.submit(spec).plan_cached is False, \
+        "session a must see session b's invalidation"
+
+
+def test_service_shared_calibration_log(train):
+    """Every tenant's measured timings land in one calibration log."""
+    hi = _hi(train)
+    with MLegoService(train, CFG, cost="calibrated",
+                      window_s=0.0) as svc:
+        svc.submit(QuerySpec(sigma=Interval(0.0, hi / 2)),
+                   tenant="ana").result(timeout=60)
+        svc.submit(QuerySpec(sigma=Interval(hi / 2, hi)),
+                   tenant="bob").result(timeout=60)
+        rep = svc.report()
+        assert rep.calibration_samples > 0
+        assert svc.session("ana").cost is svc.session("bob").cost, \
+            "tenants must share one provider (one log)"
+
+
+def test_service_calibration_sidecar_saved_on_close(train, tmp_path):
+    hi = _hi(train)
+    path = str(tmp_path / "calibration.json")
+    svc = MLegoService(train, CFG, cost="calibrated",
+                       calibration_path=path, window_s=0.0)
+    svc.submit(QuerySpec(sigma=Interval(0.0, hi / 2))).result(timeout=60)
+    svc.close()
+    from repro.core.cost import Calibration
+    assert Calibration.load(path) is not None, \
+        "close() must persist the shared calibration log"

@@ -1,4 +1,6 @@
-"""ModelStore persistence: atomic save/load and stale-blob pruning."""
+"""ModelStore persistence (atomic save/load, stale-blob pruning) and
+the subscribe/unsubscribe channel under two sessions sharing one
+store (the serving layer's invalidation transport)."""
 import os
 
 import numpy as np
@@ -97,3 +99,83 @@ def test_repeated_save_remove_cycles(tmp_path):
     blobs = [f for f in os.listdir(path) if f.endswith(".npz")]
     assert blobs == [f"model_{ids[3]}.npz"]
     assert len(ModelStore.load(path)) == 1
+
+
+# ---------------------------------------------------------------------------
+# subscribe/unsubscribe under two sessions sharing one store
+# ---------------------------------------------------------------------------
+
+def test_subscribe_is_idempotent():
+    """Two sessions binding one shared cache subscribe its listener
+    once — a mutation must reach it exactly once, not once per
+    session."""
+    store = ModelStore()
+    events = []
+
+    def listener(ev, mid):
+        events.append((ev, mid))
+
+    store.subscribe(listener)
+    store.subscribe(listener)            # second session, same callback
+    m = _add(store, 0.0, 100.0)
+    assert events == [("add", m.model_id)], \
+        "a double-subscribed listener fired more than once"
+
+
+def test_interleaved_mutation_reaches_both_sessions_caches():
+    """Two sessions over one store, each with its own plan cache plus
+    one shared device LRU: every mutation — from either session —
+    must invalidate all three exactly once."""
+    from repro.api import DeviceBackend, MLegoSession, QuerySpec
+    from repro.configs.lda_default import LDAConfig
+    from repro.data.corpus import make_corpus
+
+    cfg = LDAConfig(n_topics=4, vocab_size=60, max_iters=4,
+                    e_step_iters=3, gibbs_sweeps=3)
+    corpus, _ = make_corpus(80, cfg.vocab_size, cfg.n_topics,
+                            mean_doc_len=10, seed=2)
+    hi = float(corpus.attr[-1]) + 1.0
+    store = ModelStore()
+    backend = DeviceBackend()            # shared LRU
+    a = MLegoSession(corpus, cfg, store=store, backend=backend, seed=0)
+    b = MLegoSession(corpus, cfg, store=store, backend=backend, seed=1)
+
+    # store.subscribe holds exactly one listener per distinct cache:
+    # a's plan cache, b's plan cache, the shared device LRU
+    assert len(store._listeners) == 3
+
+    m = a.train_range(0.0, hi)           # mutate from session a
+    spec = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+    a.submit(spec)
+    b.submit(spec)
+    assert len(a.plan_cache) == 1 and len(b.plan_cache) == 1
+    assert m.model_id in backend.cache
+
+    inv_dev = backend.cache.invalidations
+    pa, pb = a.plan_cache.invalidations, b.plan_cache.invalidations
+    store.remove(m.model_id)             # interleaved mutation
+    assert m.model_id not in backend.cache
+    assert backend.cache.invalidations == inv_dev + 1, \
+        "shared device LRU must invalidate exactly once"
+    assert a.plan_cache.invalidations == pa + 1
+    assert b.plan_cache.invalidations == pb + 1
+    assert len(a.plan_cache) == len(b.plan_cache) == 0
+
+    # swapping the store under the *shared* backend would rebind the
+    # LRU out from under the other session — it must refuse
+    with pytest.raises(ValueError, match="adopted execution backend"):
+        a.store = ModelStore()
+    assert backend.bound_store is store, "shared LRU must stay homed"
+
+    # a session-private cache unsubscribes on swap without detaching
+    # the other session's (host sessions: no shared backend involved)
+    c = MLegoSession(corpus, cfg, store=store, seed=2)
+    d = MLegoSession(corpus, cfg, store=store, seed=3)
+    n = len(store._listeners)
+    c.store = ModelStore()
+    assert len(store._listeners) == n - 1, \
+        "only the swapping session's cache may unsubscribe"
+    m2 = b.train_range(0.0, hi / 2)      # d (and b) still hear this store
+    assert m2 is not None
+    assert len(d.plan_cache) == 0
+
