@@ -1,0 +1,251 @@
+"""Streaming-ingestion benchmark: freshness, speculation, compaction.
+
+Drives the ``repro.ingest`` subsystem through the serving surface on
+one synthetic drift trace (documents arriving in attr order past the
+base corpus) and reports the three numbers the subsystem exists for:
+
+  freshness     how stale is capital over just-arrived data?  A drift
+                trace streams batches through ``MLegoService.ingest``
+                while a client queries each newly closed slice; rows
+                report the builder's close->materialize lag and
+                whether the query was answered from ingested capital
+                (zero gap-trained tokens) — no manual store mutation
+                anywhere.
+  speculation   does workload-driven gap pre-training pay?  One hot
+                volatile sigma is replayed at a fixed cadence twice —
+                once with the speculator attached, once without — and
+                the client-observed p50 submit latency plus the
+                speculative hit rate are compared.  With speculation
+                the hot gap trains once off the query path; without,
+                every replay pays it.
+  compaction    what does staying under a byte budget cost?  Fine
+                slices are compacted into coarse segments mid-stream;
+                rows compare store bytes against the budget and the
+                post-compaction beta over the compacted range against
+                the pre-compaction one (the merge families are exact
+                natural-parameter additions, so the delta is float
+                noise — the merge-quality tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import bench_cfg
+from repro.api import Interval, QuerySpec
+from repro.core.lda import greedy_topic_overlap
+from repro.data.corpus import make_corpus
+from repro.ingest import CompactionPolicy, Compactor
+from repro.serve import MLegoService
+
+
+def _percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(int(round(p / 100.0 * (len(xs) - 1))), len(xs) - 1)
+    return xs[i]
+
+
+def _world(n_docs: int, cfg, *, base_hi: float, seed: int = 0):
+    corpus, _ = make_corpus(n_docs, cfg.vocab_size, cfg.n_topics,
+                            mean_doc_len=40, attr_max=base_hi, seed=seed)
+    return corpus
+
+
+def _batch(n_docs: int, cfg, *, lo: float, width: float, seed: int):
+    c = _world(n_docs, cfg, base_hi=width, seed=seed)
+    return dataclasses.replace(c, attr=c.attr + lo)
+
+
+# ---------------------------------------------------------------------------
+# freshness under concurrent ingest
+# ---------------------------------------------------------------------------
+
+def run_freshness(n_docs: int = 800, *, quick: bool = False,
+                  n_batches: int = 4, seed: int = 0) -> Dict:
+    """Stream ``n_batches`` drift batches; query each closed slice as
+    soon as it is built.  ``fresh_answered`` counts queries answered
+    purely from ingested capital (acceptance: every one, with zero
+    manual store mutation)."""
+    cfg = bench_cfg(quick)
+    base_hi, width = 100.0, 25.0
+    svc = MLegoService(_world(n_docs, cfg, base_hi=base_hi, seed=seed),
+                       cfg, window_s=0.0, seed=seed)
+    try:
+        pipe = svc.attach_ingest(slice_width=width,
+                                 compaction=CompactionPolicy(
+                                     max_bytes=64 * cfg.n_topics
+                                     * cfg.vocab_size * 4))
+        rows = []
+        per_batch = max(n_docs // (2 * n_batches), 40)
+
+        def probe(b: int, lo: float, built_s: float) -> None:
+            t1 = time.perf_counter()
+            rep = svc.submit(QuerySpec(sigma=Interval(lo, lo + width),
+                                       materialize="volatile")
+                             ).result(timeout=300)
+            rows.append({
+                "batch": b, "slice_lo": lo, "slice_hi": lo + width,
+                "ingest_to_built_s": built_s,
+                "query_s": time.perf_counter() - t1,
+                "fresh": rep.n_trained_tokens == 0,
+                "n_reused": rep.n_reused,
+            })
+
+        # batch b's arrival closes slice b-1 (append-only: a slice only
+        # closes once the frontier passes its upper bound), so each
+        # round queries the slice the newest batch just sealed
+        for b in range(n_batches):
+            t0 = time.perf_counter()
+            svc.ingest(_batch(per_batch, cfg, lo=base_hi + b * width,
+                              width=width, seed=seed + 1 + b))
+            pipe.flush(timeout=120.0)
+            if b > 0:
+                probe(b - 1, base_hi + (b - 1) * width,
+                      time.perf_counter() - t0)
+        # closing builds the final (partial) slice
+        t0 = time.perf_counter()
+        pipe.close()
+        probe(n_batches - 1, base_hi + (n_batches - 1) * width,
+              time.perf_counter() - t0)
+        ir = svc.report().ingest
+        return {
+            "rows": rows,
+            "fresh_answered": sum(r["fresh"] for r in rows),
+            "queries": len(rows),
+            "slices_built": ir.slices_built,
+            "freshness_lag_s_mean": ir.freshness_lag_s_mean,
+            "freshness_lag_s_max": ir.freshness_lag_s_max,
+            "compactions": ir.compactions,
+            "store_bytes": ir.store_bytes,
+        }
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# speculation A/B
+# ---------------------------------------------------------------------------
+
+def _hot_trace(svc: MLegoService, sigma: Interval, *, rounds: int,
+               cadence_s: float) -> List[float]:
+    """Replay one hot volatile sigma at a fixed cadence; returns
+    client-observed submit latencies."""
+    spec = QuerySpec(sigma=sigma, materialize="volatile")
+    lats = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        svc.submit(spec).result(timeout=300)
+        lats.append(time.perf_counter() - t0)
+        dt = cadence_s - (time.perf_counter() - t0)
+        if dt > 0:
+            time.sleep(dt)
+    return lats
+
+
+def run_speculation(n_docs: int = 800, *, quick: bool = False,
+                    rounds: int = 6, cadence_s: float = 0.25,
+                    seed: int = 0) -> Dict:
+    """The same hot-sigma trace with and without the speculator.
+
+    ``margin=0`` keeps the payoff gate open (the gate itself is
+    calibration-dependent; its unit semantics are tested in tier-1),
+    so the A/B isolates what pre-training is worth when it fires."""
+    cfg = bench_cfg(quick)
+    base_hi = 100.0
+    sigma = Interval(0.0, base_hi / 2)
+    out = {}
+    for label, speculate in (("off", False), ("on", True)):
+        svc = MLegoService(_world(n_docs, cfg, base_hi=base_hi, seed=seed),
+                           cfg, window_s=0.0, seed=seed)
+        try:
+            if speculate:
+                svc.attach_speculator(window_s=60.0, min_count=2,
+                                      margin=0.0, poll_s=0.02)
+            lats = _hot_trace(svc, sigma, rounds=rounds,
+                              cadence_s=cadence_s)
+            rep = svc.report()
+            out[label] = {
+                "rounds": rounds,
+                "p50_s": _percentile(lats, 50),
+                "p95_s": _percentile(lats, 95),
+                # warm-up pays the first gap train in both modes; the
+                # steady state is where speculation shows
+                "steady_p50_s": _percentile(lats[1:], 50),
+                "hit_rate": rep.speculation.hit_rate
+                if rep.speculation else 0.0,
+                "speculated_segments": rep.speculation.trained
+                if rep.speculation else 0,
+            }
+        finally:
+            svc.close()
+    out["steady_speedup"] = (out["off"]["steady_p50_s"]
+                             / max(out["on"]["steady_p50_s"], 1e-9))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# compaction quality/budget
+# ---------------------------------------------------------------------------
+
+def run_compaction(n_docs: int = 800, *, quick: bool = False,
+                   seed: int = 0) -> Dict:
+    """Stream fine slices past a tight budget; compare beta over the
+    compacted range before vs after the store swapped fines for a
+    coarse segment."""
+    cfg = bench_cfg(quick)
+    base_hi, width = 100.0, 12.5
+    per_model = cfg.n_topics * cfg.vocab_size * 4
+    budget = 2 * per_model
+    svc = MLegoService(_world(n_docs, cfg, base_hi=base_hi, seed=seed),
+                       cfg, window_s=0.0, seed=seed)
+    try:
+        probe = QuerySpec(sigma=Interval(base_hi, base_hi + 4 * width),
+                          materialize="volatile")
+        pipe = svc.attach_ingest(slice_width=width)
+        # fines first, no compactor: the pre-compaction reference.
+        # close() seals the trailing slice so all four materialize.
+        svc.ingest(_batch(n_docs // 2, cfg, lo=base_hi, width=4 * width,
+                          seed=seed + 1))
+        pipe.close()
+        before = svc.submit(probe).result(timeout=300)
+        bytes_before = svc.store.nbytes()
+
+        comp = Compactor(svc.store, cfg,
+                         CompactionPolicy(max_bytes=budget, merge_width=4,
+                                          min_retained=0))
+        rep = comp.run()
+        after = svc.submit(probe).result(timeout=300)
+        delta = float(np.max(np.abs(after.beta - before.beta)))
+        return {
+            "budget_bytes": budget,
+            "bytes_before": bytes_before,
+            "bytes_after": svc.store.nbytes(),
+            "under_budget": svc.store.nbytes() <= budget,
+            "compacted_groups": len(rep.compacted),
+            "evicted": len(rep.evicted),
+            "parts_before": before.n_reused,
+            "parts_after": after.n_reused,
+            "beta_max_abs_delta": delta,
+            "topic_overlap": float(greedy_topic_overlap(before.beta,
+                                                        after.beta)),
+        }
+    finally:
+        svc.close()
+
+
+def run(n_docs: int = 800, *, quick: bool = False) -> Dict:
+    return {
+        "freshness": run_freshness(n_docs, quick=quick),
+        "speculation": run_speculation(n_docs, quick=quick),
+        "compaction": run_compaction(n_docs, quick=quick),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(quick=True), indent=1))

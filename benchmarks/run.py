@@ -14,6 +14,9 @@
                                  cache reuse
   gibbs_gap           (ours)     host exact CGS scan vs doc-blocked
                                  device sweep (latency + quality delta)
+  ingest              (ours)     streaming ingestion: freshness lag,
+                                 speculative pre-training A/B (p50 +
+                                 hit rate), compaction budget/quality
   kernels             (ours)     Pallas kernel parity timings
   roofline            (ours)     table from dry-run artifacts, if present
 
@@ -208,6 +211,38 @@ def main() -> None:
                   f"{r['lpp_blocked']:.4f},{r['lpp_delta']:.4f},"
                   f"{r['top_word_overlap']:.3f}")
         out["gibbs_gap"] = {"rows": gg_rows}
+
+    if want("ingest"):
+        _section("ingest (streaming freshness / speculation / compaction)")
+        from benchmarks import ingest_bench
+        ib = ingest_bench.run(n_docs=400 if args.quick else 800,
+                              quick=args.quick)
+        fr = ib["freshness"]
+        print("batch,slice_lo,slice_hi,ingest_to_built_s,query_s,fresh,"
+              "n_reused")
+        for r in fr["rows"]:
+            print(f"{r['batch']},{r['slice_lo']:.1f},{r['slice_hi']:.1f},"
+                  f"{r['ingest_to_built_s']:.4f},{r['query_s']:.4f},"
+                  f"{r['fresh']},{r['n_reused']}")
+        print(f"# fresh-answered {fr['fresh_answered']}/{fr['queries']}, "
+              f"builder lag mean {fr['freshness_lag_s_mean']:.3f}s "
+              f"max {fr['freshness_lag_s_max']:.3f}s")
+        sp = ib["speculation"]
+        print("speculation,steady_p50_s,p95_s,hit_rate,segments")
+        for label in ("off", "on"):
+            m = sp[label]
+            print(f"{label},{m['steady_p50_s']:.4f},{m['p95_s']:.4f},"
+                  f"{m['hit_rate']:.2f},{m['speculated_segments']}")
+        print(f"# steady-state hot-sigma speedup "
+              f"{sp['steady_speedup']:.2f}x")
+        cp = ib["compaction"]
+        print(f"# compaction: {cp['bytes_before']} -> {cp['bytes_after']} "
+              f"bytes (budget {cp['budget_bytes']}, under="
+              f"{cp['under_budget']}), parts {cp['parts_before']} -> "
+              f"{cp['parts_after']}, beta max|delta| "
+              f"{cp['beta_max_abs_delta']:.2e}, topic overlap "
+              f"{cp['topic_overlap']:.3f}")
+        out["ingest"] = ib
 
     if want("kernels"):
         _section("kernels (interpret-mode parity timings)")

@@ -17,6 +17,7 @@ from repro.api.backend import (
     HostBackend,
     make_backend,
 )
+from repro.api.executor import StalePlanError
 from repro.api.planner import PlanCache, Planner
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.session import (
@@ -72,6 +73,7 @@ __all__ = [
     "PERSIST",
     "QueryReport",
     "QuerySpec",
+    "StalePlanError",
     "VOLATILE",
     "available_trainers",
     "get_trainer",

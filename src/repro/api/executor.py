@@ -45,6 +45,14 @@ from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
 
 
+class StalePlanError(KeyError):
+    """A plan's fetched model vanished from the store between planning
+    and execution — background compaction/eviction (``repro.ingest``)
+    removed it mid-query.  The store mutation already invalidated the
+    plan cache, so a re-plan over the current model set succeeds;
+    ``MLegoSession.submit`` retries once on this."""
+
+
 def _resolves_to(tag: str, kind: str) -> bool:
     """Store tags may be aliases ("gibbs") or foreign kinds entirely."""
     try:
@@ -101,7 +109,8 @@ class Executor:
 
     def train_gap(self, lo: float, hi: float, kind: str,
                   *, persist: bool = True,
-                  backend: Optional[ExecutionBackend] = None
+                  backend: Optional[ExecutionBackend] = None,
+                  next_key: Optional[Callable[[], object]] = None
                   ) -> Optional[MaterializedModel]:
         """Train one fresh model on [lo, hi); None if the range is empty.
 
@@ -112,6 +121,12 @@ class Executor:
         are about to be merged with.  (The trained model still carries
         only its *own* token counts — the prior shapes the conditional,
         it is never added to ΔN_kv — so merges don't double count.)
+
+        ``next_key`` overrides the executor's key supplier for this one
+        training call — the serving layer passes the *owning tenant's*
+        stream when it trains shared segments of a coalesced group, so
+        a tenant's results don't depend on which neighbors it fused
+        with.
         """
         d0, d1 = self.corpus.doc_slice(lo, hi)
         if d1 <= d0:
@@ -125,7 +140,8 @@ class Executor:
             prior = self._gs_prior(kind)
             if prior is not None:
                 kwargs["global_nkv"] = prior
-        theta = trainer(sub, self.cfg, self._next_key(), **kwargs)
+        theta = trainer(sub, self.cfg, (next_key or self._next_key)(),
+                        **kwargs)
         if persist:
             m = self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
                                kind, theta)
@@ -188,8 +204,13 @@ class Executor:
         ``train_obs`` one measured ``(tokens, seconds)`` sample per
         trained gap (the calibrated cost provider's κ input).
         """
-        parts: List[MaterializedModel] = [
-            self.store.get(f.model_id) for f in plan.fetches]
+        try:
+            parts: List[MaterializedModel] = [
+                self.store.get(f.model_id) for f in plan.fetches]
+        except KeyError as exc:
+            raise StalePlanError(
+                f"planned model {exc.args[0]!r} was removed from the "
+                f"store (background compaction/eviction?)") from exc
         fresh: List[MaterializedModel] = []
         n_tok = 0
         obs: List[Tuple[int, float]] = []

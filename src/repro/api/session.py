@@ -39,12 +39,12 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import List, Optional, Sequence, Union
+from typing import Callable, List, Optional, Sequence, Union
 
 import jax
 
 from repro.api.backend import DeviceBackend, ExecutionBackend, make_backend
-from repro.api.executor import Executor
+from repro.api.executor import Executor, StalePlanError
 from repro.api.planner import PlanCache, Planner
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.spec import QuerySpec
@@ -125,6 +125,11 @@ class MLegoSession:
         self.kind = resolve_kind(kind)       # default backend for train_range
         self._key = jax.random.PRNGKey(seed)
         self._key_lock = threading.Lock()
+        # bumped by extend_corpus: plans priced under an older corpus
+        # snapshot counted fewer tokens per range, so cached entries
+        # keyed on an older epoch are never served (capital aging —
+        # the store fingerprint alone can't see corpus growth)
+        self._data_epoch = 0
         self.planner = Planner(self.index, self.cost)
         self.executor = Executor(corpus, cfg, self.store, self._next_key)
         self.backend = self._register_backend(
@@ -272,6 +277,39 @@ class MLegoSession:
             self._key, k = jax.random.split(self._key)
             return k
 
+    def extend_corpus(self, corpus: Corpus) -> None:
+        """Install a grown corpus snapshot (streaming ingestion).
+
+        Growth is append-only: the new snapshot must contain at least
+        the old one's documents (the ingest pipeline only ever
+        concatenates).  The range index, planner and executor are
+        re-homed on the new snapshot, and the data epoch bumps so
+        cached plans priced under the old token counts are dropped —
+        a query over a freshly ingested range must re-plan, not ride a
+        cached plan that believed the range was empty.
+        """
+        if corpus.vocab_size != self.corpus.vocab_size:
+            raise ValueError(
+                f"extend_corpus: vocab mismatch ({corpus.vocab_size} vs "
+                f"{self.corpus.vocab_size})")
+        if corpus.n_docs < self.corpus.n_docs:
+            raise ValueError(
+                "extend_corpus is append-only: the new snapshot has "
+                f"{corpus.n_docs} docs, fewer than the current "
+                f"{self.corpus.n_docs}")
+        index = DataIndex(corpus)
+        self.corpus = corpus
+        self.index = index
+        self.planner.index = index
+        self.executor.corpus = corpus
+        self._data_epoch += 1
+
+    def adopt_backend(self, inst: ExecutionBackend) -> ExecutionBackend:
+        """Register a shared execution backend instance under its name,
+        so specs naming that backend route to it instead of a fresh
+        private instance — the serving layer's per-name routing."""
+        return self._register_backend(inst, adopted=True)
+
     def _register_backend(self, inst: ExecutionBackend,
                           adopted: bool = False) -> ExecutionBackend:
         bound = inst.bound_store
@@ -337,7 +375,7 @@ class MLegoSession:
         epoch = self._cache_epoch(backend)
         key = (sigma.lo, sigma.hi, spec.alpha, kind, spec.method,
                backend.name, fingerprint, self.cost,
-               getattr(self.cost, "version", 0), epoch)
+               getattr(self.cost, "version", 0), epoch, self._data_epoch)
         cached = self._plan_cache.get(key)
         if cached is not None:
             return cached, True
@@ -391,22 +429,36 @@ class MLegoSession:
         fingerprint = PlanCache.fingerprint(models)
         snap_train = backend.stats
         for sigma in spec.sigma:
-            t0 = time.perf_counter()
-            res, was_cached = self._plan_component(
-                models, fingerprint, sigma, spec, kind, backend)
-            search_s += time.perf_counter() - t0
+            for attempt in range(2):
+                t0 = time.perf_counter()
+                res, was_cached = self._plan_component(
+                    models, fingerprint, sigma, spec, kind, backend)
+                search_s += time.perf_counter() - t0
+
+                # training below may mutate the store (persisted gap
+                # models), dropping earlier cache entries; this
+                # component's entry is keyed on the snapshot
+                # fingerprint its search actually saw, so it can never
+                # be served for a different model set
+                t1 = time.perf_counter()
+                try:
+                    c_parts, c_fresh, c_tok, obs = self.executor.gather(
+                        res.ir, kind, persist=spec.persist, backend=backend)
+                except StalePlanError:
+                    # background compaction/eviction removed a planned
+                    # model between search and fetch; the mutation
+                    # already cleared the plan cache, so one re-plan
+                    # over the current snapshot suffices
+                    train_s += time.perf_counter() - t1
+                    if attempt:
+                        raise
+                    models = self._models(kind)
+                    fingerprint = PlanCache.fingerprint(models)
+                    continue
+                train_s += time.perf_counter() - t1
+                break
             all_cached &= was_cached
             plans.append(res)
-
-            # training below may mutate the store (persisted gap
-            # models), dropping earlier cache entries; this component's
-            # entry is keyed on the snapshot fingerprint its search
-            # actually saw, so it can never be served for a different
-            # model set
-            t1 = time.perf_counter()
-            c_parts, c_fresh, c_tok, obs = self.executor.gather(
-                res.ir, kind, persist=spec.persist, backend=backend)
-            train_s += time.perf_counter() - t1
             parts.extend(c_parts)
             fresh.extend(c_fresh)
             n_tok += c_tok
@@ -438,7 +490,10 @@ class MLegoSession:
                            plan_cached=all_cached)
 
     # ------------------------------------------------------------------
-    def submit_many(self, specs: Sequence[QuerySpec]) -> BatchReport:
+    def submit_many(self, specs: Sequence[QuerySpec], *,
+                    next_keys: Optional[
+                        Sequence[Callable[[], object]]] = None
+                    ) -> BatchReport:
         """§V.C batch path: Alg. 4 plan combination, shared gap training.
 
         All specs must use one trainer kind (shared segments are merged
@@ -464,13 +519,23 @@ class MLegoSession:
         before narrow queries prune against it — but reports stay
         parallel to the submitted spec order.  ``spec.method`` is not
         consulted (Alg. 4 supersedes per-query search).
+
+        ``next_keys`` (parallel to ``specs``) supplies a per-query RNG
+        key callable; each shared gap segment is trained with the key
+        stream of the first (lowest-index) query covering it.  The
+        serving layer passes tenant streams here so a coalesced group
+        reproduces per-tenant; ``None`` keeps this session's stream.
         """
         specs = list(specs)
+        if next_keys is not None and len(next_keys) != len(specs):
+            raise ValueError(
+                f"next_keys must parallel specs: got {len(next_keys)} "
+                f"keys for {len(specs)} specs")
         if not specs:
             return BatchReport([], self.planner.plan_batch([], []), 0.0, 0.0)
         alphas = {s.alpha for s in specs}
         if len(alphas) != 1:
-            return self._submit_many_split(specs)
+            return self._submit_many_split(specs, next_keys)
         alpha = alphas.pop()
         kinds = {s.kind or self.kind for s in specs}
         if len(kinds) != 1:
@@ -499,7 +564,7 @@ class MLegoSession:
                 tuple((s.lo, s.hi) for s in sigmas), tuple(owner),
                 alpha, kind, backend.name, PlanCache.fingerprint(models),
                 self.cost, getattr(self.cost, "version", 0),
-                self._cache_epoch(backend))
+                self._cache_epoch(backend), self._data_epoch)
         t0 = time.perf_counter()
         opt = self._plan_cache.get(bkey)
         batch_cached = opt is not None
@@ -516,13 +581,19 @@ class MLegoSession:
         snap_train = backend.stats
         t1 = time.perf_counter()
         for lo, hi, _ in _segments(gap_lists):
-            persist = any(
-                specs[owner[j]].persist
-                for j, gaps in enumerate(gap_lists)
-                if any(g.lo <= lo and hi <= g.hi for g in gaps))
+            covering = sorted({
+                owner[j] for j, gaps in enumerate(gap_lists)
+                if any(g.lo <= lo and hi <= g.hi for g in gaps)})
+            persist = any(specs[i].persist for i in covering)
+            # a shared segment is trained once, on the *first* covering
+            # query's stream — deterministic in submission order, so
+            # callers that pre-sort (the serving layer sorts by tenant)
+            # get reproducible per-tenant results
+            key_fn = next_keys[covering[0]] \
+                if next_keys is not None and covering else None
             t_gap = time.perf_counter()
             m = self.executor.train_gap(lo, hi, kind, persist=persist,
-                                        backend=backend)
+                                        backend=backend, next_key=key_fn)
             if m is not None:
                 seg_models[(lo, hi)] = m
                 self.cost.observe_train(m.n_tokens,
@@ -589,7 +660,10 @@ class MLegoSession:
                            pad_rows=d.pad_rows,
                            plan_cached=batch_cached)
 
-    def _submit_many_split(self, specs: List[QuerySpec]) -> BatchReport:
+    def _submit_many_split(self, specs: List[QuerySpec],
+                           next_keys: Optional[
+                               Sequence[Callable[[], object]]] = None
+                           ) -> BatchReport:
         """Mixed-α batch: one Alg. 4 sub-batch per α, reports stitched
         back into submission order.  Gap segments are shared *within*
         each α group only — queries under different α chose their
@@ -611,7 +685,10 @@ class MLegoSession:
         reports: List[Optional[QueryReport]] = [None] * len(specs)
         subs: List[BatchReport] = []
         for idxs in groups.values():
-            sub = self.submit_many([specs[i] for i in idxs])
+            sub = self.submit_many(
+                [specs[i] for i in idxs],
+                next_keys=[next_keys[i] for i in idxs]
+                if next_keys is not None else None)
             subs.append(sub)
             for i, rep in zip(idxs, sub.reports):
                 reports[i] = rep

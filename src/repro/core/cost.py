@@ -33,6 +33,7 @@ roughly geometrically with merge count) and can be re-fit from the
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import tempfile
@@ -157,6 +158,27 @@ class CostProvider:
         negligible and the merge list can be dropped (PSOA++)."""
         return self.c_train(min_model_tokens) / max(self.t_merge, 1e-30)
 
+    # --- speculation payoff (repro.ingest.speculate) ----------------------
+    def predict_train_seconds(self, n_tokens: float) -> float:
+        """Wall-seconds forecast for training a gap of ``n_tokens`` on
+        the backend last named via ``set_train_backend`` — ``c_train``
+        is already in raw seconds, so the forecast is the price."""
+        return self.c_train(n_tokens)
+
+    def speculation_pays(self, n_tokens: float, next_arrival_s: float,
+                         margin: float = 1.0) -> bool:
+        """Should a speculative trainer pre-train this gap?
+
+        True when the forecast training time (scaled by ``margin``, a
+        safety factor > 1 for conservative speculation) fits inside the
+        predicted time until the hot range's next query arrival — i.e.
+        the trained capital lands before the query that would repay it.
+        Zero-token gaps never pay (nothing to train)."""
+        if n_tokens <= 0:
+            return False
+        return (self.predict_train_seconds(n_tokens) * margin
+                <= max(next_arrival_s, 0.0))
+
     # --- padding (batched device launches, §V.C) --------------------------
     def padding_cost(self, pad_rows: int) -> float:
         """Cost of zero-weight padding rows in a bucketed batch launch
@@ -208,6 +230,35 @@ class CostModel(CostProvider):
 # ---------------------------------------------------------------------------
 
 _MAX_OBS = 512    # rolling window per observation kind
+
+
+@contextlib.contextmanager
+def _sidecar_lock(path: str):
+    """Advisory exclusive lock serializing sidecar read-merge-replace
+    cycles across *processes* (``<path>.lock`` + flock).  Without it a
+    concurrent writer pair — e.g. service ``close()`` racing an ingest
+    builder's shutdown save — can both read the same on-disk log and
+    the slower replace drops the faster writer's samples.  On platforms
+    without ``fcntl`` the lock degrades to best-effort (the atomic
+    replace still prevents torn files, only the union guarantee
+    weakens)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    f = open(path + ".lock", "a")
+    try:
+        try:
+            import fcntl
+            fcntl.flock(f, fcntl.LOCK_EX)
+        except ImportError:     # pragma: no cover - non-POSIX fallback
+            pass
+        yield
+    finally:
+        try:
+            import fcntl
+            fcntl.flock(f, fcntl.LOCK_UN)
+        except ImportError:     # pragma: no cover
+            pass
+        f.close()
 
 # JSON sidecar format version; unknown versions load as a cold start
 # (never crash a session over a stale sidecar).  2: device_obs/pad_obs
@@ -317,21 +368,21 @@ class Calibration:
         With ``merge`` (the default) the on-disk log is first merged in
         (dedup by observation identity), so two sessions saving to one
         shared sidecar union their logs instead of last-writer-wins
-        clobbering.  The read-merge-replace is not a transaction — a
-        truly simultaneous pair of writers can still lose the slower
-        one's *newest* samples — but no writer ever wipes another's
-        whole log."""
-        out = self
-        if merge:
-            existing = Calibration.load(path)
-            if existing is not None:
-                out = self.merged_with(existing)
-        d = os.path.dirname(os.path.abspath(path))
-        os.makedirs(d, exist_ok=True)
-        with tempfile.NamedTemporaryFile("w", dir=d, delete=False) as f:
-            json.dump(out.to_json_dict(), f, indent=1)
-            tmp = f.name
-        os.replace(tmp, path)
+        clobbering.  The whole read-merge-replace runs under an
+        advisory file lock (``<path>.lock``), making it a transaction:
+        concurrent writer pairs serialize instead of the slower one
+        dropping the faster one's samples."""
+        with _sidecar_lock(path):
+            out = self
+            if merge:
+                existing = Calibration.load(path)
+                if existing is not None:
+                    out = self.merged_with(existing)
+            d = os.path.dirname(os.path.abspath(path))
+            with tempfile.NamedTemporaryFile("w", dir=d, delete=False) as f:
+                json.dump(out.to_json_dict(), f, indent=1)
+                tmp = f.name
+            os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> Optional["Calibration"]:

@@ -2,8 +2,15 @@
 
 All four searchers solve Definition 2 (score-based plan searching):
 
-    p* = argmin_{p in P} sc(p)   s.t. sc(p) > 0,
+    p* = argmin_{p in P} sc(p)   s.t. sc(p) > 0 or p reuses models,
     sc  = alpha * l_p + (1 - alpha) * c_t                       (Eq. 2)
+
+(Def. 2's sc > 0 constraint exists to bar the *empty* plan — scratch
+training has perfect quality, so it scores 0 whenever alpha = 1 and
+would trivially win.  A nonempty zero-score plan is the opposite
+extreme and genuinely optimal: a single stored model exactly covering
+sigma has no merges, no training, and no fetch cost — the direct-hit
+plan every alpha must prefer over retraining.)
 
   * ``nai_search``   — generate-and-rank: enumerate every candidate plan
     (all antichains of usable models — exponential), score all, rank.
@@ -88,7 +95,7 @@ def nai_search(models: Sequence, query: Interval, index,
     for p in plans:
         sc = _exact_score(p, query, index, cost, alpha, scratch)
         n_scored += 1
-        if sc > 0.0 and sc < best_sc:
+        if (sc > 0.0 or p) and sc < best_sc:
             best, best_sc = p, sc
     return SearchResult(best, best_sc, alpha, n_scored=n_scored,
                         n_generated=len(plans),
@@ -287,7 +294,8 @@ def psoa_search(models: Sequence, query: Interval, index,
     scored: Dict[Tuple, float] = {}
     best_plan: Tuple = ()
     best_sc = float("inf")
-    # the empty plan (train everything) is always a candidate
+    # the empty plan (train everything) is always a candidate — unless
+    # it scores 0 (the alpha = 1 degeneracy Def. 2's constraint bars)
     sc0 = _exact_score((), query, index, cost, alpha, scratch)
     if sc0 > 0.0:
         best_plan, best_sc = (), sc0
@@ -300,7 +308,7 @@ def psoa_search(models: Sequence, query: Interval, index,
             return
         sc = _exact_score(p, query, index, cost, alpha, scratch)
         scored[k] = sc
-        if sc > 0.0 and sc < best_sc:
+        if (sc > 0.0 or p) and sc < best_sc:
             best_plan, best_sc = p, sc
 
     bfs_done = train_done = False

@@ -4,6 +4,18 @@ Holds ⟨o, N, Θ⟩ tuples, answers "which models are usable for range Q",
 persists atomically (npz blobs + json manifest with content hashes) and
 participates in the checkpoint manager so a restarted cluster resumes
 with its full reuse capital.
+
+The store is also the lifecycle spine of the streaming-ingestion path
+(``repro.ingest``): slice models *append* through ``add``, compaction
+*swaps* a run of fine slices for one coarse segment through
+``replace`` (atomic under the store lock; listeners see the coarse
+"add" before the fine "remove"s, so there is no event ordering in
+which the range appears uncovered), and cold capital *evicts* through
+``remove``.  All three flow through the one ``subscribe`` channel, so
+plan caches and device LRUs invalidate identically for manual saves
+and background ingestion.  ``get`` stamps a monotone access clock per
+model — ``last_access`` is what the compactor's eviction pass ranks
+cold capital by.
 """
 from __future__ import annotations
 
@@ -33,6 +45,11 @@ class ModelStore:
         self._next_id = 0
         self._lock = threading.Lock()
         self._listeners: List[StoreListener] = []
+        # monotone access stamps (model_id -> tick); approximate under
+        # concurrency — races only reorder near-simultaneous reads,
+        # which is irrelevant for a cold-vs-hot eviction ranking
+        self._access: Dict[int, int] = {}
+        self._access_clock = 0
 
     # --- change notification -------------------------------------------
     # Execution backends cache device-resident copies of Θ keyed by
@@ -71,11 +88,50 @@ class ModelStore:
     def remove(self, model_id: int) -> None:
         with self._lock:
             existed = self._models.pop(model_id, None) is not None
+            self._access.pop(model_id, None)
         if existed:
             self._notify("remove", model_id)
 
+    def replace(self, old_ids: Sequence[int], o: Interval, n_docs: int,
+                n_tokens: int, kind: str,
+                theta: Dict[str, np.ndarray]) -> MaterializedModel:
+        """Compaction primitive: atomically swap ``old_ids`` for one
+        coarser model covering their union.
+
+        The insert and the removals commit under one lock acquisition,
+        so no concurrent reader ever sees a store missing both the fine
+        slices and the coarse segment.  Listeners are notified outside
+        the lock, coarse "add" first, then one "remove" per fine slice
+        — the same channel (and the same net effect on plan caches and
+        device LRUs) as a manual remove-and-retrain.
+        """
+        old_ids = list(old_ids)
+        with self._lock:
+            missing = [i for i in old_ids if i not in self._models]
+            if missing:
+                raise KeyError(f"replace: unknown model ids {missing}")
+            mid = self._next_id
+            self._next_id += 1
+            m = MaterializedModel(mid, o, n_docs, n_tokens, kind, theta)
+            self._models[mid] = m
+            for i in old_ids:
+                self._models.pop(i)
+                self._access.pop(i, None)
+        self._notify("add", mid)
+        for i in old_ids:
+            self._notify("remove", i)
+        return m
+
     def get(self, model_id: int) -> MaterializedModel:
-        return self._models[model_id]
+        m = self._models[model_id]
+        self._access_clock += 1
+        self._access[model_id] = self._access_clock
+        return m
+
+    def last_access(self, model_id: int) -> int:
+        """Access-clock stamp of the last ``get`` (0 = never fetched) —
+        the compactor's cold-capital eviction ranks by this."""
+        return self._access.get(model_id, 0)
 
     def __len__(self) -> int:
         return len(self._models)

@@ -128,6 +128,37 @@ def make_corpus(
     return corpus, beta
 
 
+def concat_corpora(a: Corpus, b: Corpus) -> Corpus:
+    """Append corpus ``b``'s documents after ``a``'s (streaming growth).
+
+    The result is a valid ``Corpus`` only if the combined ``attr``
+    stays sorted, i.e. ``b`` is *newer* than ``a`` (append-only
+    ingestion) — enforced here because every range structure
+    (``doc_slice``, ``DataIndex``) depends on attr order.
+    """
+    if a.vocab_size != b.vocab_size:
+        raise ValueError(f"vocab mismatch: {a.vocab_size} vs {b.vocab_size}")
+    if b.n_docs == 0:
+        return a
+    if a.n_docs == 0:
+        return b
+    if float(b.attr[0]) < float(a.attr[-1]):
+        raise ValueError(
+            f"append-only: incoming batch starts at attr {b.attr[0]} "
+            f"below the existing frontier {a.attr[-1]}")
+    offsets = np.zeros(a.n_docs + b.n_docs + 1, np.int64)
+    offsets[: a.n_docs + 1] = a.doc_offsets
+    offsets[a.n_docs + 1 :] = b.doc_offsets[1:] + a.n_tokens
+    return Corpus(
+        tokens=np.concatenate([a.tokens, b.tokens]),
+        doc_ids=np.concatenate([a.doc_ids,
+                                b.doc_ids + np.int32(a.n_docs)]),
+        doc_offsets=offsets,
+        attr=np.concatenate([a.attr, b.attr]),
+        vocab_size=a.vocab_size,
+    )
+
+
 def doc_term_matrix(corpus: Corpus, d0: int = 0, d1: Optional[int] = None) -> np.ndarray:
     """Dense (D, V) float32 doc-term count matrix for docs [d0, d1)."""
     d1 = corpus.n_docs if d1 is None else d1

@@ -10,18 +10,29 @@
 One ``ModelStore``, one execution backend (one device model LRU), one
 cross-session ``PlanCache``, one calibration log — shared by every
 tenant; concurrent specs coalesce into Alg. 4 batches inside a
-configurable time/size window.  See ``repro.api`` README's "Serving
-layer" section.
+configurable time/size window.  ``attach_ingest``/``attach_speculator``
+add streaming ingestion and workload-driven gap pre-training
+(``repro.ingest``).  See ``repro.api`` README's "Serving layer" and
+"Streaming ingestion & speculation" sections.
 """
 from repro.serve.queue import CoalescingQueue, PendingQuery
-from repro.serve.reports import ServiceReport, TenantStats
+from repro.serve.reports import (
+    IngestReport,
+    QueryLogEntry,
+    ServiceReport,
+    SpeculationReport,
+    TenantStats,
+)
 from repro.serve.service import DEFAULT_TENANT, MLegoService
 
 __all__ = [
     "CoalescingQueue",
     "DEFAULT_TENANT",
+    "IngestReport",
     "MLegoService",
     "PendingQuery",
+    "QueryLogEntry",
     "ServiceReport",
+    "SpeculationReport",
     "TenantStats",
 ]

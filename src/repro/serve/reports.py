@@ -3,8 +3,11 @@
 ``QueryReport``/``BatchReport`` answer *one* query or batch;
 ``ServiceReport`` answers "how is the service doing": per-tenant queue
 waits and coalesce widths (``TenantStats``), shared-cache traffic (the
-cross-session plan cache and the device model LRU), and the coalescing
-queue's fusion efficiency.  Snapshots are plain frozen dataclasses —
+cross-session plan cache and the device model LRU), the coalescing
+queue's fusion efficiency, and — when streaming ingestion and/or
+speculation are attached — the pipeline's freshness/compaction
+counters (``IngestReport``) and the speculative trainer's hit ledger
+(``SpeculationReport``).  Snapshots are plain frozen dataclasses —
 ``MLegoService.report()`` reads the tenant/group counters under the
 service stats lock (mutually consistent), while the shared-structure
 counters (plan cache, backend stats, calibration size) are
@@ -14,9 +17,11 @@ but a query completing mid-snapshot can land between them.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.api.backend import BackendStats
+from repro.ingest.pipeline import IngestReport
+from repro.ingest.speculate import QueryLogEntry, SpeculationReport
 
 
 @dataclass(frozen=True)
@@ -89,6 +94,10 @@ class ServiceReport:
     plan_cache_entries: int = 0
     backend: BackendStats = field(default_factory=BackendStats)
     calibration_samples: int = 0
+    store_bytes: int = 0
+    # None unless the corresponding subsystem is attached
+    ingest: Optional[IngestReport] = None
+    speculation: Optional[SpeculationReport] = None
 
     @property
     def mean_coalesce_width(self) -> float:
@@ -107,4 +116,5 @@ class ServiceReport:
         return self.tenants.get(name, TenantStats(tenant=name))
 
 
-__all__ = ["ServiceReport", "TenantStats"]
+__all__ = ["IngestReport", "QueryLogEntry", "ServiceReport",
+           "SpeculationReport", "TenantStats"]

@@ -29,14 +29,26 @@ plan tenant A already searched reports ``plan_cached=True``, and its
 merge reads A's device-resident model parameters as cache hits.
 Per-tenant queue waits and coalesce widths land on ``ServiceReport``
 (``svc.report()``).
+
+The service is also the host for the streaming subsystems
+(``repro.ingest``): ``attach_ingest`` wires an ``IngestPipeline`` to
+the shared store — grown corpus snapshots re-home every tenant session
+*before* slice models land, so a query over freshly ingested documents
+is answered with no manual store mutation — and ``attach_speculator``
+starts a ``SpeculativeTrainer`` over the service's query log (every
+answered query is logged with its σ/kind/α and arrival time).  Both
+are drained and joined by ``close()``.  Answered plans are checked
+against the speculator's trained set, so speculative hits surface on
+the report.
 """
 from __future__ import annotations
 
 import threading
 import time
 import zlib
+from collections import deque
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 from repro.api.backend import ExecutionBackend, make_backend
 from repro.api.planner import PlanCache
@@ -48,6 +60,9 @@ from repro.core.cost import CostProvider
 from repro.core.lda import MaterializedModel
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
+from repro.ingest.compaction import CompactionPolicy, Compactor
+from repro.ingest.pipeline import IngestPipeline
+from repro.ingest.speculate import QueryLogEntry, SpeculativeTrainer
 from repro.serve.queue import CoalescingQueue, PendingQuery
 from repro.serve.reports import ServiceReport, TenantStats
 
@@ -99,7 +114,8 @@ class MLegoService:
                  calibration_path: Optional[str] = None,
                  window_s: float = 0.005, max_width: int = 16,
                  plan_cache_entries: int = 1024,
-                 seed: int = 0, poll_s: float = 0.02):
+                 seed: int = 0, poll_s: float = 0.02,
+                 query_log_entries: int = 512):
         self.corpus = corpus
         self.cfg = cfg
         self.store = store if store is not None else ModelStore()
@@ -114,6 +130,15 @@ class MLegoService:
 
         self._sessions: Dict[str, MLegoSession] = {}
         self._session_lock = threading.RLock()
+        # shared per-name backends for specs naming a non-default
+        # backend — one device LRU per backend *name*, not per tenant
+        self._extra_backends: Dict[str, ExecutionBackend] = {}
+
+        # rolling per-tenant query log — the speculator's ore
+        self._query_log: Deque[QueryLogEntry] = deque(
+            maxlen=query_log_entries)
+        self._ingest: Optional[IngestPipeline] = None
+        self._speculator: Optional[SpeculativeTrainer] = None
 
         self._stats_lock = threading.Lock()
         self._tenants: Dict[str, TenantStats] = {}
@@ -143,9 +168,15 @@ class MLegoService:
         return self._queue.closed
 
     def close(self) -> None:
-        """Stop accepting queries, drain everything pending, join the
+        """Stop accepting queries, stop speculation, drain the ingest
+        builder (the open partial slice is built — append-only means it
+        can never grow again), drain everything pending, join the
         worker, and (for a calibrated provider with a sidecar path)
         merge-save the shared calibration log."""
+        if self._speculator is not None:
+            self._speculator.close()
+        if self._ingest is not None:
+            self._ingest.close()
         if self._queue.closed:
             if self._worker.is_alive():
                 self._worker.join()
@@ -177,12 +208,33 @@ class MLegoService:
                     cost=self.cost, kind=self.kind,
                     seed=self._tenant_seed(tenant),
                     backend=self.backend, plan_cache=self.plan_cache)
+                for b in self._extra_backends.values():
+                    sess.adopt_backend(b)
                 self._sessions[tenant] = sess
             return sess
 
     def tenants(self) -> Tuple[str, ...]:
         with self._session_lock:
             return tuple(sorted(self._sessions))
+
+    def _shared_backend(self, name: str) -> ExecutionBackend:
+        """The service-wide backend for ``name`` — the default instance
+        when the name matches, else one shared per-name instance
+        adopted into every tenant session.  Without this, a spec naming
+        a non-default backend would silently get a *private* per-
+        session instance (one device LRU per tenant — no cross-tenant
+        reuse, invisible to the service report)."""
+        if name == self.backend.name:
+            return self.backend
+        with self._session_lock:
+            b = self._extra_backends.get(name)
+            if b is None:
+                b = make_backend(name)
+                b.bind_store(self.store)
+                self._extra_backends[name] = b
+                for sess in self._sessions.values():
+                    sess.adopt_backend(b)
+            return b
 
     # ------------------------------------------------------------------
     # front door
@@ -197,6 +249,10 @@ class MLegoService:
         if self._queue.closed:
             raise RuntimeError("service is closed")
         self.session(tenant)           # construct early: fail fast here
+        if spec.backend is not None:
+            # route named backends to the shared per-name instance
+            # before the worker executes (registers into every session)
+            self._shared_backend(spec.backend)
         item = PendingQuery(spec=spec, tenant=tenant)
         self._queue.put(item)
         return item.future
@@ -272,12 +328,19 @@ class MLegoService:
         # a group stuck behind its batch-mates' execution is still
         # waiting, and the operator should see that head-of-line time
         t0 = time.perf_counter()
-        # the executing session only contributes its RNG stream — every
-        # shared structure (store, plan cache, device LRU, calibration)
-        # is common to all tenants, so any member's session is correct
-        sess = self.session(items[0].tenant)
+        # every shared structure (store, plan cache, device LRU,
+        # calibration) is common to all tenants, so any member's
+        # session may host the execution; each shared gap segment is
+        # trained on the stream of the first tenant (in sorted order)
+        # covering it, so a tenant's results are reproducible however
+        # its queries coalesced — group membership and arrival order
+        # can't leak into another tenant's RNG stream
+        items.sort(key=lambda it: it.tenant)
+        sessions = [self.session(it.tenant) for it in items]
         try:
-            br = sess.submit_many([it.spec for it in items])
+            br = sessions[0].submit_many(
+                [it.spec for it in items],
+                next_keys=[s._next_key for s in sessions])
         except Exception:
             # isolate the offender: re-run the group query-by-query so
             # only the failing spec's future carries the error
@@ -289,7 +352,8 @@ class MLegoService:
             self._width_sum += width
             self._max_width = max(self._max_width, width)
         for it, rep in zip(items, br.reports):
-            self._record(it, t0, width, br.plan_cached)
+            self._record(it, t0, width, br.plan_cached,
+                         model_ids=rep.model_ids)
             _resolve(it.future, rep)
 
     def _execute_serial(self, items: List[PendingQuery]) -> None:
@@ -307,11 +371,13 @@ class MLegoService:
                 self._record(it, t0, 1, False, error=True)
                 _reject(it.future, exc)
             else:
-                self._record(it, t0, 1, rep.plan_cached)
+                self._record(it, t0, 1, rep.plan_cached,
+                             model_ids=rep.model_ids)
                 _resolve(it.future, rep)
 
     def _record(self, item: PendingQuery, t0: float, width: int,
-                plan_cached: bool, error: bool = False) -> None:
+                plan_cached: bool, error: bool = False,
+                model_ids: Tuple[int, ...] = ()) -> None:
         wait = max(t0 - item.enqueued_at, 0.0)
         with self._stats_lock:
             self._queries += 1
@@ -322,6 +388,83 @@ class MLegoService:
             self._tenants[item.tenant] = ts.absorb(
                 wait_s=wait, width=width, plan_cached=plan_cached,
                 error=error)
+        if not error:
+            spec = item.spec
+            self._query_log.append(QueryLogEntry(
+                tenant=item.tenant,
+                sigma=tuple((s.lo, s.hi) for s in spec.sigma),
+                kind=spec.kind or self.kind,
+                alpha=spec.alpha, backend=spec.backend,
+                t=time.monotonic()))
+            spec_trainer = self._speculator
+            if spec_trainer is not None and model_ids \
+                    and spec_trainer.trained_ids.intersection(model_ids):
+                spec_trainer.note_hit()
+
+    def query_log(self) -> Tuple[QueryLogEntry, ...]:
+        """Snapshot of the rolling answered-query log (speculator
+        input; deque appends are thread-safe, tuple() snapshots)."""
+        return tuple(self._query_log)
+
+    # ------------------------------------------------------------------
+    # streaming ingestion & speculation
+    # ------------------------------------------------------------------
+    def _install_corpus(self, corpus: Corpus) -> None:
+        """Re-home every tenant session on a grown snapshot — called by
+        the ingest pipeline *before* slice models land, so the planner
+        can never cover a range whose tokens the index doesn't count."""
+        with self._session_lock:
+            self.corpus = corpus
+            for sess in self._sessions.values():
+                sess.extend_corpus(corpus)
+
+    def attach_ingest(self, *, slice_width: float,
+                      kind: Optional[str] = None,
+                      compaction: Optional[CompactionPolicy] = None,
+                      start: Optional[float] = None) -> IngestPipeline:
+        """Wire streaming ingestion to this service (once).
+
+        Returns the ``IngestPipeline``; feed it through ``ingest`` (or
+        ``pipeline.append``).  With a ``CompactionPolicy`` the builder
+        drives compaction/eviction after every built slice, keeping
+        the managed kind's capital under the policy's byte budget.
+        """
+        if self._ingest is not None:
+            raise RuntimeError("ingest pipeline already attached")
+        if self._queue.closed:
+            raise RuntimeError("service is closed")
+        kind = resolve_kind(kind or self.kind)
+        compactor = Compactor(self.store, self.cfg, compaction,
+                              kind=kind) if compaction is not None else None
+        self._ingest = IngestPipeline(
+            self.corpus, self.store, self.cfg,
+            slice_width=slice_width, kind=kind, backend=self.backend,
+            start=start, seed=self._tenant_seed("__ingest__"),
+            on_corpus=self._install_corpus, compactor=compactor)
+        return self._ingest
+
+    def ingest(self, batch: Corpus) -> None:
+        """Append one document batch to the attached pipeline."""
+        if self._ingest is None:
+            raise RuntimeError("no ingest pipeline: call attach_ingest "
+                               "first")
+        self._ingest.append(batch)
+
+    def attach_speculator(self, *, window_s: float = 30.0,
+                          min_count: int = 2, margin: float = 1.0,
+                          poll_s: float = 0.05,
+                          start: bool = True) -> SpeculativeTrainer:
+        """Start workload-driven gap pre-training over the query log
+        (once).  ``start=False`` skips the background thread — call
+        ``scan_once`` manually (tests, benchmarks)."""
+        if self._speculator is not None:
+            raise RuntimeError("speculative trainer already attached")
+        if self._queue.closed:
+            raise RuntimeError("service is closed")
+        self._speculator = SpeculativeTrainer(
+            self, window_s=window_s, min_count=min_count, margin=margin,
+            poll_s=poll_s, start=start)
+        return self._speculator
 
     # ------------------------------------------------------------------
     # telemetry
@@ -341,7 +484,12 @@ class MLegoService:
                 plan_cache_misses=self.plan_cache.misses,
                 plan_cache_entries=len(self.plan_cache),
                 backend=self.backend.stats,
-                calibration_samples=len(cal) if cal is not None else 0)
+                calibration_samples=len(cal) if cal is not None else 0,
+                store_bytes=self.store.nbytes(),
+                ingest=self._ingest.report()
+                if self._ingest is not None else None,
+                speculation=self._speculator.report()
+                if self._speculator is not None else None)
 
 
 __all__ = ["DEFAULT_TENANT", "MLegoService"]

@@ -1,0 +1,467 @@
+"""Streaming ingestion subsystem: store lifecycle (append/compact/
+evict notification ordering, atomic replace), compaction determinism /
+quality parity / budget enforcement, the ingest pipeline end-to-end
+through a session and the serving layer, speculative gap pre-training,
+and the serve-layer satellites (shared named backends, per-tenant RNG
+in coalesced groups, calibration sidecar locking)."""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import DeviceBackend, Interval, MLegoSession, QuerySpec
+from repro.configs.lda_default import LDAConfig
+from repro.core.cost import Calibration, CostModel
+from repro.core.store import ModelStore
+from repro.data.corpus import concat_corpora, make_corpus
+from repro.ingest import (
+    CompactionPolicy,
+    Compactor,
+    IngestPipeline,
+)
+from repro.serve import MLegoService
+
+CFG = LDAConfig(n_topics=6, vocab_size=150, alpha=0.5, eta=0.05,
+                max_iters=8, e_step_iters=5, gibbs_sweeps=6)
+
+BASE_HI = 100.0      # base corpora end at this attr; streams start here
+
+
+def _corpus(n_docs=200, seed=3, attr_max=BASE_HI):
+    corpus, _ = make_corpus(n_docs, CFG.vocab_size, CFG.n_topics,
+                            mean_doc_len=30, attr_max=attr_max, seed=seed)
+    return corpus
+
+
+def _stream(n_docs=120, seed=7, lo=BASE_HI, width=50.0):
+    """A batch of *newer* documents with attr in [lo, lo + width)."""
+    c = _corpus(n_docs=n_docs, seed=seed, attr_max=width)
+    return dataclasses.replace(c, attr=c.attr + lo)
+
+
+def _slice_model(store, lo, hi, seed=None, k=None, v=None):
+    k = k if k is not None else CFG.n_topics
+    v = v if v is not None else CFG.vocab_size
+    rng = np.random.default_rng(int(seed if seed is not None else lo))
+    return store.add(Interval(lo, hi), 10, 100, "vb",
+                     {"lam": rng.random((k, v)).astype(np.float32) + 0.1})
+
+
+# ---------------------------------------------------------------------------
+# corpus growth
+# ---------------------------------------------------------------------------
+
+def test_concat_corpora_appends():
+    a, b = _corpus(n_docs=40, seed=0), _stream(n_docs=30, seed=1)
+    c = concat_corpora(a, b)
+    assert c.n_docs == a.n_docs + b.n_docs
+    assert c.n_tokens == a.n_tokens + b.n_tokens
+    assert np.all(np.diff(c.attr) >= 0), "attr order must survive concat"
+    np.testing.assert_array_equal(c.doc_offsets[: a.n_docs + 1],
+                                  a.doc_offsets)
+    # a subset straddling the seam selects docs from both halves
+    seam = c.subset(float(a.attr[-1]) - 1.0, float(b.attr[0]) + 1.0)
+    assert seam.n_docs >= 2
+    assert int(c.doc_offsets[-1]) == len(c.tokens)
+
+
+def test_concat_corpora_rejects_out_of_order():
+    a = _corpus(n_docs=40, seed=0)
+    stale = _corpus(n_docs=10, seed=1)          # attrs overlap a's range
+    with pytest.raises(ValueError, match="append-only"):
+        concat_corpora(a, stale)
+
+
+# ---------------------------------------------------------------------------
+# store lifecycle: replace + notification ordering
+# ---------------------------------------------------------------------------
+
+def test_store_replace_is_atomic_and_orders_events():
+    store = ModelStore()
+    fines = [_slice_model(store, 25.0 * i, 25.0 * (i + 1))
+             for i in range(4)]
+    events = []
+    store.subscribe(lambda ev, mid: events.append((ev, mid)))
+    coarse = store.replace([m.model_id for m in fines],
+                           Interval(0.0, 100.0), 40, 400, "vb",
+                           {"lam": fines[0].theta["lam"]})
+    # coarse "add" lands before any fine "remove" — a listener never
+    # observes the range uncovered
+    assert events[0] == ("add", coarse.model_id)
+    assert sorted(events[1:]) == sorted(
+        ("remove", m.model_id) for m in fines)
+    assert len(store) == 1
+    assert store.get(coarse.model_id).o == Interval(0.0, 100.0)
+    # unknown ids refuse atomically (store untouched)
+    with pytest.raises(KeyError):
+        store.replace([coarse.model_id, 999], Interval(0.0, 100.0),
+                      1, 1, "vb", {"lam": fines[0].theta["lam"]})
+    assert len(store) == 1
+
+
+def test_store_lifecycle_event_sequence_append_compact_evict():
+    """The full streaming lifecycle over one subscribe channel, in
+    order: appends, then a compaction swap, then an eviction."""
+    store = ModelStore()
+    events = []
+    store.subscribe(lambda ev, mid: events.append((ev, mid)))
+    fines = [_slice_model(store, 25.0 * i, 25.0 * (i + 1))
+             for i in range(2)]
+    per_model = fines[0].nbytes()
+    comp = Compactor(store, CFG, CompactionPolicy(
+        max_bytes=0, merge_width=2, min_retained=0), kind="vb")
+    rep = comp.run()
+    assert rep.compacted == (tuple(m.model_id for m in fines),)
+    assert len(rep.evicted) == 1, \
+        "budget 0 must evict the coarse segment too"
+    adds = [(ev, mid) for ev, mid in events if ev == "add"]
+    assert [e for e, _ in events[:2]] == ["add", "add"]   # appends
+    coarse_id = rep.compacted_into[0]
+    assert events[2:] == [("add", coarse_id)] \
+        + [("remove", m.model_id) for m in fines] \
+        + [("remove", coarse_id)]
+    assert len(adds) == 3
+    assert store.nbytes() == 0
+    assert per_model > 0
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_deterministic_for_fixed_slice_set():
+    def build():
+        s = ModelStore()
+        for i in range(6):
+            _slice_model(s, 25.0 * i, 25.0 * (i + 1), seed=i)
+        return s
+
+    reports = []
+    for _ in range(2):
+        store = build()
+        per = store.models()[0].nbytes()
+        comp = Compactor(store, CFG, CompactionPolicy(
+            max_bytes=3 * per, merge_width=4, min_retained=1), kind="vb")
+        reports.append(comp.run())
+    a, b = reports
+    assert a.compacted == b.compacted
+    assert a.compacted_into == b.compacted_into
+    assert a.evicted == b.evicted
+    assert a.bytes_after == b.bytes_after <= 3 * build().models()[0].nbytes()
+
+
+def test_compaction_quality_parity_through_query_path():
+    """Post-compaction queries over the compacted range must compute
+    the same β — the merge is an exact natural-parameter addition, so
+    pre-merging slices changes only float association order."""
+    corpus = _corpus()
+    store = ModelStore()
+    sess = MLegoSession(corpus, CFG, store=store, seed=0)
+    for i in range(4):
+        sess.train_range(25.0 * i, 25.0 * (i + 1))
+    spec = QuerySpec(sigma=Interval(0.0, BASE_HI), alpha=1.0)
+    before = sess.submit(spec)
+    assert before.n_reused == 4
+
+    per = store.models()[0].nbytes()
+    comp = Compactor(store, CFG, CompactionPolicy(
+        max_bytes=2 * per, merge_width=4, min_retained=0), kind="vb")
+    rep = comp.run()
+    assert len(rep.compacted) == 1 and not rep.evicted
+    after = sess.submit(spec)
+    assert after.n_reused == 1, "query now fetches the coarse segment"
+    np.testing.assert_allclose(after.beta, before.beta,
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_compaction_evicts_coldest_first():
+    store = ModelStore()
+    # non-contiguous slices: no run to merge, eviction is the only move
+    ms = [_slice_model(store, 100.0 * i, 100.0 * i + 25.0, seed=i)
+          for i in range(3)]
+    store.get(ms[0].model_id)       # ms[0] is hot; ms[1]/ms[2] cold
+    per = ms[0].nbytes()
+    comp = Compactor(store, CFG, CompactionPolicy(
+        max_bytes=per, merge_width=4, min_retained=0), kind="vb")
+    rep = comp.run()
+    assert not rep.compacted
+    assert rep.evicted == (ms[1].model_id, ms[2].model_id), \
+        "cold capital (never fetched, oldest range first) evicts first"
+    assert store.nbytes() <= per
+
+
+def test_compaction_invalidates_plan_cache_and_device_lru():
+    corpus = _corpus()
+    store = ModelStore()
+    backend = DeviceBackend()
+    sess = MLegoSession(corpus, CFG, store=store, backend=backend, seed=0)
+    fine_ids = []
+    for i in range(4):
+        m = sess.train_range(25.0 * i, 25.0 * (i + 1))
+        fine_ids.append(m.model_id)
+    sess.submit(QuerySpec(sigma=Interval(0.0, BASE_HI), alpha=1.0))
+    assert len(sess.plan_cache) > 0
+    assert all(mid in backend.cache for mid in fine_ids)
+
+    comp = Compactor(store, CFG, CompactionPolicy(
+        max_bytes=2 * store.models()[0].nbytes(), merge_width=4,
+        min_retained=0), kind="vb")
+    rep = comp.run()
+    assert len(rep.compacted) == 1
+    assert len(sess.plan_cache) == 0, \
+        "compaction must drop cached plans through the subscribe channel"
+    assert all(mid not in backend.cache for mid in fine_ids), \
+        "compacted fine slices must leave the device LRU"
+    # the next query re-plans onto the coarse segment and still answers
+    rep2 = sess.submit(QuerySpec(sigma=Interval(0.0, BASE_HI), alpha=1.0))
+    assert rep2.model_ids == rep.compacted_into
+
+
+# ---------------------------------------------------------------------------
+# ingest pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_builds_slices_and_session_answers_fresh_range():
+    corpus = _corpus()
+    store = ModelStore()
+    sess = MLegoSession(corpus, CFG, store=store, seed=0)
+    events = []
+    store.subscribe(lambda ev, mid: events.append((ev, mid)))
+
+    pipe = IngestPipeline(corpus, store, CFG, slice_width=25.0,
+                          kind="vb", on_corpus=sess.extend_corpus)
+    assert pipe.frontier == BASE_HI     # base ends on the grid
+
+    # the fresh range is unanswerable before ingest (no docs, no models)
+    with pytest.raises(ValueError, match="selects no data"):
+        sess.submit(QuerySpec(sigma=Interval(BASE_HI, BASE_HI + 25.0)))
+
+    pipe.append(_stream(width=50.0))    # attrs in [100, 150)
+    assert pipe.flush(timeout=30.0)
+    r = pipe.report()
+    assert r.batches == 1 and r.slices_built == 1, \
+        "[100,125) closed (frontier passed 125); [125,150) still open"
+    built = store.models("vb")
+    assert [(m.o.lo, m.o.hi) for m in built] == [(100.0, 125.0)]
+    assert ("add", built[0].model_id) in events
+
+    # acceptance (a): the query over the ingested slice is answered
+    # with no manual store mutation, riding the slice model
+    rep = sess.submit(QuerySpec(sigma=Interval(BASE_HI, BASE_HI + 25.0)))
+    assert rep.model_ids == (built[0].model_id,)
+    assert rep.n_trained_tokens == 0
+
+    # close() builds the open partial slice [125, 150)
+    pipe.close()
+    spans = sorted((m.o.lo, m.o.hi) for m in store.models("vb"))
+    assert spans == [(100.0, 125.0), (125.0, 150.0)]
+    assert pipe.report().freshness_lag_s_mean > 0.0
+
+
+def test_pipeline_rejects_batches_behind_frontier():
+    corpus = _corpus()
+    pipe = IngestPipeline(corpus, ModelStore(), CFG, slice_width=25.0)
+    with pytest.raises(ValueError, match="append-only"):
+        pipe.append(_corpus(n_docs=10, seed=9))   # attrs inside the base
+    pipe.append(_stream(n_docs=40, seed=8, width=30.0))
+    with pytest.raises(ValueError, match="append-only"):
+        pipe.append(_stream(n_docs=10, seed=9, width=10.0))  # behind now
+    pipe.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        pipe.append(_stream(n_docs=5, seed=10, lo=200.0))
+
+
+def test_pipeline_drives_compaction_under_budget():
+    corpus = _corpus()
+    store = ModelStore()
+    per = CFG.n_topics * CFG.vocab_size * 4
+    comp = Compactor(store, CFG, CompactionPolicy(
+        max_bytes=2 * per, merge_width=2, min_retained=1), kind="vb")
+    pipe = IngestPipeline(corpus, store, CFG, slice_width=10.0,
+                          kind="vb", compactor=comp)
+    pipe.append(_stream(n_docs=160, seed=5, width=50.0))  # 5 slices
+    pipe.close()
+    r = pipe.report()
+    assert r.slices_built == 5
+    assert r.compactions > 0
+    # acceptance (c): capital stays under the configured byte budget
+    assert store.nbytes() <= 2 * per
+    assert r.store_bytes <= 2 * per
+
+
+# ---------------------------------------------------------------------------
+# speculation
+# ---------------------------------------------------------------------------
+
+def test_speculation_payoff_predicate():
+    cost = CostModel(max_iters=8, n_topics=6)
+    t = cost.predict_train_seconds(1000.0)
+    assert cost.speculation_pays(1000.0, t * 2.0)
+    assert not cost.speculation_pays(1000.0, t * 0.5)
+    assert not cost.speculation_pays(1000.0, t * 2.0, margin=10.0)
+    assert not cost.speculation_pays(0.0, 1e9), "empty gaps never pay"
+
+
+def test_speculator_pretrains_hot_gap_and_counts_hits():
+    svc = MLegoService(_corpus(), CFG, window_s=0.0, seed=0)
+    try:
+        spec = QuerySpec(sigma=Interval(0.0, BASE_HI / 2), alpha=0.5,
+                         materialize="volatile")
+        for _ in range(2):
+            svc.submit(spec).result(timeout=60)
+        assert len(svc.store) == 0, "volatile queries leave no capital"
+
+        # margin=0 disables the payoff gate (the predicate is unit-
+        # tested above); the scan must mine the hot range and train it
+        trainer = svc.attach_speculator(min_count=2, window_s=60.0,
+                                        margin=0.0, start=False)
+        assert trainer.scan_once() >= 1
+        trained = list(trainer.trained_ids)
+        assert trained and all(
+            svc.store.get(i).o.lo >= 0.0 for i in trained)
+
+        rep = svc.submit(spec).result(timeout=60)
+        assert set(rep.model_ids) & set(trained), \
+            "the hot query must now fetch speculated capital"
+        sr = svc.report()
+        assert sr.speculation is not None
+        assert sr.speculation.trained >= 1
+        assert sr.speculation.hits >= 1
+        assert sr.speculation.hit_rate > 0.0
+    finally:
+        svc.close()
+
+
+def test_speculator_respects_payoff_gate():
+    svc = MLegoService(_corpus(), CFG, window_s=0.0, seed=0)
+    try:
+        spec = QuerySpec(sigma=Interval(0.0, BASE_HI / 2), alpha=0.5,
+                         materialize="volatile")
+        for _ in range(2):
+            svc.submit(spec).result(timeout=60)
+        trainer = svc.attach_speculator(min_count=2, window_s=60.0,
+                                        margin=1e12, start=False)
+        assert trainer.scan_once() == 0
+        assert trainer.report().skipped_payoff >= 1
+        assert len(svc.store) == 0
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# service wiring: ingestion end-to-end + satellites
+# ---------------------------------------------------------------------------
+
+def test_service_ingest_end_to_end():
+    svc = MLegoService(_corpus(), CFG, window_s=0.0, seed=0)
+    try:
+        pipe = svc.attach_ingest(slice_width=25.0)
+        svc.ingest(_stream(width=50.0))
+        assert pipe.flush(timeout=30.0)
+        fut = svc.submit(QuerySpec(sigma=Interval(BASE_HI, BASE_HI + 25.0)),
+                         tenant="ana")
+        rep = fut.result(timeout=60)
+        assert rep.n_trained_tokens == 0 and rep.model_ids
+        sr = svc.report()
+        assert sr.ingest is not None and sr.ingest.slices_built == 1
+        assert sr.store_bytes > 0
+    finally:
+        svc.close()
+    # close() built the open partial slice
+    assert svc.report().ingest.slices_built == 2
+
+
+def test_extend_corpus_bumps_data_epoch_past_stale_plans():
+    corpus = _corpus()
+    sess = MLegoSession(corpus, CFG, seed=0)
+    sess.train_range(0.0, BASE_HI)
+    spec = QuerySpec(sigma=Interval(0.0, BASE_HI + 50.0), alpha=0.5)
+    first = sess.submit(spec)
+    assert sess.submit(spec).plan_cached, "unchanged world: cached plan"
+
+    # pure corpus growth: no store mutation, so only the data epoch
+    # can drop the cached plan that believes [100, 150) is empty
+    sess.extend_corpus(concat_corpora(corpus, _stream(width=50.0)))
+    rep = sess.submit(spec)
+    assert not rep.plan_cached
+    assert rep.n_trained_tokens > 0, \
+        "the re-plan must train the freshly ingested range"
+    assert first.n_trained_tokens == 0
+
+
+def test_service_routes_named_backend_to_shared_instance():
+    svc = MLegoService(_corpus(), CFG, window_s=0.0, seed=0)
+    try:
+        spec = QuerySpec(sigma=Interval(0.0, BASE_HI / 2),
+                         backend="device")
+        svc.submit(spec, tenant="a").result(timeout=60)
+        svc.submit(spec, tenant="b").result(timeout=60)
+        ba = svc.session("a")._backends["device"]
+        bb = svc.session("b")._backends["device"]
+        assert ba is bb, "named backends must share one instance " \
+                         "(one device LRU) across tenants"
+        assert ba is svc._shared_backend("device")
+        # a tenant created later adopts the shared instance too
+        assert svc.session("c")._backends["device"] is ba
+    finally:
+        svc.close()
+
+
+def test_coalesced_gap_training_uses_per_tenant_streams():
+    """A tenant's answer must not depend on who it coalesced with:
+    fused groups train each shared segment on the owning tenant's RNG
+    stream, so fused == solo for disjoint ranges."""
+    zed_spec = QuerySpec(sigma=Interval(0.0, BASE_HI / 2), alpha=0.5,
+                         materialize="volatile")
+    ann_spec = QuerySpec(sigma=Interval(BASE_HI / 2, BASE_HI), alpha=0.5,
+                         materialize="volatile")
+
+    solo = MLegoService(_corpus(), CFG, window_s=0.0, seed=0)
+    try:
+        beta_solo = solo.session("zed").submit(zed_spec).beta
+    finally:
+        solo.close()
+
+    for order in ((("ann", ann_spec), ("zed", zed_spec)),
+                  (("zed", zed_spec), ("ann", ann_spec))):
+        svc = MLegoService(_corpus(), CFG, window_s=0.4, seed=0)
+        try:
+            futs = [svc.submit(s, tenant=t) for t, s in order]
+            reps = {t: f.result(timeout=60)
+                    for (t, _), f in zip(order, futs)}
+            assert svc.report().coalesced_groups == 1, \
+                "queries must actually have fused for this test"
+            np.testing.assert_allclose(reps["zed"].beta, beta_solo,
+                                       rtol=1e-6, atol=1e-8)
+        finally:
+            svc.close()
+
+
+def test_calibration_save_merge_is_transactional():
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "calibration.json")
+        cals = []
+        for i in range(8):
+            c = Calibration()
+            c.push_train("host", (float(1000 + i), 0.5 + i))
+            cals.append(c)
+        barrier = threading.Barrier(len(cals))
+
+        def save(c):
+            barrier.wait()
+            c.save(path)
+
+        threads = [threading.Thread(target=save, args=(c,)) for c in cals]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        merged = Calibration.load(path)
+        assert merged is not None
+        got = sorted(merged.train_obs["host"])
+        want = sorted((float(1000 + i), 0.5 + i) for i in range(8))
+        assert got == want, \
+            "concurrent merge-saves must union all writers' samples"
