@@ -196,7 +196,29 @@ def main() -> None:
         print(f"# cross-session: plan_cached={cross['second_plan_cached']} "
               f"device hits={cross['second_cache_hits']} "
               f"misses={cross['second_cache_misses']}")
-        out["serve"] = {**sv, "cross_session": cross}
+        ol = serve_bench.run_open_loop(
+            n_docs=600 if args.quick else 1200, quick=args.quick)
+        print(f"# open-loop ({ol['n_tenants']} tenants, {ol['arrivals']} "
+              f"arrivals, {ol['overload']:.1f}x overload): "
+              f"p50 {ol['p50_ms']:.1f}ms p95 {ol['p95_ms']:.1f}ms "
+              f"p99 {ol['p99_ms']:.1f}ms, shed_rate {ol['shed_rate']:.3f}, "
+              f"degraded_frac {ol['degraded_frac']:.3f}, "
+              f"p95_within_slo={ol['p95_within_slo']} "
+              f"(slo {ol['slo_ms']:.1f}ms)")
+        pc = serve_bench.run_pool_comparison(
+            n_docs=600 if args.quick else 1200, quick=args.quick)
+        print(f"# worker pools: single-loop "
+              f"{pc['single_loop']['wall_s']:.2f}s vs pooled "
+              f"{pc['pooled']['wall_s']:.2f}s "
+              f"({pc['pool_speedup']:.2f}x)")
+        out["serve"] = {**sv, "cross_session": cross,
+                        "open_loop": ol, "pools": pc,
+                        # hardening headline numbers, hoisted for the
+                        # artifact trajectory
+                        "p50_ms": ol["p50_ms"], "p95_ms": ol["p95_ms"],
+                        "p99_ms": ol["p99_ms"],
+                        "shed_rate": ol["shed_rate"],
+                        "degraded_frac": ol["degraded_frac"]}
 
     if want("gibbs_gap"):
         _section("gibbs_gap (host exact scan vs blocked device sweep)")

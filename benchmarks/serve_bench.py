@@ -18,6 +18,22 @@ latency for both modes plus the realized coalesce width;
 acceptance check): a repeated query from a *second* session over the
 shared store reports ``plan_cached=True`` and reads the first
 session's device-resident parameters as cache hits.
+
+Production-hardening benches:
+
+``run_open_loop`` drives a thousand-tenant *open-loop* trace (arrivals
+at a fixed rate, independent of completions — the regime where an
+unprotected queue grows without bound) against the admission-
+controlled service: a bounded queue plus per-query ``max_queue_wait_s``
+sheds the excess, the SLO loop degrades α under load, and the idle-TTL
+sweep recycles tenant sessions.  It reports answered-query p50/p95/p99
+(ms), the shed rate, and the degraded fraction — the acceptance check
+is shed rate > 0 *with* answered p95 still inside the SLO.
+
+``run_pool_comparison`` replays one mixed host/device trace through
+the per-backend worker pools and through the pre-hardening single-loop
+topology (``pool_per_backend=False``, one worker): pools let host and
+device groups execute concurrently instead of serializing.
 """
 from __future__ import annotations
 
@@ -34,7 +50,7 @@ from repro.api import (
     QuerySpec,
 )
 from repro.core.store import ModelStore
-from repro.serve import MLegoService
+from repro.serve import MLegoService, ShedError, SLOPolicy
 
 
 def _percentile(xs: List[float], p: float) -> float:
@@ -161,6 +177,180 @@ def run_cross_session(n_docs=600, seed=0, quick=False) -> Dict:
     }
 
 
+def run_open_loop(n_docs=600, seed=0, quick=False, n_tenants=1000,
+                  n_arrivals=None, overload=2.0, max_queue=64) -> Dict:
+    """Open-loop thousand-tenant trace against the hardened front door.
+
+    Arrivals are paced at ``overload``× the service's measured serve
+    rate, round-robin over ``n_tenants`` distinct tenants, each query a
+    *distinct* sliding predicate (every plan search is cold — the
+    realistic overload source).  Admission control keeps answered
+    latency bounded: the queue is capped at ``max_queue`` and every
+    query carries ``max_queue_wait_s`` at half the SLO, so under
+    sustained overload the excess sheds instead of queueing; the SLO
+    loop additionally degrades α once the latency window heats up.
+    """
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    if quick:
+        n_tenants = min(n_tenants, 100)
+    if n_arrivals is None:
+        n_arrivals = 80 if quick else 2 * n_tenants
+
+    def spec_for(i: int) -> QuerySpec:
+        lo = (i * 0.37 * hi) % (hi / 2)          # sliding pan: cold plans
+        return QuerySpec(sigma=Interval(lo, lo + hi / 2), alpha=1.0,
+                         materialize="volatile")
+
+    # calibrate the serve rate on a throwaway service (same capital)
+    probe = MLegoService(train, cfg, kind="vb", seed=seed, window_s=0.0)
+    probe.train_range(0.0, hi / 2)
+    t0 = time.perf_counter()
+    n_probe = 5
+    for i in range(1, n_probe + 1):          # i=0 has no gap: too cheap
+        probe.submit(spec_for(i)).result()
+    t_q = (time.perf_counter() - t0) / n_probe
+    probe.close()
+
+    # answered latency = queue wait (≤ wait_s) + the query's fused
+    # group's execution (≤ max_width × t_q): budget both inside the
+    # SLO, with one worker so executions never contend for the core
+    slo_s = 8.0 * t_q
+    wait_s = slo_s / 4.0
+    max_width = 2
+    gap_s = t_q / overload
+    policy = SLOPolicy(p95_slo_s=slo_s, min_samples=16,
+                       degrade_at=0.25, heavy_at=0.5, severe_at=1.0)
+
+    svc = MLegoService(train, cfg, kind="vb", seed=seed, window_s=0.0,
+                       max_width=max_width, workers_per_pool=1,
+                       max_queue=max_queue, slo=policy,
+                       slo_window=max(n_arrivals, 256),
+                       tenant_ttl_s=max(20.0 * t_q, 1.0))
+    svc.train_range(0.0, hi / 2)
+
+    lats: List[float] = []
+    lock = threading.Lock()
+    futures = []
+    door_shed = 0
+    t_open = time.perf_counter()
+    for i in range(n_arrivals):
+        tenant = f"t{i % n_tenants}"
+        t_sub = time.perf_counter()
+        try:
+            fut = svc.submit(spec_for(i), tenant=tenant,
+                             max_queue_wait_s=wait_s, deadline_s=slo_s)
+        except ShedError:
+            door_shed += 1
+        else:
+            def _done(f, t=t_sub):
+                try:
+                    f.result()
+                except Exception:
+                    pass                         # shed/expired: counted below
+                else:
+                    with lock:
+                        lats.append(time.perf_counter() - t)
+            fut.add_done_callback(_done)
+            futures.append(fut)
+        sleep = gap_s - (time.perf_counter() - t_sub)
+        if sleep > 0:
+            time.sleep(sleep)
+    for f in futures:
+        try:
+            f.result(timeout=600)
+        except Exception:
+            pass
+    wall = time.perf_counter() - t_open
+    report = svc.report()
+    svc.close()
+
+    with lock:
+        answered = sorted(lats)
+    p = lambda q: (_percentile(answered, q) * 1e3)  # noqa: E731
+    p95_ms = p(95.0)
+    return {
+        "n_tenants": n_tenants,
+        "arrivals": n_arrivals,
+        "overload": overload,
+        "gap_ms": gap_s * 1e3,
+        "slo_ms": slo_s * 1e3,
+        "answered": len(answered),
+        "p50_ms": p(50.0),
+        "p95_ms": p95_ms,
+        "p99_ms": p(99.0),
+        "shed": report.shed,
+        "deadline_rejected": report.deadline_rejected,
+        "shed_rate": report.shed_rate,
+        "degraded_frac": report.degraded_frac,
+        "tenant_evictions": report.tenant_evictions,
+        "active_sessions": report.active_sessions,
+        "p95_within_slo": p95_ms <= slo_s * 1e3,
+        "wall_s": wall,
+    }
+
+
+def run_pool_comparison(n_docs=600, seed=0, quick=False, n_clients=4,
+                        per_client=3) -> Dict:
+    """Mixed host/device closed-loop trace: per-backend worker pools vs
+    the single-loop baseline topology.  Each client alternates host and
+    device merge-heavy queries; pools execute the two backends'
+    groups concurrently, the single loop serializes them."""
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    if quick:
+        per_client = 2
+
+    def trace(i: int) -> List[QuerySpec]:
+        out = []
+        for r in range(per_client):
+            backend = "device" if (i + r) % 2 else "host"
+            out.append(QuerySpec(sigma=Interval(0.0, hi), alpha=1.0,
+                                 materialize="volatile", backend=backend))
+        return out
+
+    def drive(pool_per_backend: bool, workers: int) -> Dict[str, float]:
+        svc = MLegoService(train, cfg, kind="vb", seed=seed,
+                           window_s=0.01, max_width=2 * n_clients,
+                           pool_per_backend=pool_per_backend,
+                           workers_per_pool=workers)
+        for i in range(4):
+            svc.train_range(i * hi / 4, (i + 1) * hi / 4)
+        lats: List[float] = []
+        lock = threading.Lock()
+
+        def client(i: int) -> None:
+            for spec in trace(i):
+                t = time.perf_counter()
+                svc.submit(spec, tenant=f"c{i}").result()
+                with lock:
+                    lats.append(time.perf_counter() - t)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        svc.close()
+        return _summary(lats, wall)
+
+    single = drive(pool_per_backend=False, workers=1)
+    pooled = drive(pool_per_backend=True, workers=2)
+    return {
+        "n_clients": n_clients,
+        "per_client": per_client,
+        "single_loop": single,
+        "pooled": pooled,
+        "pool_speedup": single["wall_s"] / pooled["wall_s"]
+        if pooled["wall_s"] > 0 else 0.0,
+    }
+
+
 def main() -> None:
     out = run()
     s, c = out["serial"], out["coalesced"]
@@ -175,6 +365,17 @@ def main() -> None:
     print(f"# cross-session: plan_cached={cross['second_plan_cached']} "
           f"hits={cross['second_cache_hits']} "
           f"misses={cross['second_cache_misses']}")
+    ol = run_open_loop(quick=True)
+    print(f"# open-loop: {ol['arrivals']} arrivals over "
+          f"{ol['n_tenants']} tenants, p50 {ol['p50_ms']:.1f}ms "
+          f"p95 {ol['p95_ms']:.1f}ms p99 {ol['p99_ms']:.1f}ms, "
+          f"shed_rate {ol['shed_rate']:.3f}, degraded_frac "
+          f"{ol['degraded_frac']:.3f}, p95_within_slo "
+          f"{ol['p95_within_slo']} (slo {ol['slo_ms']:.1f}ms)")
+    pc = run_pool_comparison(quick=True)
+    print(f"# pools: single-loop {pc['single_loop']['wall_s']:.2f}s vs "
+          f"pooled {pc['pooled']['wall_s']:.2f}s "
+          f"({pc['pool_speedup']:.2f}x)")
 
 
 if __name__ == "__main__":

@@ -98,6 +98,13 @@ class PlanCache:
         return hash(tuple(sorted(
             (m.model_id, m.o.lo, m.o.hi) for m in models)))
 
+    def peek(self, key: Tuple) -> Optional[SearchResult]:
+        """Non-counting, non-promoting lookup — the serving layer's
+        SLO loop probes "is this plan already paid for?" without
+        polluting the hit/miss telemetry or the LRU order."""
+        with self._lock:
+            return self._entries.get(key)
+
     def get(self, key: Tuple) -> Optional[SearchResult]:
         with self._lock:
             res = self._entries.get(key)

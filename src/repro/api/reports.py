@@ -43,6 +43,12 @@ class QueryReport:
     ``plan_cached`` is True when every component's plan came from the
     session plan cache — the search stage was skipped entirely (and
     ``search_s`` is just the lookup time).
+
+    ``degraded`` is the serving layer's SLO degradation level at
+    answer time (0 = full quality; >= 1 means the service scaled the
+    spec's effective α down to shed planning/training work under
+    overload — see ``repro.serve.slo``).  Always 0 for direct session
+    use.
     """
 
     beta: np.ndarray                 # merged topic-word matrix (K, V)
@@ -61,6 +67,7 @@ class QueryReport:
     cache_misses: int = 0
     cache_resident_bytes: int = 0
     plan_cached: bool = False
+    degraded: int = 0
 
     @property
     def plan(self) -> SearchResult:

@@ -364,18 +364,36 @@ class MLegoSession:
                                        persist=True, backend=self.backend)
 
     # ------------------------------------------------------------------
+    def _component_key(self, sigma: Interval, spec: QuerySpec, kind: str,
+                       backend: ExecutionBackend, fingerprint: int) -> tuple:
+        # a calibrated provider prices fetches by device-LRU residency
+        # (cache_probe), so residency churn must key the cache too —
+        # otherwise a cached plan could be served at stale fetch prices
+        return (sigma.lo, sigma.hi, spec.alpha, kind, spec.method,
+                backend.name, fingerprint, self.cost,
+                getattr(self.cost, "version", 0),
+                self._cache_epoch(backend), self._data_epoch)
+
+    def plan_cached_for(self, spec: QuerySpec) -> bool:
+        """True when every component of ``spec`` already has a cached
+        plan — i.e. answering it costs no search.  Non-counting and
+        non-promoting (``PlanCache.peek``): the serving layer's SLO
+        degradation loop probes this to decide whether degrading α
+        would actually save anything."""
+        kind = spec.kind or self.kind
+        backend = self._backend_for(spec)
+        fingerprint = PlanCache.fingerprint(self._models(kind))
+        return all(
+            self._plan_cache.peek(self._component_key(
+                sigma, spec, kind, backend, fingerprint)) is not None
+            for sigma in spec.sigma)
+
     def _plan_component(self, models, fingerprint: int, sigma: Interval,
                         spec: QuerySpec, kind: str,
                         backend: ExecutionBackend
                         ) -> tuple:
         """(SearchResult, was_cached) for one predicate component."""
-        # a calibrated provider prices fetches by device-LRU residency
-        # (cache_probe), so residency churn must key the cache too —
-        # otherwise a cached plan could be served at stale fetch prices
-        epoch = self._cache_epoch(backend)
-        key = (sigma.lo, sigma.hi, spec.alpha, kind, spec.method,
-               backend.name, fingerprint, self.cost,
-               getattr(self.cost, "version", 0), epoch, self._data_epoch)
+        key = self._component_key(sigma, spec, kind, backend, fingerprint)
         cached = self._plan_cache.get(key)
         if cached is not None:
             return cached, True
@@ -557,6 +575,32 @@ class MLegoSession:
                 owner.append(i)
                 sigmas.append(sigma)
 
+        # like single-spec submit, the batch path retries StalePlanError
+        # once: background compaction/eviction can remove a planned
+        # model between the joint search and the assembly fetch, and
+        # the mutation already cleared the plan cache — so one in-place
+        # re-plan over the current snapshot answers the batch without
+        # surfacing the transient to callers (the serving layer's
+        # serial fallback stays reserved for real per-spec failures).
+        # Segments the failed attempt persisted remain as capital and
+        # enter the re-plan as fetchable models.
+        for attempt in range(2):
+            try:
+                return self._submit_many_once(specs, sigmas, owner, alpha,
+                                              kind, backend, next_keys)
+            except StalePlanError:
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")      # pragma: no cover
+
+    def _submit_many_once(self, specs: List[QuerySpec],
+                          sigmas: List[Interval], owner: List[int],
+                          alpha: float, kind: str,
+                          backend: ExecutionBackend,
+                          next_keys: Optional[
+                              Sequence[Callable[[], object]]]
+                          ) -> BatchReport:
+        """One attempt of the Alg. 4 batch path (see ``submit_many``)."""
         # batch-level plan cache: repeated identical batches over an
         # unchanged store (same specs, prices, residency) skip Alg. 4
         models = self._models(kind)
@@ -619,8 +663,16 @@ class MLegoSession:
                     continue
                 plans.append(SearchResult(opt.plans[j], 0.0, alpha,
                                           method="ALG4", ir=ir))
-                parts.extend(self.store.get(f.model_id)
-                             for f in ir.fetches)
+                try:
+                    parts.extend(self.store.get(f.model_id)
+                                 for f in ir.fetches)
+                except KeyError as exc:
+                    # a planned model vanished between search and
+                    # assembly (background compaction/eviction) — typed
+                    # so submit_many's retry loop re-plans in place
+                    raise StalePlanError(
+                        f"model {exc.args[0]!r} vanished between batch "
+                        f"planning and assembly") from exc
                 for (lo, hi), m in seg_models.items():
                     if any(g.lo <= lo and hi <= g.hi
                            for g in gap_lists[j]):

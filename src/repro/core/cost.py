@@ -468,7 +468,10 @@ class CalibratedCostModel(CostProvider):
                     execution backend (host exact Gibbs scan vs the
                     blocked device sweep have very different rates);
                     ``set_train_backend`` names the backend whose κ
-                    the next plan search prices
+                    the next plan search prices — **per calling
+                    thread** (thread-local), so concurrent sessions,
+                    service workers and the speculator can each hold
+                    "set, then price" atomic on one shared provider
       t_merge       per-merge host cost
       t_hit/t_miss  per-**byte** device fetch cost split by cache
                     state — ``cache_probe(model_id)`` (wired to the
@@ -499,7 +502,13 @@ class CalibratedCostModel(CostProvider):
         self.cache_probe = cache_probe
         self.size_probe = size_probe
         self.part_bytes_hint = part_bytes_hint
-        self.train_backend = "host"
+        # thread-local: one provider is shared by every worker, tenant
+        # thread and the speculator of a service, and "set the backend,
+        # then price" must be atomic per caller — a plain attribute let
+        # a concurrent session's set_train_backend retarget κ between a
+        # speculator's set and its speculation_pays read (mis-priced
+        # speculative trains)
+        self._train_backend = threading.local()
         self._lock = threading.RLock()
         self._version = 0
         self._dirty = len(self.calibration) > 0
@@ -534,8 +543,18 @@ class CalibratedCostModel(CostProvider):
             return self._t_merge if self._t_merge is not None \
                 else self.base.t_merge
 
+    @property
+    def train_backend(self) -> str:
+        """The *calling thread's* active training backend ("host" until
+        that thread names one) — see ``set_train_backend``."""
+        return getattr(self._train_backend, "name", "host")
+
+    @train_backend.setter
+    def train_backend(self, backend: str) -> None:
+        self._train_backend.name = backend
+
     def set_train_backend(self, backend: str) -> None:
-        self.train_backend = backend
+        self._train_backend.name = backend
 
     def load_calibration(self, path: str) -> bool:
         """Replace the measurement log with a persisted sidecar's.

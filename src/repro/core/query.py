@@ -2,63 +2,43 @@
 
 The canonical implementation of the Fig. 2 pipeline (plan search ->
 gap training -> merge) lives in ``repro.api`` (session / planner /
-executor); this module keeps the seed repo's ``QueryEngine`` surface
-alive as a thin shim so old call sites keep working:
+executor).  ``QueryEngine`` is now a *thin alias* over
+``MLegoSession`` kept for one more release so ancient call sites fail
+loudly-but-gracefully:
 
-  * ``execute(sigma, alpha, method)``  -> ``session.submit(QuerySpec(...))``
-  * ``execute_batch(sigmas)``          -> ``session.submit_many([...])``,
-    re-applying the legacy cost attribution (shared search/train time
-    dumped onto ``results[0]``) for bug-for-bug compatibility.  New
-    code should read those costs from ``BatchReport`` instead — they
-    are also stashed on ``self.last_batch_report``.
+  * construction warns ``DeprecationWarning`` and builds the session
+  * ``execute(sigma, alpha, method)`` -> ``submit(QuerySpec(...))``,
+    returning the ``QueryReport`` (a superset of the retired
+    ``QueryResult`` surface: beta/plan/n_trained_tokens/n_merged/
+    train_s/merge_s/search_s/total_s/materialized are all present)
+  * ``execute_batch(sigmas)`` -> ``submit_many([...])``, returning
+    ``(reports, opt)`` — shared search/train costs now live on the
+    ``BatchReport`` (``last_batch_report``), never smeared onto
+    ``results[0]`` as the seed engine did
+
+The legacy attribute-plumbing surface (assignable ``corpus``/``index``/
+``store``/``cfg``/``cost``/``kind`` properties) and the ``QueryResult``
+dataclass are gone — migrate to ``MLegoSession`` (see the migration
+table in ``src/repro/api/README.md``).
 """
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
-
-import numpy as np
 
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.session import MLegoSession
 from repro.api.spec import PERSIST, VOLATILE, QuerySpec
-from repro.api.trainers import resolve_kind
 from repro.configs.lda_default import LDAConfig
 from repro.core.batch_opt import BatchResult
 from repro.core.cost import CostModel
-from repro.core.lda import MaterializedModel
 from repro.core.plans import Interval
-from repro.core.search import SearchResult
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
 
 
-@dataclass
-class QueryResult:
-    """Legacy result shape (kept for old call sites; see QueryReport)."""
-    beta: np.ndarray             # merged topic-word matrix (K, V)
-    plan: SearchResult
-    n_trained_tokens: int
-    n_merged: int
-    train_s: float
-    merge_s: float
-    search_s: float
-    materialized: List[MaterializedModel] = field(default_factory=list)
-
-    @property
-    def total_s(self) -> float:
-        return self.train_s + self.merge_s + self.search_s
-
-
-def _legacy(report: QueryReport) -> QueryResult:
-    return QueryResult(report.beta, report.plan, report.n_trained_tokens,
-                       report.n_merged, report.train_s, report.merge_s,
-                       report.search_s, materialized=list(report.materialized))
-
-
-class QueryEngine:
-    """Deprecated: a positional-argument facade over ``MLegoSession``."""
+class QueryEngine(MLegoSession):
+    """Deprecated positional-argument alias of ``MLegoSession``."""
 
     def __init__(self, corpus: Corpus, store: ModelStore, cfg: LDAConfig,
                  cost: Optional[CostModel] = None, kind: str = "vb",
@@ -66,67 +46,10 @@ class QueryEngine:
         warnings.warn(
             "QueryEngine is deprecated; use repro.api.MLegoSession.submit "
             "with a QuerySpec", DeprecationWarning, stacklevel=2)
-        self.session = MLegoSession(corpus, cfg, store=store, cost=cost,
-                                    kind=kind, seed=seed)
+        super().__init__(corpus, cfg, store=store, cost=cost, kind=kind,
+                         seed=seed)
         self.materialize_results = materialize_results
         self.last_batch_report: Optional[BatchReport] = None
-
-    # --- delegated session state (old attribute surface, r/w) ----------
-    # Setters mimic the seed engine's plain attributes: assignment
-    # swaps the object used from then on, nothing else is recomputed
-    # (e.g. setting corpus leaves index stale, exactly as before).
-    @property
-    def corpus(self) -> Corpus:
-        return self.session.corpus
-
-    @corpus.setter
-    def corpus(self, v: Corpus) -> None:
-        self.session.corpus = v
-        self.session.executor.corpus = v
-
-    @property
-    def index(self):
-        return self.session.index
-
-    @index.setter
-    def index(self, v) -> None:
-        self.session.index = v
-        self.session.planner.index = v
-
-    @property
-    def store(self) -> ModelStore:
-        return self.session.store
-
-    @store.setter
-    def store(self, v: ModelStore) -> None:
-        self.session.store = v
-        self.session.executor.store = v
-
-    @property
-    def cfg(self) -> LDAConfig:
-        return self.session.cfg
-
-    @cfg.setter
-    def cfg(self, v: LDAConfig) -> None:
-        self.session.cfg = v
-        self.session.executor.cfg = v
-
-    @property
-    def cost(self) -> CostModel:
-        return self.session.cost
-
-    @cost.setter
-    def cost(self, v: CostModel) -> None:
-        self.session.cost = v
-        self.session.planner.cost = v
-
-    @property
-    def kind(self) -> str:
-        return self.session.kind
-
-    @kind.setter
-    def kind(self, v: str) -> None:
-        self.session.kind = resolve_kind(v)
 
     def _spec(self, sigma, alpha: float, method: str = "psoa++") -> QuerySpec:
         return QuerySpec(sigma=sigma, alpha=alpha, kind=self.kind,
@@ -134,26 +57,17 @@ class QueryEngine:
                          materialize=PERSIST if self.materialize_results
                          else VOLATILE)
 
-    # ------------------------------------------------------------------
-    def train_range(self, lo: float, hi: float) -> Optional[MaterializedModel]:
-        """Train one fresh model on [lo, hi) and materialize it."""
-        return self.session.train_range(lo, hi)
-
     def execute(self, sigma: Interval, alpha: float,
-                method: str = "psoa++") -> QueryResult:
+                method: str = "psoa++") -> QueryReport:
         """One analytic query: search, train gaps, merge."""
-        return _legacy(self.session.submit(self._spec(sigma, alpha, method)))
+        return self.submit(self._spec(sigma, alpha, method))
 
     def execute_batch(self, sigmas: Sequence[Interval]
-                      ) -> Tuple[List[QueryResult], BatchResult]:
+                      ) -> Tuple[List[QueryReport], BatchResult]:
         """§V.C batch path: Alg. 4 plan combination, shared gap training."""
-        br = self.session.submit_many(
-            [self._spec(s, 0.0) for s in sigmas])
+        br = self.submit_many([self._spec(s, 0.0) for s in sigmas])
         self.last_batch_report = br
-        results = [_legacy(r) for r in br.reports]
-        # legacy attribution: shared costs dumped on the first result
-        # (BatchReport carries them properly — prefer it in new code)
-        if results:
-            results[0].train_s = br.shared_train_s
-            results[0].search_s = br.shared_search_s
-        return results, br.opt
+        return list(br.reports), br.opt
+
+
+__all__ = ["QueryEngine"]

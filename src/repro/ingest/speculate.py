@@ -53,6 +53,8 @@ class SpeculationReport:
     skipped_payoff: int = 0      # gaps whose forecast missed the window
     hits: int = 0                # answered queries that fetched
     #                              speculated capital
+    paused: bool = False         # SLO loop currently holds speculation
+    pauses: int = 0              # times the SLO loop paused it
 
     @property
     def hit_rate(self) -> float:
@@ -85,6 +87,8 @@ class SpeculativeTrainer:
         self._scans = self._hot = self._considered = 0
         self._trained = self._trained_tokens = self._skipped = 0
         self._hits = 0
+        self._paused = False
+        self._pauses = 0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         if start:
@@ -113,6 +117,20 @@ class SpeculativeTrainer:
         with self._lock:
             self._hits += 1
 
+    @property
+    def paused(self) -> bool:
+        return self._paused
+
+    def set_paused(self, paused: bool) -> None:
+        """SLO hook: under heavy degradation the service parks the
+        speculator so overload capacity answers queries instead of
+        pre-training for them; cleared automatically when the latency
+        window recovers."""
+        with self._lock:
+            if paused and not self._paused:
+                self._pauses += 1
+            self._paused = bool(paused)
+
     def _hot_groups(self, now: float) -> List[Tuple[Tuple, List[float]]]:
         """(group key, arrival stamps) for ranges hot in the window."""
         groups = {}
@@ -126,6 +144,8 @@ class SpeculativeTrainer:
 
     def scan_once(self) -> int:
         """One mining pass; returns the number of segments trained."""
+        if self._paused:
+            return 0
         now = time.monotonic()
         hot = self._hot_groups(now)
         with self._lock:
@@ -176,7 +196,8 @@ class SpeculativeTrainer:
                 gaps_considered=self._considered,
                 trained=self._trained,
                 trained_tokens=self._trained_tokens,
-                skipped_payoff=self._skipped, hits=self._hits)
+                skipped_payoff=self._skipped, hits=self._hits,
+                paused=self._paused, pauses=self._pauses)
 
 
 __all__ = ["QueryLogEntry", "SpeculationReport", "SpeculativeTrainer",

@@ -3,20 +3,36 @@
     from repro.serve import MLegoService
     from repro.api import Interval, QuerySpec
 
-    svc = MLegoService(corpus, cfg, backend="device")
-    fut = svc.submit(QuerySpec(sigma=Interval(0.0, 500.0)), tenant="ana")
+    svc = MLegoService(corpus, cfg, backend="device", max_queue=256,
+                       slo_p95_s=0.25, tenant_ttl_s=600.0)
+    fut = svc.submit(QuerySpec(sigma=Interval(0.0, 500.0)), tenant="ana",
+                     deadline_s=1.0, priority=1)
     report = fut.result()
 
-One ``ModelStore``, one execution backend (one device model LRU), one
-cross-session ``PlanCache``, one calibration log — shared by every
-tenant; concurrent specs coalesce into Alg. 4 batches inside a
-configurable time/size window.  ``attach_ingest``/``attach_speculator``
-add streaming ingestion and workload-driven gap pre-training
-(``repro.ingest``).  See ``repro.api`` README's "Serving layer" and
-"Streaming ingestion & speculation" sections.
+One ``ModelStore``, one execution backend per *name* (one device model
+LRU), one cross-session ``PlanCache``, one calibration log — shared by
+every tenant.  Each backend name gets its own worker pool (host and
+device traffic never serialize against each other; idle workers steal
+across pools), concurrent specs coalesce into Alg. 4 batches inside a
+configurable time/size window, bounded queues shed load with typed
+``ShedError``/``DeadlineExceededError`` rejections, a sliding-latency
+SLO loop degrades plan quality (effective α) under overload, and idle
+tenant sessions are evicted on a TTL and revived with their RNG stream
+intact.  ``attach_ingest``/``attach_speculator`` add streaming
+ingestion and workload-driven gap pre-training (``repro.ingest``).
+See ``repro.api`` README's "Serving layer" and "Streaming ingestion &
+speculation" sections.
 """
-from repro.serve.queue import CoalescingQueue, PendingQuery
+from repro.serve.queue import (
+    CoalescingQueue,
+    DeadlineExceededError,
+    PendingQuery,
+    ServiceClosedError,
+    ShedError,
+    SubmitOptions,
+)
 from repro.serve.reports import (
+    BackendSLO,
     IngestReport,
     QueryLogEntry,
     ServiceReport,
@@ -24,15 +40,23 @@ from repro.serve.reports import (
     TenantStats,
 )
 from repro.serve.service import DEFAULT_TENANT, MLegoService
+from repro.serve.slo import LatencyTracker, SLOPolicy
 
 __all__ = [
+    "BackendSLO",
     "CoalescingQueue",
     "DEFAULT_TENANT",
+    "DeadlineExceededError",
     "IngestReport",
+    "LatencyTracker",
     "MLegoService",
     "PendingQuery",
     "QueryLogEntry",
+    "SLOPolicy",
+    "ServiceClosedError",
     "ServiceReport",
+    "ShedError",
     "SpeculationReport",
+    "SubmitOptions",
     "TenantStats",
 ]

@@ -2,9 +2,11 @@
 
 ``QueryReport``/``BatchReport`` answer *one* query or batch;
 ``ServiceReport`` answers "how is the service doing": per-tenant queue
-waits and coalesce widths (``TenantStats``), shared-cache traffic (the
-cross-session plan cache and the device model LRU), the coalescing
-queue's fusion efficiency, and — when streaming ingestion and/or
+waits, coalesce widths and admission outcomes (``TenantStats``),
+shared-cache traffic (the cross-session plan cache and the device
+model LRU), per-backend latency windows and degradation levels
+(``BackendSLO``), the coalescing queues' fusion efficiency and current
+depths, tenant-lifecycle churn, and — when streaming ingestion and/or
 speculation are attached — the pipeline's freshness/compaction
 counters (``IngestReport``) and the speculative trainer's hit ledger
 (``SpeculationReport``).  Snapshots are plain frozen dataclasses —
@@ -22,6 +24,7 @@ from typing import Dict, Optional, Tuple
 from repro.api.backend import BackendStats
 from repro.ingest.pipeline import IngestReport
 from repro.ingest.speculate import QueryLogEntry, SpeculationReport
+from repro.serve.slo import BackendSLO
 
 
 @dataclass(frozen=True)
@@ -32,7 +35,13 @@ class TenantStats:
     coalescing queue before its group started executing (the price of
     the coalescing window); width_sum sums the widths of the groups
     its queries rode in, so ``mean_width`` > 1 means this tenant's
-    traffic actually fused with other queries.
+    traffic actually fused with other queries.  ``shed`` and
+    ``deadline_rejected`` count queries admission control refused
+    (they are *not* in ``queries``, which counts answered/failed
+    executions); ``degraded_queries`` counts answers produced under a
+    non-zero SLO degradation level; ``evictions`` counts idle-TTL
+    session evictions (the session revives on next use with its RNG
+    stream intact, so this is lifecycle telemetry, not data loss).
     """
 
     tenant: str
@@ -44,6 +53,10 @@ class TenantStats:
     width_sum: int = 0
     max_width: int = 0
     plan_cached_queries: int = 0    # answered off the shared plan cache
+    shed: int = 0                   # rejected: queue full / waited too long
+    deadline_rejected: int = 0      # rejected: deadline_s elapsed queued
+    degraded_queries: int = 0       # answered at degradation level > 0
+    evictions: int = 0              # idle-TTL session evictions
 
     @property
     def mean_queue_wait_s(self) -> float:
@@ -54,7 +67,7 @@ class TenantStats:
         return self.width_sum / self.queries if self.queries else 0.0
 
     def absorb(self, *, wait_s: float, width: int, plan_cached: bool,
-               error: bool = False) -> "TenantStats":
+               error: bool = False, degraded: bool = False) -> "TenantStats":
         """One answered (or failed) query folded in; returns the new
         frozen snapshot."""
         return replace(
@@ -67,7 +80,13 @@ class TenantStats:
             width_sum=self.width_sum + width,
             max_width=max(self.max_width, width),
             plan_cached_queries=self.plan_cached_queries
-            + (1 if plan_cached else 0))
+            + (1 if plan_cached else 0),
+            degraded_queries=self.degraded_queries + (1 if degraded else 0))
+
+    def bump(self, **deltas: int) -> "TenantStats":
+        """Counter increments (shed / deadline_rejected / evictions)."""
+        return replace(self, **{k: getattr(self, k) + v
+                                for k, v in deltas.items()})
 
 
 @dataclass(frozen=True)
@@ -80,6 +99,13 @@ class ServiceReport:
     they include hits one tenant earned from another tenant's
     searches; ``backend`` is the shared execution backend's cumulative
     counters (device-cache traffic across every session).
+
+    Hardening telemetry: ``shed``/``deadline_rejected`` are service-
+    wide admission rejections, ``queue_depth`` the current pending
+    count per worker pool, ``slo`` each backend's sliding latency
+    window and active degradation level, ``tenant_evictions`` the
+    idle-TTL lifecycle churn and ``active_sessions`` the tenants
+    currently resident.
     """
 
     tenants: Dict[str, TenantStats] = field(default_factory=dict)
@@ -95,6 +121,13 @@ class ServiceReport:
     backend: BackendStats = field(default_factory=BackendStats)
     calibration_samples: int = 0
     store_bytes: int = 0
+    shed: int = 0
+    deadline_rejected: int = 0
+    degraded_queries: int = 0
+    tenant_evictions: int = 0
+    active_sessions: int = 0
+    queue_depth: Dict[str, int] = field(default_factory=dict)
+    slo: Dict[str, BackendSLO] = field(default_factory=dict)
     # None unless the corresponding subsystem is attached
     ingest: Optional[IngestReport] = None
     speculation: Optional[SpeculationReport] = None
@@ -112,9 +145,26 @@ class ServiceReport:
         return sum(t.coalesced_queries for t in self.tenants.values()) \
             / self.queries
 
+    @property
+    def submitted(self) -> int:
+        """Everything that passed the front door: answered + failed +
+        admission-rejected."""
+        return self.queries + self.shed + self.deadline_rejected
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of submitted queries admission control refused."""
+        total = self.submitted
+        return (self.shed + self.deadline_rejected) / total if total else 0.0
+
+    @property
+    def degraded_frac(self) -> float:
+        """Fraction of answered queries produced at level > 0."""
+        return self.degraded_queries / self.queries if self.queries else 0.0
+
     def tenant(self, name: str) -> TenantStats:
         return self.tenants.get(name, TenantStats(tenant=name))
 
 
-__all__ = ["IngestReport", "QueryLogEntry", "ServiceReport",
+__all__ = ["BackendSLO", "IngestReport", "QueryLogEntry", "ServiceReport",
            "SpeculationReport", "TenantStats"]

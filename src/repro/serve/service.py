@@ -4,31 +4,55 @@
 model LRU, and calibration log are private, so every concurrent
 analyst over the same materialized capital rebuilds all three.  The
 service owns exactly one of each — one ``ModelStore``, one execution
-backend (one device LRU), one store-homed ``PlanCache``, one cost
-provider (one calibration log) — and hands every tenant a session
-wired to the shared set:
+backend per *name* (one device LRU), one store-homed ``PlanCache``,
+one cost provider (one calibration log) — and hands every tenant a
+session wired to the shared set:
 
-    svc = MLegoService(corpus, cfg, backend="device", window_s=0.005)
+    svc = MLegoService(corpus, cfg, backend="device", window_s=0.005,
+                       max_queue=256, slo_p95_s=0.25, tenant_ttl_s=600.0)
     svc.train_range(0.0, 500.0)                   # shared capital
-    fut = svc.submit(QuerySpec(sigma=Interval(0.0, 1000.0)), tenant="ana")
+    fut = svc.submit(QuerySpec(sigma=Interval(0.0, 1000.0)),
+                     tenant="ana", deadline_s=1.0, priority=1)
     report = fut.result()                         # a QueryReport
 
-``submit`` is asynchronous: specs land on a **coalescing queue** and a
-worker loop drains it in time/size windows.  Specs that drained
-together and are compatible — same trainer kind, same execution
-backend; α may differ, the session's α-split machinery handles it —
-are fused into one ``submit_many`` call, so independent interactive
-users ride Alg. 4's joint planning (shared gap segments trained once)
-and the size-bucketed batched merge launches instead of issuing n
-serial single-query merges.  A group whose fused execution fails is
-retried query-by-query, so one malformed spec cannot poison its
-coalescing window's neighbors.
+``submit`` is asynchronous and keyword-only past the spec: specs land
+on a per-backend **coalescing queue** and that backend's **worker
+pool** drains it in time/size windows — host and device traffic never
+serialize against each other, and a pool's extra workers steal pending
+items from other pools when their own queue is idle.  Specs that
+drained together and are compatible — same trainer kind, same
+execution backend; α may differ, the session's α-split machinery
+handles it — are fused into one ``submit_many`` call, so independent
+interactive users ride Alg. 4's joint planning (shared gap segments
+trained once) and the size-bucketed batched merge launches instead of
+issuing n serial single-query merges.  A group whose fused execution
+fails is retried query-by-query, so one malformed spec cannot poison
+its coalescing window's neighbors.
+
+Production hardening:
+
+  * **Admission control** — ``max_queue`` bounds each pool's queue
+    (full ⇒ ``ShedError`` at the submitter, or displacement of the
+    youngest lower-priority pending query); ``deadline_s`` /
+    ``max_queue_wait_s`` expire queued queries with typed
+    ``DeadlineExceededError`` / ``ShedError`` *before* execution burns
+    capacity on answers nobody is waiting for.
+  * **SLO feedback** — a sliding p50/p95/p99 latency window per
+    backend (``slo_p95_s`` or a full ``SLOPolicy``) degrades new
+    queries under overload: effective α is scaled down (level 1), then
+    forced to the fast end unless the original-α plan is already
+    cached, with speculative training paused (level ≥ 2).  The level
+    is recorded on every ``QueryReport.degraded``.
+  * **Tenant lifecycle** — ``tenant_ttl_s`` evicts idle tenant
+    sessions (their stats survive); a revived tenant continues its
+    *exact* RNG stream (the session key is stashed at eviction), so
+    results are reproducible across eviction boundaries.
 
 Cross-session reuse is the point: tenant B's repeated query over a
 plan tenant A already searched reports ``plan_cached=True``, and its
 merge reads A's device-resident model parameters as cache hits.
-Per-tenant queue waits and coalesce widths land on ``ServiceReport``
-(``svc.report()``).
+Per-tenant queue waits, coalesce widths and admission outcomes land on
+``ServiceReport`` (``svc.report()``).
 
 The service is also the host for the streaming subsystems
 (``repro.ingest``): ``attach_ingest`` wires an ``IngestPipeline`` to
@@ -45,9 +69,11 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 import zlib
 from collections import deque
 from concurrent.futures import Future
+from dataclasses import replace as _dc_replace
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
 from repro.api.backend import ExecutionBackend, make_backend
@@ -63,8 +89,16 @@ from repro.data.corpus import Corpus
 from repro.ingest.compaction import CompactionPolicy, Compactor
 from repro.ingest.pipeline import IngestPipeline
 from repro.ingest.speculate import QueryLogEntry, SpeculativeTrainer
-from repro.serve.queue import CoalescingQueue, PendingQuery
-from repro.serve.reports import ServiceReport, TenantStats
+from repro.serve.queue import (
+    CoalescingQueue,
+    DeadlineExceededError,
+    PendingQuery,
+    ServiceClosedError,
+    ShedError,
+    SubmitOptions,
+)
+from repro.serve.reports import BackendSLO, ServiceReport, TenantStats
+from repro.serve.slo import LatencyTracker, SLOPolicy
 
 DEFAULT_TENANT = "default"
 
@@ -86,8 +120,20 @@ def _reject(future: "Future", exc: BaseException) -> None:
         pass
 
 
+class _Pool:
+    """One backend name's worker pool: a coalescing queue plus its
+    drain threads.  Worker 0 is the *home* worker (drains only this
+    queue — a stall in another pool can never capture it); workers
+    1..n-1 steal from sibling pools when this queue is idle."""
+
+    def __init__(self, name: str, queue: CoalescingQueue):
+        self.name = name
+        self.queue = queue
+        self.threads: List[threading.Thread] = []
+
+
 class MLegoService:
-    """One shared store, many tenants, one coalescing worker loop.
+    """One shared store, many tenants, per-backend worker pools.
 
     corpus/cfg       : the Def. 1 D and F every tenant shares
     store            : shared ``ModelStore`` (fresh one if omitted)
@@ -104,6 +150,20 @@ class MLegoService:
     max_width        : cap on one coalesced group's size
     seed             : base RNG seed; each tenant's session derives a
                        stable per-tenant stream from it
+    workers_per_pool : drain threads per backend pool (>= 1; worker 0
+                       never steals, the rest do)
+    pool_per_backend : False collapses every backend onto one pool/one
+                       queue (the pre-hardening single-loop topology —
+                       kept as a baseline and migration path)
+    max_queue        : bound on each pool's pending queries (None =
+                       unbounded); see ``repro.serve.queue`` for the
+                       full-queue displacement/rejection rule
+    slo_p95_s        : p95 latency objective per backend — enables the
+                       SLO degradation loop (or pass ``slo=`` a full
+                       ``SLOPolicy`` for custom thresholds)
+    tenant_ttl_s     : idle TTL for tenant sessions (None = immortal);
+                       evicted tenants revive on next use with their
+                       RNG stream intact
     """
 
     def __init__(self, corpus: Corpus, cfg: LDAConfig, *,
@@ -115,7 +175,20 @@ class MLegoService:
                  window_s: float = 0.005, max_width: int = 16,
                  plan_cache_entries: int = 1024,
                  seed: int = 0, poll_s: float = 0.02,
-                 query_log_entries: int = 512):
+                 query_log_entries: int = 512,
+                 workers_per_pool: int = 2,
+                 pool_per_backend: bool = True,
+                 max_queue: Optional[int] = None,
+                 slo_p95_s: Optional[float] = None,
+                 slo: Optional[SLOPolicy] = None,
+                 slo_window: int = 256,
+                 tenant_ttl_s: Optional[float] = None):
+        if workers_per_pool < 1:
+            raise ValueError(
+                f"workers_per_pool must be >= 1, got {workers_per_pool}")
+        if tenant_ttl_s is not None and tenant_ttl_s < 0:
+            raise ValueError(
+                f"tenant_ttl_s must be >= 0, got {tenant_ttl_s}")
         self.corpus = corpus
         self.cfg = cfg
         self.store = store if store is not None else ModelStore()
@@ -127,9 +200,35 @@ class MLegoService:
         self.calibration_path = calibration_path
         self._seed = seed
         self._poll_s = poll_s
+        self._window_s = window_s
+        self._max_width = max_width
+        self._max_queue = max_queue
+        self.workers_per_pool = workers_per_pool
+        self.pool_per_backend = pool_per_backend
+        self.tenant_ttl_s = tenant_ttl_s
+        if slo is not None:
+            self._slo_policy: Optional[SLOPolicy] = slo
+        else:
+            self._slo_policy = SLOPolicy(p95_slo_s=slo_p95_s) \
+                if slo_p95_s is not None else None
+        self._slo_window = slo_window
+        self._trackers: Dict[str, LatencyTracker] = {}
+        self._tracker_lock = threading.Lock()
 
         self._sessions: Dict[str, MLegoSession] = {}
         self._session_lock = threading.RLock()
+        # tenant lifecycle: last-use stamps, stashed RNG keys of
+        # evicted sessions (stream continuity on revival), in-flight
+        # query counts (a tenant with queued/executing work is never
+        # evicted — its session object is being used right now)
+        self._last_seen: Dict[str, float] = {}
+        self._evicted_keys: Dict[str, object] = {}
+        self._inflight: Dict[str, int] = {}
+        self._last_sweep = time.monotonic()
+        # corpus snapshot epoch: revived/new sessions inherit it so a
+        # plan cached before ingestion growth (epoch-0 keys) can never
+        # be served to a session created after the growth
+        self._data_epoch = 0
         # shared per-name backends for specs naming a non-default
         # backend — one device LRU per backend *name*, not per tenant
         self._extra_backends: Dict[str, ExecutionBackend] = {}
@@ -144,15 +243,15 @@ class MLegoService:
         self._tenants: Dict[str, TenantStats] = {}
         self._queries = self._errors = 0
         self._groups = self._coalesced_groups = 0
-        self._width_sum = self._max_width = 0
+        self._width_sum = self._max_coalesce_width = 0
+        self._shed = self._deadline_rejected = 0
+        self._degraded = self._tenant_evictions = 0
 
-        self._queue = CoalescingQueue(window_s=window_s,
-                                      max_width=max_width)
+        self._closed = False
         self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._run,
-                                        name="mlego-service-worker",
-                                        daemon=True)
-        self._worker.start()
+        self._pools: Dict[str, _Pool] = {}
+        self._pool_lock = threading.Lock()
+        self._pool_for(self.backend.name)       # default pool, eagerly
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -165,28 +264,63 @@ class MLegoService:
 
     @property
     def closed(self) -> bool:
-        return self._queue.closed
+        return self._closed
 
     def close(self) -> None:
         """Stop accepting queries, stop speculation, drain the ingest
         builder (the open partial slice is built — append-only means it
-        can never grow again), drain everything pending, join the
-        worker, and (for a calibrated provider with a sidecar path)
-        merge-save the shared calibration log."""
+        can never grow again), drain everything pending, join every
+        pool's workers, and (for a calibrated provider with a sidecar
+        path) merge-save the shared calibration log."""
         if self._speculator is not None:
             self._speculator.close()
         if self._ingest is not None:
             self._ingest.close()
-        if self._queue.closed:
-            if self._worker.is_alive():
-                self._worker.join()
-            return
-        self._queue.close()
+        first = not self._closed
+        self._closed = True
+        with self._pool_lock:
+            pools = list(self._pools.values())
+        for p in pools:
+            p.queue.close()
         self._stop.set()
-        self._worker.join()
-        if self.calibration_path is not None \
+        for p in pools:
+            for t in p.threads:
+                if t.is_alive():
+                    t.join()
+        if first and self.calibration_path is not None \
                 and getattr(self.cost, "calibration", None) is not None:
             self.save_calibration()
+
+    # ------------------------------------------------------------------
+    # worker pools
+    # ------------------------------------------------------------------
+    def _pool_for(self, backend_name: str) -> _Pool:
+        """The worker pool owning ``backend_name``'s traffic (one
+        shared pool when ``pool_per_backend=False``), created lazily —
+        a service that never sees device specs never starts device
+        workers."""
+        key = backend_name if self.pool_per_backend else "*"
+        with self._pool_lock:
+            pool = self._pools.get(key)
+            if pool is None:
+                if self._closed:
+                    raise ServiceClosedError("service is closed")
+                pool = _Pool(key, CoalescingQueue(
+                    window_s=self._window_s, max_width=self._max_width,
+                    max_queue=self._max_queue, on_shed=self._note_displaced))
+                self._pools[key] = pool
+                for i in range(self.workers_per_pool):
+                    t = threading.Thread(
+                        target=self._run,
+                        args=(pool, i > 0 and self.pool_per_backend),
+                        name=f"mlego-serve-{key}-{i}", daemon=True)
+                    pool.threads.append(t)
+                    t.start()
+            return pool
+
+    def _pools_snapshot(self) -> List[_Pool]:
+        with self._pool_lock:
+            return list(self._pools.values())
 
     # ------------------------------------------------------------------
     # tenants
@@ -199,7 +333,10 @@ class MLegoService:
         """The tenant's session — lazily built, permanently wired to
         the shared store/backend/plan-cache/cost provider.  Usable
         directly for synchronous work (capital building, debugging);
-        interactive traffic should go through ``submit``."""
+        interactive traffic should go through ``submit``.  A tenant
+        evicted by the idle TTL revives here with its stashed RNG key,
+        so its result stream continues exactly where eviction cut it.
+        """
         with self._session_lock:
             sess = self._sessions.get(tenant)
             if sess is None:
@@ -210,12 +347,64 @@ class MLegoService:
                     backend=self.backend, plan_cache=self.plan_cache)
                 for b in self._extra_backends.values():
                     sess.adopt_backend(b)
+                saved = self._evicted_keys.pop(tenant, None)
+                if saved is not None:
+                    # RNG-stream continuity across eviction: the fresh
+                    # session resumes the evicted session's key
+                    with sess._key_lock:
+                        sess._key = saved
+                sess._data_epoch = self._data_epoch
                 self._sessions[tenant] = sess
+            self._last_seen[tenant] = time.monotonic()
             return sess
 
     def tenants(self) -> Tuple[str, ...]:
         with self._session_lock:
             return tuple(sorted(self._sessions))
+
+    def evict_idle(self, idle_s: Optional[float] = None) -> int:
+        """Evict tenant sessions idle longer than ``idle_s`` (defaults
+        to the service's ``tenant_ttl_s``); returns the count.  A
+        tenant with queued or executing work is skipped.  The evicted
+        session's RNG key is stashed so revival continues its stream;
+        its ``TenantStats`` survive (eviction is lifecycle, not data
+        loss)."""
+        ttl = idle_s if idle_s is not None else self.tenant_ttl_s
+        if ttl is None:
+            raise ValueError("no TTL: pass idle_s= or construct the "
+                             "service with tenant_ttl_s=")
+        now = time.monotonic()
+        evicted = 0
+        with self._session_lock:
+            for tenant in list(self._sessions):
+                if now - self._last_seen.get(tenant, now) < ttl:
+                    continue
+                with self._stats_lock:
+                    busy = self._inflight.get(tenant, 0) > 0
+                if busy:
+                    continue
+                sess = self._sessions.pop(tenant)
+                with sess._key_lock:
+                    self._evicted_keys[tenant] = sess._key
+                self._last_seen.pop(tenant, None)
+                evicted += 1
+                with self._stats_lock:
+                    self._tenant_evictions += 1
+                    ts = self._tenants.get(tenant,
+                                           TenantStats(tenant=tenant))
+                    self._tenants[tenant] = ts.bump(evictions=1)
+        return evicted
+
+    def _maybe_evict(self) -> None:
+        """Throttled idle-loop TTL sweep (any pool's idle worker)."""
+        ttl = self.tenant_ttl_s
+        if ttl is None:
+            return
+        now = time.monotonic()
+        if now - self._last_sweep < max(ttl / 4.0, self._poll_s):
+            return
+        self._last_sweep = now
+        self.evict_idle()
 
     def _shared_backend(self, name: str) -> ExecutionBackend:
         """The service-wide backend for ``name`` — the default instance
@@ -239,23 +428,79 @@ class MLegoService:
     # ------------------------------------------------------------------
     # front door
     # ------------------------------------------------------------------
-    def submit(self, spec: QuerySpec,
-               tenant: str = DEFAULT_TENANT) -> "Future":
+    def submit(self, spec: QuerySpec, *args,
+               tenant: str = DEFAULT_TENANT,
+               deadline_s: Optional[float] = None,
+               priority: int = 0,
+               max_queue_wait_s: Optional[float] = None,
+               options: Optional[SubmitOptions] = None) -> "Future":
         """Enqueue one query; resolves to its ``QueryReport``.
 
-        The future raises what the query raised (e.g. ``ValueError``
-        for an empty predicate) — never its coalescing neighbors'
-        errors."""
-        if self._queue.closed:
-            raise RuntimeError("service is closed")
+        Everything past ``spec`` is keyword-only: ``tenant`` names the
+        submitting tenant, ``deadline_s``/``priority``/
+        ``max_queue_wait_s`` are the admission-control options (or pass
+        a prebuilt ``SubmitOptions`` via ``options=`` — explicit
+        keywords win).  Raises ``ServiceClosedError`` after ``close()``
+        and ``ShedError`` when the bounded queue is full with nothing
+        lower-priority to displace.  The future raises what the query
+        raised (e.g. ``ValueError`` for an empty predicate, or
+        ``DeadlineExceededError``/``ShedError`` when admission control
+        expired it in the queue) — never its coalescing neighbors'
+        errors.
+        """
+        if args:
+            # one-release shim for the PR 5 positional-tenant call site
+            if len(args) > 1:
+                raise TypeError(
+                    f"submit() takes one positional argument (spec); "
+                    f"pass tenant= and admission options as keywords")
+            warnings.warn(
+                "positional tenant in MLegoService.submit is deprecated; "
+                "use submit(spec, tenant=...)",
+                DeprecationWarning, stacklevel=2)
+            tenant = args[0]
+        if self._closed:
+            raise ServiceClosedError("service is closed")
+        if options is None:
+            opts = SubmitOptions(deadline_s=deadline_s, priority=priority,
+                                 max_queue_wait_s=max_queue_wait_s)
+        else:
+            opts = options
+            if (deadline_s is not None or priority != 0
+                    or max_queue_wait_s is not None):
+                opts = SubmitOptions(
+                    deadline_s=deadline_s if deadline_s is not None
+                    else options.deadline_s,
+                    priority=priority if priority != 0
+                    else options.priority,
+                    max_queue_wait_s=max_queue_wait_s
+                    if max_queue_wait_s is not None
+                    else options.max_queue_wait_s)
         self.session(tenant)           # construct early: fail fast here
         if spec.backend is not None:
             # route named backends to the shared per-name instance
             # before the worker executes (registers into every session)
             self._shared_backend(spec.backend)
-        item = PendingQuery(spec=spec, tenant=tenant)
-        self._queue.put(item)
+        item = PendingQuery(spec=spec, tenant=tenant, options=opts)
+        pool = self._pool_for(spec.backend or self.backend.name)
+        try:
+            pool.queue.put(item)
+        except ShedError:
+            with self._stats_lock:
+                self._shed += 1
+                ts = self._tenants.get(tenant, TenantStats(tenant=tenant))
+                self._tenants[tenant] = ts.bump(shed=1)
+            raise
         return item.future
+
+    def _note_displaced(self, victim: PendingQuery) -> None:
+        """Queue callback: a pending query was displaced by a higher-
+        priority arrival (its future already failed with ShedError)."""
+        with self._stats_lock:
+            self._shed += 1
+            ts = self._tenants.get(victim.tenant,
+                                   TenantStats(tenant=victim.tenant))
+            self._tenants[victim.tenant] = ts.bump(shed=1)
 
     def train_range(self, lo: float, hi: float,
                     kind: Optional[str] = None,
@@ -277,11 +522,56 @@ class MLegoService:
         return path
 
     # ------------------------------------------------------------------
+    # SLO feedback
+    # ------------------------------------------------------------------
+    def _tracker(self, backend_name: str) -> LatencyTracker:
+        with self._tracker_lock:
+            tr = self._trackers.get(backend_name)
+            if tr is None:
+                tr = LatencyTracker(window=self._slo_window)
+                self._trackers[backend_name] = tr
+            return tr
+
+    def _degrade_level(self, backend_name: str) -> int:
+        if self._slo_policy is None:
+            return 0
+        with self._tracker_lock:
+            tr = self._trackers.get(backend_name)
+        return self._slo_policy.level(tr) if tr is not None else 0
+
+    def _degrade_spec(self, spec: QuerySpec, level: int,
+                      sess: MLegoSession) -> QuerySpec:
+        """The SLO loop's dial: under load, turn α toward the fast end
+        — *unless* the original-α plan is already cached (serving a
+        cached plan costs no search, and degrading it would force
+        one)."""
+        if level <= 0 or spec.alpha <= 0.0:
+            return spec
+        factor = self._slo_policy.alpha_factor(level)
+        if factor >= 1.0:
+            return spec
+        if sess.plan_cached_for(spec):
+            return spec
+        return _dc_replace(spec, alpha=spec.alpha * factor)
+
+    def _apply_slo_side_effects(self, level: int) -> None:
+        sp = self._speculator
+        if sp is not None and self._slo_policy is not None:
+            sp.set_paused(level >= self._slo_policy.pause_speculation_at)
+
+    # ------------------------------------------------------------------
     # worker loop
     # ------------------------------------------------------------------
-    def _run(self) -> None:
+    def _run(self, pool: _Pool, steal_ok: bool) -> None:
         while True:
-            batch = self._queue.drain(timeout=self._poll_s)
+            batch = pool.queue.drain(timeout=self._poll_s)
+            if not batch and steal_ok and not self._stop.is_set():
+                for other in self._pools_snapshot():
+                    if other is pool:
+                        continue
+                    batch = other.queue.steal()
+                    if batch:
+                        break
             if batch:
                 try:
                     self._execute(batch)
@@ -291,7 +581,9 @@ class MLegoService:
                     # Fail the batch's unresolved futures instead.
                     for it in batch:
                         _reject(it.future, exc)
-            elif self._stop.is_set() and len(self._queue) == 0:
+                continue
+            self._maybe_evict()
+            if self._stop.is_set() and len(pool.queue) == 0:
                 return
 
     def _group_key(self, spec: QuerySpec) -> Tuple[str, str]:
@@ -308,87 +600,152 @@ class MLegoService:
         groups: Dict[Tuple[str, str], List[PendingQuery]] = {}
         for item in batch:
             groups.setdefault(self._group_key(item.spec), []).append(item)
-        for items in groups.values():
-            self._execute_group(items)
+        for (kind, backend_name), items in groups.items():
+            self._execute_group(items, backend_name)
 
-    def _execute_group(self, items: List[PendingQuery]) -> None:
-        # transition every future PENDING -> RUNNING exactly once; a
-        # future the client cancelled while queued is dropped here (and
-        # can no longer be cancelled mid-execution), so set_result
-        # below can never race a cancellation into InvalidStateError
-        items = [it for it in items
-                 if it.future.set_running_or_notify_cancel()]
+    def _admit(self, items: List[PendingQuery]) -> List[PendingQuery]:
+        """Execution-start admission: expire deadlines and over-waited
+        queries *before* burning capacity on them, and transition the
+        survivors' futures PENDING → RUNNING exactly once (a future the
+        client cancelled while queued is dropped here and can no longer
+        be cancelled mid-execution, so set_result below can never race
+        a cancellation into InvalidStateError)."""
+        now = time.perf_counter()
+        ready: List[PendingQuery] = []
+        for it in items:
+            if it.expired(now):
+                if it.future.set_running_or_notify_cancel():
+                    _reject(it.future, DeadlineExceededError(
+                        f"deadline_s={it.options.deadline_s} elapsed "
+                        f"before execution started"))
+                    self._record_rejection(it, deadline=True)
+            elif it.overwaited(now):
+                if it.future.set_running_or_notify_cancel():
+                    _reject(it.future, ShedError(
+                        f"queued {now - it.enqueued_at:.3f}s, past "
+                        f"max_queue_wait_s={it.options.max_queue_wait_s}"))
+                    self._record_rejection(it, deadline=False)
+            elif it.future.set_running_or_notify_cancel():
+                ready.append(it)
+        return ready
+
+    def _record_rejection(self, item: PendingQuery, *,
+                          deadline: bool) -> None:
+        with self._stats_lock:
+            if deadline:
+                self._deadline_rejected += 1
+            else:
+                self._shed += 1
+            ts = self._tenants.get(item.tenant,
+                                   TenantStats(tenant=item.tenant))
+            self._tenants[item.tenant] = ts.bump(
+                **({"deadline_rejected": 1} if deadline else {"shed": 1}))
+
+    def _execute_group(self, items: List[PendingQuery],
+                       backend_name: str) -> None:
+        items = self._admit(items)
         width = len(items)
         if width == 0:
             return
-        if width == 1:
-            self._execute_serial(items)
-            return
-        # queue wait is measured to the group's own execution start —
-        # a group stuck behind its batch-mates' execution is still
-        # waiting, and the operator should see that head-of-line time
-        t0 = time.perf_counter()
-        # every shared structure (store, plan cache, device LRU,
-        # calibration) is common to all tenants, so any member's
-        # session may host the execution; each shared gap segment is
-        # trained on the stream of the first tenant (in sorted order)
-        # covering it, so a tenant's results are reproducible however
-        # its queries coalesced — group membership and arrival order
-        # can't leak into another tenant's RNG stream
-        items.sort(key=lambda it: it.tenant)
-        sessions = [self.session(it.tenant) for it in items]
-        try:
-            br = sessions[0].submit_many(
-                [it.spec for it in items],
-                next_keys=[s._next_key for s in sessions])
-        except Exception:
-            # isolate the offender: re-run the group query-by-query so
-            # only the failing spec's future carries the error
-            self._execute_serial(items)
-            return
+        level = self._degrade_level(backend_name)
+        self._apply_slo_side_effects(level)
         with self._stats_lock:
-            self._groups += 1
-            self._coalesced_groups += 1
-            self._width_sum += width
-            self._max_width = max(self._max_width, width)
-        for it, rep in zip(items, br.reports):
-            self._record(it, t0, width, br.plan_cached,
-                         model_ids=rep.model_ids)
-            _resolve(it.future, rep)
+            for it in items:
+                self._inflight[it.tenant] = \
+                    self._inflight.get(it.tenant, 0) + 1
+        try:
+            if width == 1:
+                self._execute_serial(items, level)
+                return
+            # queue wait is measured to the group's own execution start
+            # — a group stuck behind its batch-mates' execution is
+            # still waiting, and the operator should see that time
+            t0 = time.perf_counter()
+            # every shared structure (store, plan cache, device LRU,
+            # calibration) is common to all tenants, so any member's
+            # session may host the execution; each shared gap segment
+            # is trained on the stream of the first tenant (in sorted
+            # order) covering it, so a tenant's results are
+            # reproducible however its queries coalesced — group
+            # membership and arrival order can't leak into another
+            # tenant's RNG stream
+            items.sort(key=lambda it: it.tenant)
+            sessions = [self.session(it.tenant) for it in items]
+            specs = [self._degrade_spec(it.spec, level, sessions[0])
+                     for it in items]
+            try:
+                br = sessions[0].submit_many(
+                    specs, next_keys=[s._next_key for s in sessions])
+            except Exception:
+                # isolate the offender: re-run the group query-by-query
+                # so only the failing spec's future carries the error
+                self._execute_serial(items, level)
+                return
+            with self._stats_lock:
+                self._groups += 1
+                self._coalesced_groups += 1
+                self._width_sum += width
+                self._max_coalesce_width = max(self._max_coalesce_width,
+                                               width)
+            for it, rep in zip(items, br.reports):
+                rep.degraded = level
+                self._record(it, t0, width, br.plan_cached,
+                             model_ids=rep.model_ids, degraded=level)
+                _resolve(it.future, rep)
+        finally:
+            with self._stats_lock:
+                for it in items:
+                    n = self._inflight.get(it.tenant, 1) - 1
+                    if n <= 0:
+                        self._inflight.pop(it.tenant, None)
+                    else:
+                        self._inflight[it.tenant] = n
 
-    def _execute_serial(self, items: List[PendingQuery]) -> None:
+    def _execute_serial(self, items: List[PendingQuery],
+                        level: int = 0) -> None:
         """Width-1 groups and the failed-batch isolation retry.  The
-        futures are already RUNNING (gated in ``_execute_group``)."""
+        futures are already RUNNING (gated in ``_admit``)."""
         for it in items:
             t0 = time.perf_counter()     # this query's own start
             with self._stats_lock:
                 self._groups += 1
                 self._width_sum += 1
-                self._max_width = max(self._max_width, 1)
+                self._max_coalesce_width = max(self._max_coalesce_width, 1)
+            sess = self.session(it.tenant)
             try:
-                rep = self.session(it.tenant).submit(it.spec)
+                rep = sess.submit(self._degrade_spec(it.spec, level, sess))
             except Exception as exc:
                 self._record(it, t0, 1, False, error=True)
                 _reject(it.future, exc)
             else:
+                rep.degraded = level
                 self._record(it, t0, 1, rep.plan_cached,
-                             model_ids=rep.model_ids)
+                             model_ids=rep.model_ids, degraded=level)
                 _resolve(it.future, rep)
 
     def _record(self, item: PendingQuery, t0: float, width: int,
                 plan_cached: bool, error: bool = False,
-                model_ids: Tuple[int, ...] = ()) -> None:
+                model_ids: Tuple[int, ...] = (),
+                degraded: int = 0) -> None:
+        now = time.perf_counter()
         wait = max(t0 - item.enqueued_at, 0.0)
         with self._stats_lock:
             self._queries += 1
             if error:
                 self._errors += 1
+            if degraded > 0 and not error:
+                self._degraded += 1
             ts = self._tenants.get(item.tenant,
                                    TenantStats(tenant=item.tenant))
             self._tenants[item.tenant] = ts.absorb(
                 wait_s=wait, width=width, plan_cached=plan_cached,
-                error=error)
+                error=error, degraded=degraded > 0 and not error)
+        self._last_seen[item.tenant] = time.monotonic()
         if not error:
+            # client-observed latency (enqueue → answer) feeds the SLO
+            # window of the backend that served the query
+            self._tracker(item.spec.backend or self.backend.name) \
+                .observe(now - item.enqueued_at)
             spec = item.spec
             self._query_log.append(QueryLogEntry(
                 tenant=item.tenant,
@@ -415,6 +772,7 @@ class MLegoService:
         can never cover a range whose tokens the index doesn't count."""
         with self._session_lock:
             self.corpus = corpus
+            self._data_epoch += 1
             for sess in self._sessions.values():
                 sess.extend_corpus(corpus)
 
@@ -431,8 +789,8 @@ class MLegoService:
         """
         if self._ingest is not None:
             raise RuntimeError("ingest pipeline already attached")
-        if self._queue.closed:
-            raise RuntimeError("service is closed")
+        if self._closed:
+            raise ServiceClosedError("service is closed")
         kind = resolve_kind(kind or self.kind)
         compactor = Compactor(self.store, self.cfg, compaction,
                               kind=kind) if compaction is not None else None
@@ -456,11 +814,14 @@ class MLegoService:
                           start: bool = True) -> SpeculativeTrainer:
         """Start workload-driven gap pre-training over the query log
         (once).  ``start=False`` skips the background thread — call
-        ``scan_once`` manually (tests, benchmarks)."""
+        ``scan_once`` manually (tests, benchmarks).  Under SLO
+        degradation level ≥ ``pause_speculation_at`` the trainer is
+        paused: overload capacity goes to answering, not pre-training.
+        """
         if self._speculator is not None:
             raise RuntimeError("speculative trainer already attached")
-        if self._queue.closed:
-            raise RuntimeError("service is closed")
+        if self._closed:
+            raise ServiceClosedError("service is closed")
         self._speculator = SpeculativeTrainer(
             self, window_s=window_s, min_count=min_count, margin=margin,
             poll_s=poll_s, start=start)
@@ -471,6 +832,18 @@ class MLegoService:
     # ------------------------------------------------------------------
     def report(self) -> ServiceReport:
         cal = getattr(self.cost, "calibration", None)
+        with self._tracker_lock:
+            trackers = dict(self._trackers)
+        slo = {
+            name: BackendSLO(
+                p50_s=tr.p50, p95_s=tr.p95, p99_s=tr.p99,
+                samples=len(tr),
+                level=self._slo_policy.level(tr)
+                if self._slo_policy is not None else 0)
+            for name, tr in trackers.items()}
+        depth = {p.name: len(p.queue) for p in self._pools_snapshot()}
+        with self._session_lock:
+            active = len(self._sessions)
         with self._stats_lock:
             return ServiceReport(
                 tenants=dict(self._tenants),
@@ -478,7 +851,7 @@ class MLegoService:
                 errors=self._errors,
                 groups=self._groups,
                 coalesced_groups=self._coalesced_groups,
-                max_coalesce_width=self._max_width,
+                max_coalesce_width=self._max_coalesce_width,
                 width_sum=self._width_sum,
                 plan_cache_hits=self.plan_cache.hits,
                 plan_cache_misses=self.plan_cache.misses,
@@ -486,6 +859,13 @@ class MLegoService:
                 backend=self.backend.stats,
                 calibration_samples=len(cal) if cal is not None else 0,
                 store_bytes=self.store.nbytes(),
+                shed=self._shed,
+                deadline_rejected=self._deadline_rejected,
+                degraded_queries=self._degraded,
+                tenant_evictions=self._tenant_evictions,
+                active_sessions=active,
+                queue_depth=depth,
+                slo=slo,
                 ingest=self._ingest.report()
                 if self._ingest is not None else None,
                 speculation=self._speculator.report()

@@ -1,14 +1,18 @@
 """End-to-end analytic queries: merged models vs from-scratch (the
-paper's DP metric), store growth, batch path."""
+paper's DP metric), store growth, batch path.
+
+Migrated from the retired ``QueryEngine`` facade to the canonical
+``MLegoSession`` API; a single shim test pins the deprecation alias.
+"""
 import numpy as np
 import pytest
 
 import jax
 
+from repro.api import MLegoSession, QuerySpec
 from repro.configs.lda_default import LDAConfig
 from repro.core.lda import log_predictive_probability
 from repro.core.plans import Interval
-from repro.core.query import QueryEngine
 from repro.core.store import ModelStore
 from repro.core.vb import vb_fit
 from repro.data.corpus import doc_term_matrix, make_corpus, train_test_split
@@ -25,58 +29,87 @@ def world():
     return train, test, beta
 
 
+def _session(train, kind="vb"):
+    return MLegoSession(train, CFG, kind=kind, seed=0)
+
+
 @pytest.mark.parametrize("kind", ["vb", "gs"])
 def test_query_merge_close_to_scratch(world, kind):
     train, test, _ = world
-    engine = QueryEngine(train, ModelStore(), CFG, kind=kind, seed=0)
+    sess = _session(train, kind)
     # materialize two halves, then query the union -> pure merge plan
-    engine.train_range(0.0, 170.0)
-    engine.train_range(170.0, 350.0)
-    res = engine.execute(Interval(0.0, 350.0), alpha=0.5)
-    assert res.n_trained_tokens == 0, "full coverage -> no training"
-    assert res.n_merged == 2
+    sess.train_range(0.0, 170.0)
+    sess.train_range(170.0, 350.0)
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 350.0), alpha=0.5))
+    assert rep.n_trained_tokens == 0, "full coverage -> no training"
+    assert rep.n_merged == 2
 
     x_test = doc_term_matrix(test)
-    lpp_merged = log_predictive_probability(res.beta, x_test)
+    lpp_merged = log_predictive_probability(rep.beta, x_test)
 
     # from-scratch reference on the same range
-    eng2 = QueryEngine(train, ModelStore(), CFG, kind=kind, seed=0)
-    scratch = eng2.execute(Interval(0.0, 350.0), alpha=0.5)
+    scratch = _session(train, kind).submit(
+        QuerySpec(sigma=Interval(0.0, 350.0), alpha=0.5))
     lpp_scratch = log_predictive_probability(scratch.beta, x_test)
 
     dp = abs(lpp_scratch - lpp_merged)
     # the paper's observed DP is small; generous envelope for tiny corpora
     assert dp < 0.35, (lpp_merged, lpp_scratch)
-    assert np.isfinite(res.beta).all()
-    np.testing.assert_allclose(res.beta.sum(1), 1.0, rtol=1e-4)
+    assert np.isfinite(rep.beta).all()
+    np.testing.assert_allclose(rep.beta.sum(1), 1.0, rtol=1e-4)
 
 
 def test_store_grows_with_queries(world):
     train, _, _ = world
-    engine = QueryEngine(train, ModelStore(), CFG, kind="vb", seed=0)
-    assert len(engine.store) == 0
-    engine.execute(Interval(0.0, 100.0), alpha=0.0)
-    n1 = len(engine.store)
+    sess = _session(train)
+    assert len(sess.store) == 0
+    sess.submit(QuerySpec(sigma=Interval(0.0, 100.0), alpha=0.0))
+    n1 = len(sess.store)
     assert n1 >= 1
     # second query over a covered range reuses, trains only the gap
-    res = engine.execute(Interval(0.0, 150.0), alpha=0.0)
-    assert any(m.o == Interval(0.0, 100.0) for m in res.plan.plan) or \
-        res.n_trained_tokens > 0
+    rep = sess.submit(QuerySpec(sigma=Interval(0.0, 150.0), alpha=0.0))
+    assert any(m.o == Interval(0.0, 100.0) for m in rep.plan.plan) or \
+        rep.n_trained_tokens > 0
 
 
 def test_batch_execution_consistent(world):
     train, test, _ = world
-    engine = QueryEngine(train, ModelStore(), CFG, kind="vb", seed=0)
-    engine.train_range(0.0, 120.0)
+    sess = _session(train)
+    sess.train_range(0.0, 120.0)
     queries = [Interval(0.0, 200.0), Interval(100.0, 300.0)]
-    results, opt = engine.execute_batch(queries)
-    assert len(results) == 2
-    assert opt.benefit >= 0.0
+    br = sess.submit_many([QuerySpec(sigma=q) for q in queries])
+    assert len(br) == 2
+    assert br.opt.benefit >= 0.0
     x_test = doc_term_matrix(test)
-    for r in results:
+    for r in br:
         assert np.isfinite(r.beta).all()
         lpp = log_predictive_probability(r.beta, x_test)
         assert lpp > -np.log(CFG.vocab_size) * 1.5   # sanity: beats uniform-ish
+
+
+def test_query_engine_alias_warns_and_delegates(world):
+    """The retired facade stays one release as a deprecation shim: it
+    warns at construction, is-a MLegoSession, and execute/execute_batch
+    route through submit/submit_many."""
+    from repro.core.query import QueryEngine
+
+    train, _, _ = world
+    with pytest.warns(DeprecationWarning, match="QueryEngine is deprecated"):
+        engine = QueryEngine(train, ModelStore(), CFG, kind="vb", seed=0)
+    assert isinstance(engine, MLegoSession)
+    engine.train_range(0.0, 170.0)
+    res = engine.execute(Interval(0.0, 350.0), alpha=0.5)
+    ref = _session(train)
+    ref.train_range(0.0, 170.0)
+    rep = ref.submit(QuerySpec(sigma=Interval(0.0, 350.0), alpha=0.5))
+    np.testing.assert_array_equal(res.beta, rep.beta)
+    assert res.n_trained_tokens == rep.n_trained_tokens
+
+    results, opt = engine.execute_batch([Interval(0.0, 200.0)])
+    assert len(results) == 1
+    assert opt.benefit >= 0.0
+    assert engine.last_batch_report is not None
+    assert engine.last_batch_report.reports[0] is results[0]
 
 
 def test_lda_recovers_topics_better_than_random(world):

@@ -1,0 +1,588 @@
+"""Production hardening of the serving layer: bounded-queue admission
+control (shed / displacement / deadlines), cancellation races, the SLO
+degradation loop, tenant lifecycle (eviction + RNG-continuous
+revival), per-backend worker-pool isolation, and the keyword-only
+front door's one-release positional-tenant shim."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Interval,
+    QuerySpec,
+    get_trainer,
+    register_trainer,
+)
+from repro.configs.lda_default import LDAConfig
+from repro.data.corpus import make_corpus, train_test_split
+from repro.serve import (
+    CoalescingQueue,
+    DeadlineExceededError,
+    LatencyTracker,
+    MLegoService,
+    PendingQuery,
+    ServiceClosedError,
+    ShedError,
+    SLOPolicy,
+    SubmitOptions,
+)
+
+CFG = LDAConfig(n_topics=6, vocab_size=150, alpha=0.5, eta=0.05,
+                max_iters=8, e_step_iters=5, gibbs_sweeps=6)
+
+
+@pytest.fixture(scope="module")
+def train():
+    corpus, _ = make_corpus(300, CFG.vocab_size, CFG.n_topics,
+                            mean_doc_len=30, seed=3)
+    train, _ = train_test_split(corpus, test_frac=0.1, seed=1)
+    return train
+
+
+def _hi(train):
+    return float(train.attr[-1]) + 1.0
+
+
+def _wait(cond, timeout=10.0, msg="condition"):
+    end = time.monotonic() + timeout
+    while time.monotonic() < end:
+        if cond():
+            return
+        time.sleep(0.005)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+class _gated_trainer:
+    """Context manager registering a trainer kind that blocks on a
+    gate — lets tests hold a worker mid-execution deterministically."""
+
+    def __init__(self, name="gate_vb"):
+        self.name = name
+        self.gate = threading.Event()
+        self.calls = 0
+
+    def __enter__(self):
+        def fn(corpus, cfg, key, _self=self):
+            _self.calls += 1
+            assert _self.gate.wait(timeout=60), "test gate never opened"
+            return get_trainer("vb")(corpus, cfg, key)
+
+        register_trainer(self.name, fn, merge="vb")
+        return self
+
+    def __exit__(self, *exc):
+        self.gate.set()
+        from repro.api import trainers as tr
+        tr._TRAINERS.pop(self.name, None)
+        tr._MERGES.pop(self.name, None)
+
+
+def _pending(lo=0.0, hi=10.0, tenant="t", **opts):
+    return PendingQuery(spec=QuerySpec(sigma=Interval(lo, hi)),
+                        tenant=tenant, options=SubmitOptions(**opts))
+
+
+# ---------------------------------------------------------------------------
+# SubmitOptions / queue-level admission control (no threads)
+# ---------------------------------------------------------------------------
+
+def test_submit_options_validation():
+    with pytest.raises(ValueError, match="deadline_s"):
+        SubmitOptions(deadline_s=0.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        SubmitOptions(deadline_s=-1.0)
+    with pytest.raises(ValueError, match="max_queue_wait_s"):
+        SubmitOptions(max_queue_wait_s=-0.1)
+    assert SubmitOptions().priority == 0
+
+
+def test_queue_rejects_bad_max_queue():
+    with pytest.raises(ValueError, match="max_queue"):
+        CoalescingQueue(max_queue=0)
+
+
+def test_bounded_queue_sheds_equal_priority_arrival():
+    q = CoalescingQueue(window_s=0.0, max_queue=2)
+    q.put(_pending(lo=0.0))
+    q.put(_pending(lo=1.0))
+    with pytest.raises(ShedError, match="queue full"):
+        q.put(_pending(lo=2.0))
+    # the queued items were untouched
+    assert len(q) == 2
+    assert q.shed == 0, "rejection at the submitter is not a displacement"
+
+
+def test_bounded_queue_displaces_youngest_lower_priority():
+    displaced = []
+    q = CoalescingQueue(window_s=0.0, max_queue=2,
+                        on_shed=displaced.append)
+    old = _pending(lo=0.0)
+    young = _pending(lo=1.0)
+    q.put(old)
+    q.put(young)
+    urgent = _pending(lo=2.0, priority=5)
+    q.put(urgent)                         # full: displaces the youngest
+    assert len(q) == 2
+    assert q.shed == 1
+    assert displaced == [young]
+    with pytest.raises(ShedError, match="displaced"):
+        young.future.result(timeout=0)
+    # priority-first drain: the urgent arrival leads, FIFO below it
+    batch = q.drain(timeout=0.05)
+    assert [p.seq for p in batch] == [urgent.seq, old.seq]
+
+
+def test_queue_drains_priority_first_fifo_within():
+    q = CoalescingQueue(window_s=0.0, max_width=8)
+    a = _pending(lo=0.0, priority=0)
+    b = _pending(lo=1.0, priority=2)
+    c = _pending(lo=2.0, priority=2)
+    d = _pending(lo=3.0, priority=1)
+    for p in (a, b, c, d):
+        q.put(p)
+    batch = q.drain(timeout=0.05)
+    assert [p.seq for p in batch] == [b.seq, c.seq, d.seq, a.seq]
+
+
+def test_steal_takes_pending_without_waiting():
+    q = CoalescingQueue(window_s=10.0, max_width=8)   # huge window
+    q.put(_pending(lo=0.0))
+    q.put(_pending(lo=1.0))
+    t0 = time.perf_counter()
+    batch = q.steal()
+    assert len(batch) == 2
+    assert time.perf_counter() - t0 < 1.0, "steal must not hold a window"
+    assert q.steal() == []
+
+
+def test_steal_yields_to_active_drain():
+    """A thief never races the home collector: while a windowed drain
+    is in progress, steal returns [] immediately."""
+    q = CoalescingQueue(window_s=0.5, max_width=8)
+    started = threading.Event()
+    out = {}
+
+    def home():
+        started.set()
+        out["batch"] = q.drain(timeout=5.0)
+
+    t = threading.Thread(target=home)
+    t.start()
+    started.wait(timeout=5)
+    time.sleep(0.05)                     # home worker is now blocked inside
+    q.put(_pending(lo=0.0))              # wakes the collector
+    assert q.steal() == [], "mid-drain steal must back off"
+    t.join(timeout=5)
+    assert len(out["batch"]) == 1, "the home drain keeps the item"
+
+
+# ---------------------------------------------------------------------------
+# service-level backpressure (gated worker ⇒ deterministic backlog)
+# ---------------------------------------------------------------------------
+
+def _svc_kwargs(gate_kind):
+    return dict(kind=gate_kind, window_s=0.0, max_width=1,
+                workers_per_pool=1, poll_s=0.005)
+
+
+def _volatile(hi, lo=0.0, **kw):
+    return QuerySpec(sigma=Interval(lo, hi), materialize="volatile", **kw)
+
+
+def test_service_sheds_burst_and_displaces_by_priority(train):
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, max_queue=2,
+                          **_svc_kwargs(g.name)) as svc:
+            f1 = svc.submit(_volatile(hi), tenant="a")
+            _wait(lambda: g.calls >= 1, msg="worker to pick up f1")
+            f2 = svc.submit(_volatile(hi), tenant="b")
+            f3 = svc.submit(_volatile(hi), tenant="c")
+            with pytest.raises(ShedError, match="queue full"):
+                svc.submit(_volatile(hi), tenant="d")
+            # a higher-priority arrival displaces the youngest pending
+            f_hi = svc.submit(_volatile(hi), tenant="vip", priority=3)
+            with pytest.raises(ShedError, match="displaced"):
+                f3.result(timeout=5)
+            g.gate.set()
+            for f in (f1, f2, f_hi):
+                assert np.isfinite(f.result(timeout=60).beta).all()
+            rep = svc.report()
+    assert rep.shed == 2                     # one rejected + one displaced
+    assert rep.tenant("d").shed == 1
+    assert rep.tenant("c").shed == 1
+    assert rep.shed_rate == pytest.approx(2 / 5)
+    assert rep.submitted == 5
+
+
+def test_deadline_rejected_in_queue_but_honored_when_served(train):
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, **_svc_kwargs(g.name)) as svc:
+            f1 = svc.submit(_volatile(hi), tenant="a")
+            _wait(lambda: g.calls >= 1, msg="worker to pick up f1")
+            doomed = svc.submit(_volatile(hi), tenant="b",
+                                deadline_s=0.05)
+            roomy = svc.submit(_volatile(hi), tenant="c", deadline_s=60.0)
+            time.sleep(0.1)              # the short deadline expires queued
+            g.gate.set()
+            with pytest.raises(DeadlineExceededError):
+                doomed.result(timeout=60)
+            assert np.isfinite(f1.result(timeout=60).beta).all()
+            assert np.isfinite(roomy.result(timeout=60).beta).all(), \
+                "a deadline with headroom must not reject"
+            rep = svc.report()
+    assert rep.deadline_rejected == 1
+    assert rep.tenant("b").deadline_rejected == 1
+    assert rep.shed_rate == pytest.approx(1 / 3)
+
+
+def test_max_queue_wait_sheds_stale_query(train):
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, **_svc_kwargs(g.name)) as svc:
+            f1 = svc.submit(_volatile(hi), tenant="a")
+            _wait(lambda: g.calls >= 1, msg="worker to pick up f1")
+            stale = svc.submit(_volatile(hi), tenant="b",
+                               max_queue_wait_s=0.05)
+            time.sleep(0.1)
+            g.gate.set()
+            with pytest.raises(ShedError, match="max_queue_wait_s"):
+                stale.result(timeout=60)
+            assert np.isfinite(f1.result(timeout=60).beta).all()
+            rep = svc.report()
+    assert rep.shed == 1
+
+
+def test_cancellation_races_admission_and_shed(train):
+    """A future cancelled while queued is dropped at admission; one
+    cancelled *and* displaced stays cancelled — either way the worker
+    survives and keeps serving."""
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, max_queue=2,
+                          **_svc_kwargs(g.name)) as svc:
+            f1 = svc.submit(_volatile(hi), tenant="a")
+            _wait(lambda: g.calls >= 1, msg="worker to pick up f1")
+            doomed = svc.submit(_volatile(hi), tenant="b")
+            assert doomed.cancel(), "a queued future must be cancellable"
+            filler = svc.submit(_volatile(hi), tenant="c")
+            # displacement hits the cancelled future's slot tolerantly
+            vip = svc.submit(_volatile(hi), tenant="vip", priority=1)
+            g.gate.set()
+            assert np.isfinite(f1.result(timeout=60).beta).all()
+            assert np.isfinite(vip.result(timeout=60).beta).all()
+            assert doomed.cancelled()
+            # the pool survived the races: it still answers
+            again = svc.submit(_volatile(hi), tenant="a")
+            assert np.isfinite(again.result(timeout=60).beta).all()
+
+
+def test_submit_after_close_raises_typed_error(train):
+    svc = MLegoService(train, CFG, window_s=0.0)
+    svc.close()
+    with pytest.raises(ServiceClosedError):
+        svc.submit(QuerySpec(sigma=Interval(0.0, 10.0)))
+
+
+# ---------------------------------------------------------------------------
+# keyword-only front door
+# ---------------------------------------------------------------------------
+
+def test_positional_tenant_warns_but_works(train):
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.0) as svc:
+        svc.train_range(0.0, hi)
+        with pytest.warns(DeprecationWarning, match="positional tenant"):
+            fut = svc.submit(QuerySpec(sigma=Interval(0.0, hi)), "ana")
+        assert np.isfinite(fut.result(timeout=60).beta).all()
+        with pytest.raises(TypeError, match="keyword"):
+            svc.submit(QuerySpec(sigma=Interval(0.0, hi)), "ana", 1.0)
+        rep = svc.report()
+    assert rep.tenant("ana").queries == 1
+
+
+def test_options_object_merges_with_explicit_keywords(train):
+    hi = _hi(train)
+    base = SubmitOptions(priority=2, deadline_s=60.0)
+    with MLegoService(train, CFG, window_s=0.0) as svc:
+        svc.train_range(0.0, hi)
+        fut = svc.submit(QuerySpec(sigma=Interval(0.0, hi)),
+                         tenant="ana", options=base,
+                         max_queue_wait_s=30.0)
+        assert np.isfinite(fut.result(timeout=60).beta).all()
+
+
+# ---------------------------------------------------------------------------
+# SLO degradation loop
+# ---------------------------------------------------------------------------
+
+def test_latency_tracker_percentiles():
+    tr = LatencyTracker(window=8)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        tr.observe(v)
+    assert tr.p50 == 3.0                  # nearest-rank on [1,2,3,4]
+    assert tr.p95 == 4.0
+    assert len(tr) == 4
+    for v in (10.0,) * 8:
+        tr.observe(v)                     # window bounds: old values age out
+    assert tr.p50 == 10.0
+    assert LatencyTracker().p95 == 0.0
+
+
+def test_slo_policy_levels_and_guards():
+    pol = SLOPolicy(p95_slo_s=1.0, min_samples=2)
+    tr = LatencyTracker()
+    tr.observe(100.0)
+    assert pol.level(tr) == 0, "min_samples guards a trivial window"
+    tr.observe(100.0)
+    assert pol.level(tr) == 3
+    slow = LatencyTracker()
+    for v in (1.5, 1.5):
+        slow.observe(v)
+    assert pol.level(slow) == 1
+    assert pol.alpha_factor(0) == 1.0
+    assert pol.alpha_factor(1) == 0.5
+    assert pol.alpha_factor(3) == 0.0
+    with pytest.raises(ValueError, match="p95_slo_s"):
+        SLOPolicy(p95_slo_s=0.0)
+    with pytest.raises(ValueError, match="ordered"):
+        SLOPolicy(p95_slo_s=1.0, degrade_at=3.0, heavy_at=2.0)
+
+
+def test_slo_degrades_alpha_pauses_speculation_spares_cached_plans(train):
+    hi = _hi(train)
+    # an impossible SLO: every answered query blows it, so the second
+    # query onward runs at the maximum degradation level
+    policy = SLOPolicy(p95_slo_s=1e-7, min_samples=1)
+    with MLegoService(train, CFG, window_s=0.0, slo=policy) as svc:
+        sp = svc.attach_speculator(start=False)
+        svc.train_range(0.0, hi)
+        spec_a = QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)
+        r1 = svc.submit(spec_a, tenant="ana").result(timeout=60)
+        assert r1.degraded == 0, "cold window: no degradation"
+        assert r1.spec.alpha == 1.0
+        # different predicate, nothing cached: α is forced down
+        # (volatile: a persisted gap model would invalidate the plan
+        # cache and defeat the cached-plan probe below)
+        r2 = svc.submit(QuerySpec(sigma=Interval(0.0, hi / 2), alpha=1.0,
+                                  materialize="volatile"),
+                        tenant="ana").result(timeout=60)
+        assert r2.degraded == 3
+        assert r2.spec.alpha == 0.0, "level 3 forces the fast plan"
+        # the original-α plan for spec_a IS cached: degradation spares it
+        r3 = svc.submit(spec_a, tenant="ana").result(timeout=60)
+        assert r3.degraded == 3
+        assert r3.spec.alpha == 1.0, \
+            "a cached original-α plan must be served, not re-planned"
+        assert r3.plan_cached
+        # side effects: speculation parked, level on the report
+        assert sp.paused
+        assert sp.scan_once() == 0, "a paused speculator must not train"
+        rep = svc.report()
+    assert rep.degraded_queries == 2
+    assert rep.degraded_frac == pytest.approx(2 / 3)
+    assert rep.slo["host"].level == 3
+    assert rep.slo["host"].samples == 3
+    assert rep.speculation.paused
+    assert rep.speculation.pauses >= 1
+
+
+def test_no_slo_policy_means_no_degradation(train):
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.0) as svc:
+        svc.train_range(0.0, hi)
+        for _ in range(3):
+            r = svc.submit(QuerySpec(sigma=Interval(0.0, hi), alpha=1.0)) \
+                .result(timeout=60)
+            assert r.degraded == 0
+        rep = svc.report()
+    assert rep.degraded_queries == 0
+    assert rep.slo["host"].level == 0
+    assert rep.slo["host"].samples == 3
+
+
+# ---------------------------------------------------------------------------
+# tenant lifecycle: idle-TTL eviction, RNG-continuous revival
+# ---------------------------------------------------------------------------
+
+def _two_answers(svc, hi, *, evict):
+    spec = QuerySpec(sigma=Interval(hi / 2, hi), materialize="volatile")
+    r1 = svc.submit(spec, tenant="ana").result(timeout=60)
+    if evict:
+        before = svc.session("ana")
+        assert svc.evict_idle(idle_s=0.0) == 1
+        assert "ana" not in svc.tenants()
+        assert svc.session("ana") is not before, "revival builds afresh"
+    r2 = svc.submit(spec, tenant="ana").result(timeout=60)
+    return r1, r2
+
+
+def test_eviction_preserves_rng_stream_and_stats(train):
+    """A revived tenant continues its exact RNG stream: the answer
+    sequence matches an identically-seeded service that never evicted."""
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.0, seed=7) as interrupted:
+        interrupted.train_range(0.0, hi / 2, tenant="ana")
+        a1, a2 = _two_answers(interrupted, hi, evict=True)
+        rep = interrupted.report()
+    with MLegoService(train, CFG, window_s=0.0, seed=7) as smooth:
+        smooth.train_range(0.0, hi / 2, tenant="ana")
+        b1, b2 = _two_answers(smooth, hi, evict=False)
+    np.testing.assert_array_equal(a1.beta, b1.beta)
+    np.testing.assert_array_equal(
+        a2.beta, b2.beta)                 # the continuity claim
+    assert rep.tenant_evictions == 1
+    assert rep.tenant("ana").evictions == 1
+    assert rep.tenant("ana").queries == 2, "stats survive eviction"
+
+
+def test_ttl_sweep_runs_from_idle_workers(train):
+    hi = _hi(train)
+    with MLegoService(train, CFG, window_s=0.0, poll_s=0.005,
+                      tenant_ttl_s=0.05) as svc:
+        svc.train_range(0.0, hi, tenant="ana")
+        _wait(lambda: "ana" not in svc.tenants(), timeout=10.0,
+              msg="idle worker to sweep the idle tenant")
+        assert svc.report().tenant_evictions >= 1
+        # the tenant is still usable — it just revives
+        r = svc.submit(QuerySpec(sigma=Interval(0.0, hi)),
+                       tenant="ana").result(timeout=60)
+        assert np.isfinite(r.beta).all()
+
+
+def test_busy_tenant_is_not_evicted(train):
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, **_svc_kwargs(g.name)) as svc:
+            fut = svc.submit(_volatile(hi), tenant="ana")
+            _wait(lambda: g.calls >= 1, msg="worker to pick up the query")
+            assert svc.evict_idle(idle_s=0.0) == 0, \
+                "a tenant with in-flight work must be skipped"
+            assert "ana" in svc.tenants()
+            g.gate.set()
+            assert np.isfinite(fut.result(timeout=60).beta).all()
+
+
+def test_evict_requires_some_ttl(train):
+    with MLegoService(train, CFG, window_s=0.0) as svc:
+        with pytest.raises(ValueError, match="TTL"):
+            svc.evict_idle()
+    with pytest.raises(ValueError, match="tenant_ttl_s"):
+        MLegoService(train, CFG, tenant_ttl_s=-1.0)
+    with pytest.raises(ValueError, match="workers_per_pool"):
+        MLegoService(train, CFG, workers_per_pool=0)
+
+
+# ---------------------------------------------------------------------------
+# per-backend worker pools
+# ---------------------------------------------------------------------------
+
+def test_pools_isolate_host_from_stalled_device_traffic(train):
+    """A stalled device-pool query must not delay host answers (the
+    pre-hardening single loop serialized them)."""
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, window_s=0.0, poll_s=0.005,
+                          workers_per_pool=1) as svc:
+            svc.train_range(0.0, hi)
+            stalled = svc.submit(
+                QuerySpec(sigma=Interval(hi / 2, hi), kind=g.name,
+                          backend="device", materialize="volatile"),
+                tenant="gpu")
+            _wait(lambda: g.calls >= 1, msg="device pool to stall")
+            host = svc.submit(QuerySpec(sigma=Interval(0.0, hi)),
+                              tenant="cpu")
+            rep = host.result(timeout=60)   # resolves while device stalls
+            assert np.isfinite(rep.beta).all()
+            assert not stalled.done(), \
+                "the device query must still be gated when host answers"
+            g.gate.set()
+            assert np.isfinite(stalled.result(timeout=120).beta).all()
+            depth = svc.report().queue_depth
+    assert set(depth) == {"host", "device"}, "one pool per backend name"
+
+
+def test_single_loop_baseline_serializes(train):
+    """pool_per_backend=False restores the pre-hardening topology: one
+    queue, one loop — a stalled query heads-of-line blocks everyone
+    (this is the baseline the bench compares pools against)."""
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, window_s=0.0, poll_s=0.005,
+                          workers_per_pool=1,
+                          pool_per_backend=False) as svc:
+            svc.train_range(0.0, hi)
+            stalled = svc.submit(
+                QuerySpec(sigma=Interval(hi / 2, hi), kind=g.name,
+                          backend="device", materialize="volatile"),
+                tenant="gpu")
+            _wait(lambda: g.calls >= 1, msg="the single loop to stall")
+            host = svc.submit(QuerySpec(sigma=Interval(0.0, hi)),
+                              tenant="cpu")
+            time.sleep(0.2)
+            assert not host.done(), \
+                "single-loop topology serializes host behind device"
+            g.gate.set()
+            assert np.isfinite(host.result(timeout=60).beta).all()
+            assert np.isfinite(stalled.result(timeout=120).beta).all()
+            assert set(svc.report().queue_depth) == {"*"}
+
+
+def test_idle_workers_steal_across_pools(train):
+    """With >= 2 workers per pool, a host sibling steals pending device
+    work while the device home worker is stalled."""
+    hi = _hi(train)
+    with _gated_trainer() as g:
+        with MLegoService(train, CFG, window_s=0.0, poll_s=0.005,
+                          workers_per_pool=2, max_width=1) as svc:
+            svc.train_range(0.0, hi)
+            stalled = svc.submit(
+                QuerySpec(sigma=Interval(hi / 2, hi), kind=g.name,
+                          backend="device", materialize="volatile"),
+                tenant="gpu")
+            _wait(lambda: g.calls >= 1, msg="device home worker to stall")
+            # pending device work with its home worker stalled: only a
+            # thief can answer it while the gate is closed
+            quick = svc.submit(QuerySpec(sigma=Interval(0.0, hi),
+                                         backend="device"),
+                               tenant="gpu2")
+            rep = quick.result(timeout=60)
+            assert np.isfinite(rep.beta).all()
+            assert not stalled.done()
+            g.gate.set()
+            assert np.isfinite(stalled.result(timeout=120).beta).all()
+
+
+# ---------------------------------------------------------------------------
+# shared cost provider under concurrent pools
+# ---------------------------------------------------------------------------
+
+def test_train_backend_pricing_is_thread_local():
+    """Concurrent workers price gap training for different backends on
+    one shared provider — the routing attribute must not leak between
+    threads."""
+    from repro.core.cost import CalibratedCostModel
+
+    cost = CalibratedCostModel()
+    assert cost.train_backend == "host", "fresh thread defaults to host"
+    seen = {}
+    ready = threading.Barrier(2)
+
+    def worker(name):
+        cost.set_train_backend(name)
+        ready.wait(timeout=5)            # both threads have now written
+        time.sleep(0.02)
+        seen[name] = cost.train_backend
+
+    ts = [threading.Thread(target=worker, args=(n,))
+          for n in ("host", "device")]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert seen == {"host": "host", "device": "device"}
+    assert cost.train_backend == "host", \
+        "other threads' writes must not leak into this one"
