@@ -14,6 +14,9 @@
                                  cache reuse
   gibbs_gap           (ours)     host exact CGS scan vs doc-blocked
                                  device sweep (latency + quality delta)
+  merge_shard         (ours)     vocab-sharded ragged merge vs single
+                                 device (launches, pad rows, per-device
+                                 bytes, wall) over 8 forced host devices
   ingest              (ours)     streaming ingestion: freshness lag,
                                  speculative pre-training A/B (p50 +
                                  hit rate), compaction budget/quality
@@ -167,9 +170,9 @@ def main() -> None:
         for provider, mean_s, total, hits, rate in prov_rows:
             print(f"{provider},{mean_s:.4f},{total:.4f},{hits},{rate:.3f}")
         pad = session_bench.run_padding(n_docs=n_docs, quick=args.quick)
-        print(f"# padding: bucketed {pad['pad_rows_bucketed']} rows vs "
-              f"widest {pad['pad_rows_widest']} rows "
-              f"(parts {pad['part_counts']})")
+        print(f"# padding: ragged {pad['pad_rows_ragged']} rows vs "
+              f"bucketed {pad['pad_rows_bucketed']} vs widest "
+              f"{pad['pad_rows_widest']} (parts {pad['part_counts']})")
         out["session"] = {"rows": [list(r) for r in rows],
                           "batch": list(batch_row),
                           "device_cache": [list(r) for r in dev_rows],
@@ -233,6 +236,20 @@ def main() -> None:
                   f"{r['lpp_blocked']:.4f},{r['lpp_delta']:.4f},"
                   f"{r['top_word_overlap']:.3f}")
         out["gibbs_gap"] = {"rows": gg_rows}
+
+    if want("merge_shard"):
+        _section("merge_shard (vocab-sharded ragged merge, 8 devices)")
+        from benchmarks import merge_shard_bench
+        msd = merge_shard_bench.run(quick=args.quick)
+        print("mode,shards,launches,pad_rows,per_device_bytes,wall_s")
+        for label in ("single", "sharded"):
+            m = msd[label]
+            print(f"{label},{m['shards']},{m['launches']},{m['pad_rows']},"
+                  f"{m['per_device_bytes']},{m['wall_s']:.4f}")
+        print(f"# batch {msd['counts']} ({msd['rows']} rows, K={msd['k']}, "
+              f"V={msd['v']}), sharded-vs-single max|err| "
+              f"{msd['max_abs_err']:.2e}")
+        out["merge_shard"] = msd
 
     if want("ingest"):
         _section("ingest (streaming freshness / speculation / compaction)")

@@ -25,7 +25,7 @@ import time
 
 from benchmarks.common import bench_cfg, bench_world
 from repro.api import Interval, MLegoSession, QuerySpec
-from repro.core.plan_ir import pad_rows_widest
+from repro.core.plan_ir import pad_rows_bucketed, pad_rows_widest
 
 
 def run(n_docs=1200, seed=0, quick=False, backend="host"):
@@ -123,7 +123,9 @@ def run_providers(n_docs=1200, seed=0, quick=False, repeats=4):
 
 
 def run_padding(n_docs=1200, seed=0, quick=False):
-    """Ragged submit_many: bucketed pad rows vs the old widest-n' pad."""
+    """Ragged submit_many: the segmented launch's actual pad rows (zero
+    by construction) vs what the two retired schemes would have padded
+    on the same batch shape."""
     cfg = bench_cfg(quick)
     train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
     hi = float(train.attr[-1]) + 1.0
@@ -138,11 +140,11 @@ def run_padding(n_docs=1200, seed=0, quick=False):
         for i in range(4)]
     batch = session.submit_many(specs)
     counts = [r.n_merged for r in batch]
-    old_pad = pad_rows_widest(counts)
     return {
         "part_counts": counts,
-        "pad_rows_bucketed": batch.pad_rows,
-        "pad_rows_widest": old_pad,
+        "pad_rows_ragged": batch.pad_rows,
+        "pad_rows_bucketed": pad_rows_bucketed(counts),
+        "pad_rows_widest": pad_rows_widest(counts),
         "merge_device_ms": batch.merge_device_ms,
     }
 
@@ -165,8 +167,9 @@ def main():
     for provider, mean_s, total, hits, rate in run_providers():
         print(f"{provider},{mean_s:.4f},{total:.4f},{hits},{rate:.3f}")
     pad = run_padding()
-    print(f"# padding: bucketed {pad['pad_rows_bucketed']} rows vs widest "
-          f"{pad['pad_rows_widest']} rows (parts {pad['part_counts']})")
+    print(f"# padding: ragged {pad['pad_rows_ragged']} rows vs bucketed "
+          f"{pad['pad_rows_bucketed']} vs widest {pad['pad_rows_widest']} "
+          f"(parts {pad['part_counts']})")
 
 
 if __name__ == "__main__":

@@ -7,16 +7,26 @@ host NumPy exactly as the seed repo did and is the parity reference.
 ``DeviceBackend`` keeps hot model parameters device-resident in an
 LRU cache keyed by store model id (count- **and** byte-bounded,
 invalidated through the store's change notifications), executes merges
-through the fused Pallas ``merge_topics`` kernel — one padded
-``(n, K, V)`` launch per query, and *size-bucketed* ``(b, n', K, V)``
-launches for a ``submit_many`` batch (plans grouped by power-of-two
-part count; rows pad only to their bucket's widest plan instead of the
-batch-global widest) — and routes scratch-gap training through the
+through the fused Pallas ``merge_topics`` kernel — one ``(n, K, V)``
+launch per query, and a single *ragged segmented* launch for a
+``submit_many`` batch (every query's part rows concatenated CSR-style;
+zero pad rows on any batch shape — this retired the power-of-two
+bucketed launcher) — and routes scratch-gap training through the
 kernel paths: VB through the fused E-step kernel
 (``vb_estep(..., use_kernel=True)``), Gibbs through the doc-blocked
 CGS sweep (``cgs_fit_blocked`` / ``kernels/gibbs_sweep``).  A freshly
 trained persisted gap model is warm-inserted into the LRU
 (``note_trained``) so the merge that follows reads it back as a hit.
+
+``ShardedDeviceBackend`` ("device_sharded") lifts the one-device HBM
+ceiling: every cached model is resident as a vocab-sharded ``(K, Vp)``
+array (each device owns a ``V/ndev`` slice), merges run as
+shard_map-launched Pallas kernels on the local slice, and the only
+cross-device traffic is the per-topic row normalizer psum — so a model
+stack whose total bytes exceed one device's ``max_bytes`` still merges
+without host round-trips.  Cache byte accounting is *per device*
+(global bytes / shard count), which is the unit the calibrated cost
+model prices fetches in.
 
 On CPU hosts the merge/E-step kernels execute in Pallas interpret
 mode (the CI correctness path); on TPU they compile to Mosaic.  The
@@ -35,6 +45,7 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.api.trainers import (
     TrainerFn,
@@ -44,15 +55,27 @@ from repro.api.trainers import (
 )
 from repro.configs.lda_default import LDAConfig
 from repro.core.lda import MaterializedModel
-from repro.core.merge import device_merge_params, device_stat_key
+from repro.core.merge import (
+    device_merge_params,
+    device_norm_offset,
+    device_stat_key,
+)
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus, doc_term_matrix
+from repro.distributed.merge_collective import (
+    merge_topics_ragged_sharded,
+    merge_topics_sharded,
+    padded_vocab,
+)
+from repro.distributed.sharding import MeshEnv, local_mesh_env
+from repro.kernels.common import default_interpret
 from repro.kernels.merge_topics.ops import (
     merge_topics,
-    merge_topics_bucketed,
+    merge_topics_ragged,
+    segment_ids,
 )
 
-BACKEND_NAMES = ("host", "device")
+BACKEND_NAMES = ("host", "device", "device_sharded")
 
 
 @dataclass(frozen=True)
@@ -99,6 +122,7 @@ class ExecutionBackend:
     """Interface the session/executor program against."""
 
     name: str = "?"
+    shards: int = 1   # devices each cached model is sliced across
 
     def __init__(self):
         self.stats = BackendStats()
@@ -175,15 +199,25 @@ class _DeviceModelCache:
 
     Mutation is lock-serialized: one device cache may be shared by
     every session of a multi-tenant service over the same store.
+
+    ``prepare`` maps a host statistic array to its device-resident form
+    (default: plain f32 upload); the sharded backend substitutes a
+    pad-and-shard upload.  ``bytes_divisor`` converts a resident
+    array's *global* byte count into the unit the bounds and counters
+    are kept in — per-device bytes for a vocab-sharded cache, so
+    ``max_bytes`` bounds what any one device actually holds.
     """
 
-    def __init__(self, capacity: int, max_bytes: Optional[int] = None):
+    def __init__(self, capacity: int, max_bytes: Optional[int] = None,
+                 *, prepare=None, bytes_divisor: int = 1):
         if capacity < 1:
             raise ValueError(f"cache capacity must be >= 1, got {capacity}")
         if max_bytes is not None and max_bytes < 1:
             raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.capacity = capacity
         self.max_bytes = max_bytes
+        self._prepare = prepare or (lambda a: jnp.asarray(a, jnp.float32))
+        self.bytes_divisor = max(1, int(bytes_divisor))
         self._entries: "OrderedDict[int, jax.Array]" = OrderedDict()
         self._lock = threading.RLock()
         self.resident_bytes = 0
@@ -205,9 +239,13 @@ class _DeviceModelCache:
                 or (self.max_bytes is not None
                     and self.resident_bytes > self.max_bytes))
 
+    def _nb(self, arr: jax.Array) -> int:
+        """Accounting bytes for one entry: per-device, not global."""
+        return int(arr.nbytes) // self.bytes_divisor
+
     def _evict_lru(self) -> None:
         _, arr = self._entries.popitem(last=False)
-        self.resident_bytes -= int(arr.nbytes)
+        self.resident_bytes -= self._nb(arr)
         self.evictions += 1
         self.epoch += 1
 
@@ -215,22 +253,22 @@ class _DeviceModelCache:
         """A model bigger than the whole byte budget must pass through
         uncached — inserting it would evict every resident entry
         before LRU order finally evicted the newcomer itself."""
-        return self.max_bytes is None or int(arr.nbytes) <= self.max_bytes
+        return self.max_bytes is None or self._nb(arr) <= self.max_bytes
 
     def get(self, model: MaterializedModel, stat_key: str) -> jax.Array:
         mid = model.model_id
         with self._lock:
             if mid >= 0 and mid in self._entries:
                 self.hits += 1
-                self.hit_bytes += int(self._entries[mid].nbytes)
+                self.hit_bytes += self._nb(self._entries[mid])
                 self._entries.move_to_end(mid)
                 return self._entries[mid]
             self.misses += 1
-            arr = jnp.asarray(model.theta[stat_key], jnp.float32)
-            self.miss_bytes += int(arr.nbytes)
+            arr = self._prepare(model.theta[stat_key])
+            self.miss_bytes += self._nb(arr)
             if mid >= 0 and self._fits_alone(arr):
                 self._entries[mid] = arr
-                self.resident_bytes += int(arr.nbytes)
+                self.resident_bytes += self._nb(arr)
                 self.epoch += 1
                 while self._entries and self._over_budget():
                     self._evict_lru()
@@ -244,11 +282,11 @@ class _DeviceModelCache:
         with self._lock:
             if mid < 0 or mid in self._entries:
                 return mid in self._entries
-            arr = jnp.asarray(model.theta[stat_key], jnp.float32)
+            arr = self._prepare(model.theta[stat_key])
             if not self._fits_alone(arr):
                 return False
             self._entries[mid] = arr
-            self.resident_bytes += int(arr.nbytes)
+            self.resident_bytes += self._nb(arr)
             self.epoch += 1
             while self._entries and self._over_budget():
                 self._evict_lru()
@@ -258,7 +296,7 @@ class _DeviceModelCache:
         with self._lock:
             arr = self._entries.pop(model_id, None)
             if arr is not None:
-                self.resident_bytes -= int(arr.nbytes)
+                self.resident_bytes -= self._nb(arr)
                 self.invalidations += 1
                 self.epoch += 1
 
@@ -306,12 +344,16 @@ class DeviceBackend(ExecutionBackend):
                  kernel_gibbs: bool = True,
                  gibbs_block_docs: int = 64):
         super().__init__()
-        self.cache = _DeviceModelCache(capacity, max_bytes)
+        self.cache = self._make_cache(capacity, max_bytes)
         self.interpret = interpret
         self.kernel_estep = kernel_estep
         self.kernel_gibbs = kernel_gibbs
         self.gibbs_block_docs = gibbs_block_docs
         self._store: Optional[ModelStore] = None
+
+    def _make_cache(self, capacity: int,
+                    max_bytes: Optional[int]) -> _DeviceModelCache:
+        return _DeviceModelCache(capacity, max_bytes)
 
     # -- lifecycle -------------------------------------------------------
     def bind_store(self, store: ModelStore) -> None:
@@ -352,13 +394,13 @@ class DeviceBackend(ExecutionBackend):
         return finish(np.asarray(merged))
 
     def merge_many(self, part_lists, kind, cfg):
-        """§V.C batch merge stage: size-bucketed batched launches.
+        """§V.C batch merge stage: one ragged segmented launch.
 
-        Plans are grouped into power-of-two size buckets and each
-        bucket merges in one ``(b, n_bucket, K, V)`` launch, padding
-        rows only to the bucket's widest plan — total zero-weight
-        padding is pointwise ≤ the old pad-to-global-widest single
-        launch (tracked in ``stats.pad_rows``)."""
+        Every query's part rows concatenate into a single CSR-style
+        ``(R, K, V)`` stack merged by the segmented kernel — zero pad
+        rows on any batch shape (``stats.pad_rows`` stays 0 by
+        construction; the bucketed launcher this replaced padded within
+        each power-of-two bucket)."""
         fam = merge_family_name(kind)
         if fam is None:
             # per-list self.merge counts the merges and fallbacks
@@ -372,7 +414,7 @@ class DeviceBackend(ExecutionBackend):
             stats_list.append(
                 jnp.stack([self.cache.get(m, stat_key) for m in parts]))
             weights_list.append(jnp.ones((len(parts),), jnp.float32))
-        merged, pad_rows, launches = merge_topics_bucketed(
+        merged, pad_rows, launches = merge_topics_ragged(
             stats_list, weights_list, bias=bias, base=base,
             interpret=self.interpret)
         for row in merged:
@@ -443,7 +485,111 @@ class DeviceBackend(ExecutionBackend):
         return {"delta_nkv": nkv}
 
 
-_FACTORIES = {"host": HostBackend, "device": DeviceBackend}
+class ShardedDeviceBackend(DeviceBackend):
+    """Vocab-sharded merges: each device owns a ``V/ndev`` slice.
+
+    The cache uploads every model statistic as a ``(K, Vp)`` array
+    sharded over the mesh's "model" axis (``Vp`` rounds V up so every
+    slice is lane-aligned; pad columns are masked out of the row
+    normalizer, so their value never matters).  Merges run through the
+    shard_map-launched Pallas collectives in
+    ``distributed/merge_collective.py``: every device merges its local
+    slice (ragged-segmented for batches — zero pad rows), applies the
+    family's finisher numerator offset, and joins a per-topic row-
+    normalizer psum — the *only* cross-device collective, (K,) per
+    query regardless of V.  Normalization therefore happens on device;
+    the host-side finisher is bypassed.
+
+    ``max_bytes`` bounds **per-device** residency (global bytes /
+    shards), which is the point: a model stack whose total f32 bytes
+    exceed one device's budget still merges, because no device ever
+    holds more than its slice.  ``env`` defaults to a (1, ndev) mesh
+    over every local device and degrades to the unsharded semantics at
+    one device.  Gap training is inherited unchanged (single-device
+    kernels); trained models are warm-inserted in sharded form.
+    """
+
+    name = "device_sharded"
+
+    def __init__(self, capacity: int = 64, *,
+                 max_bytes: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 kernel_estep: bool = True,
+                 kernel_gibbs: bool = True,
+                 gibbs_block_docs: int = 64,
+                 env: Optional[MeshEnv] = None):
+        self.env = env if env is not None else local_mesh_env()
+        self.shards = max(1, self.env.tp_size)
+        super().__init__(capacity, max_bytes=max_bytes,
+                         interpret=interpret, kernel_estep=kernel_estep,
+                         kernel_gibbs=kernel_gibbs,
+                         gibbs_block_docs=gibbs_block_docs)
+
+    def _make_cache(self, capacity, max_bytes):
+        return _DeviceModelCache(capacity, max_bytes,
+                                 prepare=self._prepare_stat,
+                                 bytes_divisor=self.shards)
+
+    def _prepare_stat(self, arr) -> jax.Array:
+        """Pad V for lane-aligned slices and shard over the vocab axis."""
+        x = jnp.asarray(arr, jnp.float32)
+        v = x.shape[-1]
+        vp = padded_vocab(v, self.shards)
+        if vp != v:
+            x = jnp.pad(x, ((0, 0), (0, vp - v)))
+        return jax.device_put(x, self.env.sharding(P(None, "model")))
+
+    # -- merge -----------------------------------------------------------
+    def merge(self, parts, kind, cfg):
+        fam = merge_family_name(kind)
+        if fam is None:                  # custom merge callable: host only
+            self._count(merges=1, host_fallbacks=1)
+            return get_merge(kind)(list(parts), cfg)
+        stat_key, bias, base, _ = device_merge_params(fam, cfg)
+        v_true = int(parts[0].theta[stat_key].shape[-1])
+        t0 = time.perf_counter()
+        stats = jnp.stack([self.cache.get(m, stat_key) for m in parts])
+        w = jnp.ones((len(parts),), jnp.float32)
+        beta = merge_topics_sharded(
+            stats, w, self.env, bias=bias, base=base,
+            num_offset=device_norm_offset(fam, cfg), v_true=v_true,
+            interpret=default_interpret(self.interpret))
+        beta.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        self._sync_cache_counters()
+        self._count(merges=1, device_launches=1, merge_device_ms=ms)
+        return np.asarray(beta)[:, :v_true]
+
+    def merge_many(self, part_lists, kind, cfg):
+        fam = merge_family_name(kind)
+        if fam is None:
+            return ExecutionBackend.merge_many(self, part_lists, kind, cfg)
+        if len(part_lists) == 1:
+            return [self.merge(part_lists[0], kind, cfg)]
+        stat_key, bias, base, _ = device_merge_params(fam, cfg)
+        v_true = int(part_lists[0][0].theta[stat_key].shape[-1])
+        counts = [len(parts) for parts in part_lists]
+        t0 = time.perf_counter()
+        rows = [self.cache.get(m, stat_key)
+                for parts in part_lists for m in parts]
+        stats = jnp.stack(rows)
+        w = jnp.ones((len(rows),), jnp.float32)
+        beta = merge_topics_ragged_sharded(
+            stats, w, segment_ids(counts), len(counts), self.env,
+            bias=bias, base=base,
+            num_offset=device_norm_offset(fam, cfg), v_true=v_true,
+            interpret=default_interpret(self.interpret))
+        beta.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        self._sync_cache_counters()
+        self._count(merges=len(part_lists), device_launches=1,
+                    merge_device_ms=ms)
+        host = np.asarray(beta)[:, :, :v_true]
+        return [host[i] for i in range(len(counts))]
+
+
+_FACTORIES = {"host": HostBackend, "device": DeviceBackend,
+              "device_sharded": ShardedDeviceBackend}
 
 
 def make_backend(name: str) -> ExecutionBackend:

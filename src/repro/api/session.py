@@ -21,7 +21,7 @@ store mutation invalidates the cache through ``ModelStore.subscribe``.
 ``submit_many`` runs the §V.C Alg. 4 batch path: the batch is
 reordered for joint planning (widest query first), every shared gap
 segment is trained exactly once, the merge stage launches as
-size-bucketed batched kernels, and the shared search/train costs are
+one ragged segmented kernel (zero pad rows), and the shared search/train costs are
 reported at the batch level (``BatchReport``), not on the first query.
 
 Plan search prices plans through a pluggable cost provider
@@ -333,6 +333,11 @@ class MLegoSession:
         if (isinstance(inst, DeviceBackend)
                 and getattr(self.cost, "cache_probe", False) is None):
             self.cost.cache_probe = lambda mid: mid in inst.cache
+        # a sharded backend observes *per-shard* bytes; tell the
+        # provider so fetch prices use the same unit the fit is in
+        shards = getattr(self.cost, "backend_shards", None)
+        if shards is not None and inst.shards > 1:
+            shards[inst.name] = inst.shards
         return inst
 
     def _backend_for(self, spec: QuerySpec) -> ExecutionBackend:
@@ -410,10 +415,13 @@ class MLegoSession:
             return backend.cache.epoch
         return 0
 
-    def _observe_merge(self, n_merges: int, merge_s: float, d) -> None:
+    def _observe_merge(self, n_merges: int, merge_s: float, d,
+                       backend: str = "device") -> None:
         """Feed measured merge timings to the cost provider (fetch and
         pad terms are per-byte, read off the backend's traffic
-        counters)."""
+        counters).  ``backend`` names which device backend's fit the
+        samples feed — the sharded backend's counters are per-shard
+        bytes, which must never mix into the unsharded fit."""
         if d.merge_device_ms > 0.0:
             secs = d.merge_device_ms * 1e-3
             traffic = d.cache_hit_bytes + d.cache_miss_bytes + d.pad_bytes
@@ -422,10 +430,12 @@ class MLegoSession:
                 # *marginal* time the zero-weight rows cost, the rest
                 # stays attributed to the real fetches below
                 pad_secs = secs * d.pad_bytes / traffic
-                self.cost.observe_pad(d.pad_bytes, pad_secs)
+                self.cost.observe_pad(d.pad_bytes, pad_secs,
+                                      backend=backend)
                 secs -= pad_secs
             self.cost.observe_merge_device(d.cache_hit_bytes,
-                                           d.cache_miss_bytes, secs)
+                                           d.cache_miss_bytes, secs,
+                                           backend=backend)
         elif n_merges > 0:
             self.cost.observe_merge_host(n_merges, merge_s)
 
@@ -496,7 +506,8 @@ class MLegoSession:
             beta = self.executor.merge(parts, backend=backend)
             merge_s = time.perf_counter() - t2
             d = backend.stats.delta(snap)
-        self._observe_merge(len(parts) - 1, merge_s, d)
+        self._observe_merge(len(parts) - 1, merge_s, d,
+                            backend=backend.name)
         return QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
                            train_s, merge_s, search_s, materialized=fresh,
                            backend=backend.name,
@@ -516,8 +527,8 @@ class MLegoSession:
 
         All specs must use one trainer kind (shared segments are merged
         into every covering query, so their Θ must be homogeneous) and
-        one execution backend (the merge stage launches as
-        size-bucketed batched kernels).  The joint optimization runs
+        one execution backend (the merge stage launches as one ragged
+        segmented kernel).  The joint optimization runs
         under one α (it seeds every query's initial plan); a mixed-α
         batch is *auto-split* into per-α sub-batches — each planned and
         trained jointly on its own, reports re-interleaved into
@@ -648,7 +659,7 @@ class MLegoSession:
 
         # assemble every query's part list from its components' IR
         # (fetches resolved by id), then merge the whole batch through
-        # one backend call — size-bucketed batched device launches
+        # one backend call — a single ragged segmented device launch
         part_lists: List[List[MaterializedModel]] = []
         plans_per_q: List[List[SearchResult]] = []
         ntok_per_q: List[int] = []
@@ -693,7 +704,7 @@ class MLegoSession:
             d = backend.stats.delta(snap)
         launch_share = batch_merge_s / len(specs)
         self._observe_merge(sum(max(len(p) - 1, 0) for p in part_lists),
-                            batch_merge_s, d)
+                            batch_merge_s, d, backend=backend.name)
 
         reports = [
             QueryReport(beta, spec, tuple(plans), n_tok, len(parts),

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost import CostProvider, plan_stats
-from repro.core.plan_ir import Plan, pad_rows_bucketed
+from repro.core.plan_ir import Plan
 from repro.core.plans import Interval, plan_key, rl_plans, subtract, usable
 from repro.core.search import lower, psoa_search
 
@@ -74,29 +74,16 @@ def _segments(gap_lists: Sequence[List[Interval]]) -> List[Tuple[float, float, i
     return out
 
 
-def _part_counts(plans: Sequence[Tuple],
-                 gap_lists: Sequence[List[Interval]],
-                 segs: Sequence[Tuple[float, float, int]]) -> List[int]:
-    """Parts each query will actually merge under shared-segment
-    training: its plan models + every atomic segment inside its gaps
-    (the batched-launch row count, which the padding term prices)."""
-    out = []
-    for p, gaps in zip(plans, gap_lists):
-        n_seg = sum(1 for lo, hi, _ in segs
-                    if any(g.lo <= lo and hi <= g.hi for g in gaps))
-        out.append(len(p) + n_seg)
-    return out
-
-
 def shared_time_and_benefit(plans: Sequence[Tuple], queries: Sequence[Interval],
                             index, cost: CostProvider
                             ) -> Tuple[float, float, float]:
     """(T, naive_T, B) for a plan combination (Def. 3 accounting).
 
-    A calibrated provider additionally prices the padding rows of the
-    size-bucketed batched device launch (``cost.padding_cost``); the
-    analytic model prices padding at 0, preserving the paper's
-    accounting exactly.
+    Merge launches are priced pad-free: the ragged segmented kernel
+    packs every plan's parts into one launch with zero pad rows, so the
+    size-bucketed pad term that used to ride on batched device merges
+    no longer appears in T(P).  (``cost.padding_cost`` still prices
+    explicit pad rows for callers that bucket — see the benchmarks.)
     """
     gap_lists = [_gaps(p, q) for p, q in zip(plans, queries)]
     segs = _segments(gap_lists)
@@ -107,13 +94,7 @@ def shared_time_and_benefit(plans: Sequence[Tuple], queries: Sequence[Interval],
     for p, gaps in zip(plans, gap_lists):
         comps = len(p) + sum(1 for g in gaps if index.tokens_in(g.lo, g.hi) > 0)
         t_merge += cost.c_merge(max(comps - 1, 0))
-    # the analytic provider (and calibrated before any device launch)
-    # prices padding at 0 — skip the O(b x segments) row accounting then
-    t_pad = 0.0
-    if cost.padding_cost(1) > 0.0:
-        t_pad = cost.padding_cost(
-            pad_rows_bucketed(_part_counts(plans, gap_lists, segs)))
-    total = t_train + t_merge + t_pad
+    total = t_train + t_merge
     return total, total + saved, saved
 
 

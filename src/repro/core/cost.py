@@ -199,13 +199,16 @@ class CostProvider:
         pass
 
     def observe_merge_device(self, hit_bytes: int, miss_bytes: int,
-                             seconds: float) -> None:
+                             seconds: float,
+                             backend: str = "device") -> None:
         """One fused device launch: *bytes* read from the device cache
         (hits) vs transferred host→device (misses).  Per-byte, not
         per-part, so prices stay correct once heterogeneous model
-        shapes land."""
+        shapes land.  ``backend`` names which device backend's fit the
+        sample feeds — the sharded backend reports per-shard bytes."""
 
-    def observe_pad(self, pad_bytes: int, seconds: float) -> None:
+    def observe_pad(self, pad_bytes: int, seconds: float,
+                    backend: str = "device") -> None:
         pass
 
 
@@ -264,7 +267,11 @@ def _sidecar_lock(path: str):
 # (never crash a session over a stale sidecar).  2: device_obs/pad_obs
 # record *bytes* (hit_bytes, miss_bytes / pad_bytes), not part/row
 # counts — format-1 sidecars cold-start rather than mis-scale.
-CALIBRATION_FORMAT = 2
+# 3: device_obs/pad_obs are keyed by backend name like train_obs — the
+# vocab-sharded backend observes *per-shard* bytes, so mixing its
+# samples into the unsharded backend's fit would skew both; format-2
+# sidecars cold-start rather than mis-attribute.
+CALIBRATION_FORMAT = 3
 
 
 @dataclass
@@ -276,10 +283,13 @@ class Calibration:
                  (exact scan) and device (blocked kernel) gap training
                  separately
     host_obs   : (x merges, seconds) per host merge
-    device_obs : (hit_bytes, miss_bytes, seconds) per fused device
-                 launch — bytes read from the device cache vs bytes
-                 transferred host→device
-    pad_obs    : (pad_bytes, seconds) per *bucketed batch* launch
+    device_obs : backend name -> (hit_bytes, miss_bytes, seconds) per
+                 fused device launch — bytes read from the device cache
+                 vs bytes transferred host→device.  The sharded backend
+                 reports *per-shard* bytes (its cache accounts per
+                 device), so its per-byte rates are directly comparable
+                 to wall time and never pollute the unsharded fit
+    pad_obs    : backend name -> (pad_bytes, seconds) per batch launch
 
     Mutation is serialized by an internal lock: service workers and
     concurrent sessions feed one shared log.
@@ -288,8 +298,10 @@ class Calibration:
     train_obs: Dict[str, List[Tuple[float, float]]] = field(
         default_factory=dict)
     host_obs: List[Tuple[int, float]] = field(default_factory=list)
-    device_obs: List[Tuple[int, int, float]] = field(default_factory=list)
-    pad_obs: List[Tuple[int, float]] = field(default_factory=list)
+    device_obs: Dict[str, List[Tuple[int, int, float]]] = field(
+        default_factory=dict)
+    pad_obs: Dict[str, List[Tuple[int, float]]] = field(
+        default_factory=dict)
 
     def __post_init__(self):
         self._lock = threading.RLock()
@@ -304,10 +316,20 @@ class Calibration:
         with self._lock:
             self._push(self.train_obs.setdefault(backend, []), sample)
 
+    def push_device(self, backend: str,
+                    sample: Tuple[int, int, float]) -> None:
+        with self._lock:
+            self._push(self.device_obs.setdefault(backend, []), sample)
+
+    def push_pad(self, backend: str, sample: Tuple[int, float]) -> None:
+        with self._lock:
+            self._push(self.pad_obs.setdefault(backend, []), sample)
+
     def __len__(self) -> int:
         return (sum(len(o) for o in self.train_obs.values())
-                + len(self.host_obs) + len(self.device_obs)
-                + len(self.pad_obs))
+                + len(self.host_obs)
+                + sum(len(o) for o in self.device_obs.values())
+                + sum(len(o) for o in self.pad_obs.values()))
 
     # --- persistence (the store's JSON sidecar) ---------------------------
     def to_json_dict(self) -> dict:
@@ -317,8 +339,10 @@ class Calibration:
                 "train_obs": {b: [list(s) for s in obs]
                               for b, obs in self.train_obs.items()},
                 "host_obs": [list(s) for s in self.host_obs],
-                "device_obs": [list(s) for s in self.device_obs],
-                "pad_obs": [list(s) for s in self.pad_obs],
+                "device_obs": {b: [list(s) for s in obs]
+                               for b, obs in self.device_obs.items()},
+                "pad_obs": {b: [list(s) for s in obs]
+                            for b, obs in self.pad_obs.items()},
             }
 
     @classmethod
@@ -332,11 +356,13 @@ class Calibration:
                 train_obs={str(b): [(float(t), float(s)) for t, s in obs]
                            for b, obs in doc["train_obs"].items()},
                 host_obs=[(int(x), float(s)) for x, s in doc["host_obs"]],
-                device_obs=[(int(h), int(m), float(s))
-                            for h, m, s in doc["device_obs"]],
-                pad_obs=[(int(p), float(s)) for p, s in doc["pad_obs"]],
+                device_obs={str(b): [(int(h), int(m), float(s))
+                                     for h, m, s in obs]
+                            for b, obs in doc["device_obs"].items()},
+                pad_obs={str(b): [(int(p), float(s)) for p, s in obs]
+                         for b, obs in doc["pad_obs"].items()},
             )
-        except (KeyError, TypeError, ValueError):
+        except (KeyError, TypeError, ValueError, AttributeError):
             return None
 
     def merged_with(self, other: "Calibration") -> "Calibration":
@@ -351,15 +377,17 @@ class Calibration:
             out.extend(map(tuple, ours))
             return out[-_MAX_OBS:]
 
+        def union_keyed(theirs: dict, ours: dict) -> dict:
+            return {b: union(theirs.get(b, []), ours.get(b, []))
+                    for b in set(theirs) | set(ours)}
+
         with self._lock:
             merged = Calibration(
                 host_obs=union(other.host_obs, self.host_obs),
-                device_obs=union(other.device_obs, self.device_obs),
-                pad_obs=union(other.pad_obs, self.pad_obs),
+                device_obs=union_keyed(other.device_obs, self.device_obs),
+                pad_obs=union_keyed(other.pad_obs, self.pad_obs),
+                train_obs=union_keyed(other.train_obs, self.train_obs),
             )
-            for b in set(self.train_obs) | set(other.train_obs):
-                merged.train_obs[b] = union(other.train_obs.get(b, []),
-                                            self.train_obs.get(b, []))
         return merged
 
     def save(self, path: str, merge: bool = True) -> None:
@@ -432,11 +460,14 @@ class Calibration:
         return self._robust(
             [s / x for x, s in self.host_obs if x > 0 and s > 0])
 
-    def fit_device(self) -> Optional[Tuple[float, float, float]]:
+    def fit_device(self, backend: str = "device"
+                   ) -> Optional[Tuple[float, float, float]]:
         """(t_launch, t_hit, t_miss): seconds ≈ t_launch
         + t_hit·hit_bytes + t_miss·miss_bytes, nonnegative least
-        squares over the log.  t_hit/t_miss are **per byte**."""
-        obs = [(h, m, s) for h, m, s in self.device_obs if s > 0]
+        squares over one backend's log.  t_hit/t_miss are **per byte**
+        (per-*shard* byte for the vocab-sharded backend)."""
+        obs = [(h, m, s)
+               for h, m, s in self.device_obs.get(backend, ()) if s > 0]
         if not obs:
             return None
         if len(obs) >= 3:
@@ -452,10 +483,29 @@ class Calibration:
         sol, *_ = np.linalg.lstsq(a, y, rcond=None)
         return tuple(float(max(v, 0.0)) for v in sol)
 
-    def fit_t_pad(self) -> Optional[float]:
-        """Per padding *byte* in bucketed batch launches."""
+    def fit_devices(self) -> Dict[str, Tuple[float, float, float]]:
+        """Backend name -> device fit, for every backend with samples."""
+        out = {}
+        for backend in self.device_obs:
+            fit = self.fit_device(backend)
+            if fit is not None:
+                out[backend] = fit
+        return out
+
+    def fit_t_pad(self, backend: str = "device") -> Optional[float]:
+        """Per padding *byte* in one backend's batch launches."""
         return self._robust(
-            [s / p for p, s in self.pad_obs if p > 0 and s > 0])
+            [s / p for p, s in self.pad_obs.get(backend, ())
+             if p > 0 and s > 0])
+
+    def fit_t_pads(self) -> Dict[str, float]:
+        """Backend name -> fitted t_pad, for every backend with samples."""
+        out = {}
+        for backend in self.pad_obs:
+            t_pad = self.fit_t_pad(backend)
+            if t_pad is not None:
+                out[backend] = t_pad
+        return out
 
 
 class CalibratedCostModel(CostProvider):
@@ -502,6 +552,11 @@ class CalibratedCostModel(CostProvider):
         self.cache_probe = cache_probe
         self.size_probe = size_probe
         self.part_bytes_hint = part_bytes_hint
+        # backend name -> device count its cached models are sliced
+        # across (sessions populate it).  Sharded backends observe
+        # per-shard bytes, so their fetch prices must scale part sizes
+        # down by the same factor to stay in the fitted unit.
+        self.backend_shards: Dict[str, int] = {}
         # thread-local: one provider is shared by every worker, tenant
         # thread and the speculator of a service, and "set the backend,
         # then price" must be atomic per caller — a plain attribute let
@@ -514,8 +569,12 @@ class CalibratedCostModel(CostProvider):
         self._dirty = len(self.calibration) > 0
         self._kappa: Dict[str, float] = {}
         self._t_merge: Optional[float] = None
-        self._t_hit = self._t_miss = 0.0
-        self._t_pad: Optional[float] = None
+        # per-backend device fits: backend name -> (t_hit, t_miss) /
+        # t_pad.  Price reads resolve the calling thread's active
+        # backend, falling back to the plain "device" fit (same shape
+        # as κ's host fallback).
+        self._t_fetch: Dict[str, Tuple[float, float]] = {}
+        self._t_pads: Dict[str, float] = {}
 
     # Observations only mark the fit dirty; the (sort + median + lstsq)
     # refit runs at most once per price read, not once per observe_*
@@ -580,6 +639,32 @@ class CalibratedCostModel(CostProvider):
                 * float(n_tokens) ** self.base.train_exponent
                 * self.base.n_topics)
 
+    def _fetch_params_locked(self) -> Tuple[float, float]:
+        """(t_hit, t_miss) for the calling thread's active backend;
+        callers hold ``self._lock``."""
+        fit = self._t_fetch.get(self.train_backend,
+                                self._t_fetch.get("device"))
+        return fit if fit is not None else (0.0, 0.0)
+
+    @property
+    def _t_hit(self) -> float:
+        with self._lock:
+            self._ensure_fit()
+            return self._fetch_params_locked()[0]
+
+    @property
+    def _t_miss(self) -> float:
+        with self._lock:
+            self._ensure_fit()
+            return self._fetch_params_locked()[1]
+
+    @property
+    def _t_pad(self) -> Optional[float]:
+        with self._lock:
+            self._ensure_fit()
+            return self._t_pads.get(self.train_backend,
+                                    self._t_pads.get("device"))
+
     def _part_bytes(self, model_id: Optional[int] = None) -> float:
         """Byte size of one merge part: the store-wired probe when it
         answers, else the session's hint, else 1.0 (which degrades
@@ -595,7 +680,7 @@ class CalibratedCostModel(CostProvider):
                    uncovered_tokens: float) -> float:
         with self._lock:                     # consistent (t_hit, t_miss)
             self._ensure_fit()
-            t_hit, t_miss = self._t_hit, self._t_miss
+            t_hit, t_miss = self._fetch_params_locked()
         if t_hit == t_miss == 0.0:
             return 0.0
         cost = 0.0
@@ -606,14 +691,18 @@ class CalibratedCostModel(CostProvider):
             # the fresh gap model always uploads (hint-sized: it does
             # not exist yet, so no probe can size it)
             cost += t_miss * self._part_bytes()
-        return cost
+        # per-shard unit: a sharded backend's fit is seconds per
+        # per-device byte, so scale the (global) part sizes down to
+        # what any one device actually moves
+        return cost / max(self.backend_shards.get(self.train_backend, 1), 1)
 
     def padding_cost(self, pad_rows: int) -> float:
         """Padding rows share the merge statistic's shape, so one row
         is one (hint-sized) part's worth of bytes."""
         with self._lock:
             self._ensure_fit()
-            t_pad = self._t_pad
+            t_pad = self._t_pads.get(self.train_backend,
+                                     self._t_pads.get("device"))
         return (t_pad or 0.0) * max(pad_rows, 0) * self._part_bytes()
 
     # --- measurement intake -------------------------------------------------
@@ -629,18 +718,19 @@ class CalibratedCostModel(CostProvider):
         self._dirty = True
 
     def observe_merge_device(self, hit_bytes: int, miss_bytes: int,
-                             seconds: float) -> None:
-        self.calibration._push(self.calibration.device_obs,
-                               (int(hit_bytes), int(miss_bytes),
-                                float(seconds)))
+                             seconds: float,
+                             backend: str = "device") -> None:
+        self.calibration.push_device(backend,
+                                     (int(hit_bytes), int(miss_bytes),
+                                      float(seconds)))
         self._dirty = True
 
-    def observe_pad(self, pad_bytes: int, seconds: float) -> None:
+    def observe_pad(self, pad_bytes: int, seconds: float,
+                    backend: str = "device") -> None:
         """``seconds`` must be the *marginal* time attributable to the
         padding bytes (callers apportion the launch wall time), not
         the whole launch — t_pad multiplies per byte."""
-        self.calibration._push(self.calibration.pad_obs,
-                               (int(pad_bytes), float(seconds)))
+        self.calibration.push_pad(backend, (int(pad_bytes), float(seconds)))
         self._dirty = True
 
     # Prices within 25% of each other rarely flip a plan choice (the
@@ -663,27 +753,36 @@ class CalibratedCostModel(CostProvider):
             c = self.calibration
             kappas = c.fit_kappas(self.base)
             t_merge = c.fit_t_merge()
-            t_hit, t_miss = self._t_hit, self._t_miss
-            dev = c.fit_device()
-            if dev is not None:
-                _, t_hit, t_miss = dev
-                if t_merge is None:
-                    # device sessions never see a host merge; the
-                    # launch cost amortized over one part's bytes is
-                    # the closest t_m analogue
-                    t_merge = max(t_hit * self._part_bytes(),
-                                  self.base.t_merge)
-            t_pad = c.fit_t_pad()
-            if t_pad is None and dev is not None:
-                # padding bytes stream like cached bytes of bandwidth
-                t_pad = t_hit
-            backends = sorted(set(kappas) | set(self._kappa))
-            new = tuple(kappas.get(b) for b in backends) + (
-                t_merge, t_hit, t_miss, t_pad)
-            old = tuple(self._kappa.get(b) for b in backends) + (
-                self._t_merge, self._t_hit, self._t_miss, self._t_pad)
+            fetch = {b: (hit, miss)
+                     for b, (_, hit, miss) in c.fit_devices().items()}
+            if t_merge is None and fetch:
+                # device sessions never see a host merge; the launch
+                # cost amortized over one part's bytes is the closest
+                # t_m analogue (taken from the cheapest fitted backend)
+                t_hit = min(hit for hit, _ in fetch.values())
+                t_merge = max(t_hit * self._part_bytes(),
+                              self.base.t_merge)
+            pads = c.fit_t_pads()
+            for b, (hit, _) in fetch.items():
+                # padding bytes stream like cached bytes of bandwidth;
+                # the ragged launcher never pads so most backends only
+                # ever see this default
+                pads.setdefault(b, hit)
+            kb = sorted(set(kappas) | set(self._kappa))
+            fb = sorted(set(fetch) | set(self._t_fetch))
+            pb = sorted(set(pads) | set(self._t_pads))
+
+            def flat(ka, fe, pa, tm):
+                out = tuple(ka.get(b) for b in kb) + (tm,)
+                for b in fb:
+                    out += fe.get(b, (None, None))
+                return out + tuple(pa.get(b) for b in pb)
+
+            new = flat(kappas, fetch, pads, t_merge)
+            old = flat(self._kappa, self._t_fetch, self._t_pads,
+                       self._t_merge)
             self._kappa, self._t_merge = kappas, t_merge
-            self._t_hit, self._t_miss, self._t_pad = t_hit, t_miss, t_pad
+            self._t_fetch, self._t_pads = fetch, pads
             # version gates the session plan cache: bump only when
             # prices moved materially, so a converged calibration keeps
             # repeated queries on the cached plan

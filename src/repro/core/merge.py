@@ -110,3 +110,21 @@ def device_merge_params(kind: str, cfg: LDAConfig):
             lambda nkv: topics_from_gs(nkv, cfg.eta))
     raise KeyError(f"kind {kind!r} has no device merge form "
                    f"(one of {DEVICE_MERGE_FAMILIES})")
+
+
+def device_norm_offset(kind: str, cfg: LDAConfig) -> float:
+    """Finisher numerator offset for *device-side* normalization.
+
+    Both finishers are ``(merged + offset) / rowsum(merged + offset)``:
+    vb normalizes λ directly (offset 0) and gs smooths first —
+    ``topics_from_gs`` divides ``nkv + η`` by ``rowsum(nkv) + V·η``,
+    which is exactly the row sum of the offset numerator.  That shared
+    shape is what lets the vocab-sharded merge normalize on device with
+    a single (K,) psum instead of gathering the merged statistic.
+    """
+    if kind == "vb":
+        return 0.0
+    if kind == "gs":
+        return cfg.eta
+    raise KeyError(f"kind {kind!r} has no device merge form "
+                   f"(one of {DEVICE_MERGE_FAMILIES})")

@@ -15,17 +15,30 @@ partition (document) axis is reduced.
 ``staleness`` implements the DSGS decay (Eq. 9) as a straggler policy:
 a device that contributes a stale delta (s > 0) has it decayed before
 the reduction — bounded-staleness asynchrony expressed synchronously.
+
+``merge_topics_sharded`` / ``merge_topics_ragged_sharded`` are the
+*query-path* collectives behind ``ShardedDeviceBackend``: the model
+list rides fully on every query but each device owns only a ``V/ndev``
+vocab slice of every stack, merges its slice locally with the fused
+Pallas kernel inside shard_map, and the only cross-device traffic is
+the per-topic row normalizer — a (K,)-per-query psum instead of the
+(K, V) gather a replicated merge would need.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
 from repro.distributed.sharding import MeshEnv
+from repro.kernels.merge_topics.merge_topics import (
+    merge_topics_pallas,
+    merge_topics_ragged_pallas,
+)
 
 
 def merge_vb_collective(lam_local, eta: float, env: MeshEnv,
@@ -74,10 +87,103 @@ def merge_stats(stats_per_device, env: MeshEnv, kind: str = "vb",
         merged = stats_per_device.sum(0)
         return (eta + (merged - eta * stats_per_device.shape[0])
                 if kind == "vb" else merged)
-    out = jax.shard_map(
+    out = shard_map(
         body, mesh=env.mesh,
         in_specs=P(dp, None, tp),
         out_specs=P(dp, None, tp),
-        check_vma=False,
     )(stats_per_device)
     return out[0]
+
+
+# ---------------------------------------------------------------------------
+# vocab-sharded query merges (tentpole: each device owns a V/ndev slice)
+# ---------------------------------------------------------------------------
+
+def padded_vocab(v: int, shards: int) -> int:
+    """V rounded up so every device's slice is f32-lane-aligned (128)."""
+    tile = shards * 128
+    return ((v + tile - 1) // tile) * tile
+
+
+def _masked_numerator(merged, num_offset: float, v_true: int, axis: str):
+    """merged slice -> finisher numerator with pad columns zeroed.
+
+    Pad columns carry ``bias`` out of the kernel (they were padded with
+    ``base``, so the weighted sum cancels); adding ``num_offset`` makes
+    them nonzero for both families — mask them before they can pollute
+    the row normalizer.
+    """
+    vs = merged.shape[-1]
+    col = (jax.lax.axis_index(axis) * vs
+           + jax.lax.broadcasted_iota(jnp.int32, merged.shape,
+                                      merged.ndim - 1))
+    return jnp.where(col < v_true, merged + num_offset, 0.0)
+
+
+def merge_topics_sharded(stats, weights, env: MeshEnv, *,
+                         bias: float, base: float, num_offset: float,
+                         v_true: int, interpret: bool = False):
+    """One query's merge with the vocab axis sharded over ``env.tp_axis``.
+
+    stats: (n, K, Vp) with Vp = padded_vocab(V, tp_size) — V-padded with
+    ``base`` so pad columns cancel in the reduction; weights: (n,).
+    Each device merges its (n, K, Vp/ndev) slice through the fused
+    Pallas kernel, applies the family's finisher numerator offset, and
+    normalizes rows against a psum'd (K,) normalizer — returns the
+    topic matrix β as a (K, Vp) array still sharded over the vocab
+    axis (slice ``[:, :v_true]`` after np.asarray gathers it).
+    """
+    tp = env.tp_axis
+    n, k, _ = stats.shape
+    kp = ((k + 7) // 8) * 8
+
+    def body(s, w):
+        if kp != k:
+            s = jnp.pad(s, ((0, 0), (0, kp - k), (0, 0)),
+                        constant_values=base)
+        merged = merge_topics_pallas(s, w, bias, base,
+                                     interpret=interpret)[:k]
+        num = _masked_numerator(merged, num_offset, v_true, tp)
+        norm = jax.lax.psum(num.sum(axis=-1), tp)        # (K,) only
+        return num / norm[:, None]
+
+    return shard_map(
+        body, mesh=env.mesh,
+        in_specs=(P(None, None, tp), P()),
+        out_specs=P(None, tp),
+    )(stats, weights)
+
+
+def merge_topics_ragged_sharded(stats, weights, seg_ids,
+                                num_segments: int, env: MeshEnv, *,
+                                bias: float, base: float,
+                                num_offset: float, v_true: int,
+                                interpret: bool = False):
+    """Ragged batch of vocab-sharded merges: one launch per device.
+
+    stats: (R, K, Vp) — every query's part rows concatenated (CSR),
+    ``seg_ids`` (R,) int32 non-decreasing.  Same collective shape as
+    :func:`merge_topics_sharded` but the normalizer psum carries
+    (num_segments, K) — still independent of V.  Returns β stacked
+    (num_segments, K, Vp), vocab-sharded.
+    """
+    tp = env.tp_axis
+    n_rows, k, _ = stats.shape
+    kp = ((k + 7) // 8) * 8
+
+    def body(seg, s, w):
+        if kp != k:
+            s = jnp.pad(s, ((0, 0), (0, kp - k), (0, 0)),
+                        constant_values=base)
+        merged = merge_topics_ragged_pallas(
+            s, w, seg, num_segments, bias, base,
+            interpret=interpret)[:, :k]
+        num = _masked_numerator(merged, num_offset, v_true, tp)
+        norm = jax.lax.psum(num.sum(axis=-1), tp)        # (b, K)
+        return num / norm[:, :, None]
+
+    return shard_map(
+        body, mesh=env.mesh,
+        in_specs=(P(), P(None, None, tp), P()),
+        out_specs=P(None, None, tp),
+    )(seg_ids, stats, weights)

@@ -28,6 +28,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import make_mesh
+
 
 @dataclass(frozen=True)
 class MeshEnv:
@@ -87,11 +89,25 @@ def set_env(env: MeshEnv):
 
 def single_device_env(profile: str = "train") -> MeshEnv:
     """A (1, 1) mesh over the single local device — used by smoke tests."""
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
-    return MeshEnv(mesh=mesh, profile=profile)
+    return MeshEnv(mesh=make_mesh((1, 1), ("data", "model")),
+                   profile=profile)
+
+
+def local_mesh_env(profile: str = "serve",
+                   max_devices: Optional[int] = None) -> MeshEnv:
+    """A (1, ndev) mesh over every local device, "model" as the TP axis.
+
+    This is the vocab-sharded merge topology: the whole model list is
+    replicated over the (trivial) data axis and each device owns a
+    ``V/ndev`` vocab slice.  ``max_devices`` caps the shard count (e.g.
+    to keep V/ndev tile-aligned on small vocabularies); at one device
+    this degrades to :func:`single_device_env`.
+    """
+    ndev = jax.local_device_count()
+    if max_devices is not None:
+        ndev = max(1, min(ndev, max_devices))
+    return MeshEnv(mesh=make_mesh((1, ndev), ("data", "model")),
+                   profile=profile)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,13 @@ unfused jnp chain reads/writes intermediates ~3x).
 Grid: (K/BK, V/BV); each step streams all n models' tiles (the n axis
 is in the block: (n, BK, BV) — n' is small, ≤ ~64 in every paper
 workload, so the tile set fits VMEM).
+
+``merge_topics_ragged_pallas`` is the segmented (CSR) form: a batch of
+b independent merges with *different* part counts flattened into one
+(R, K, V) row stack plus per-row segment ids — one launch, zero pad
+rows on any batch shape.  The segment id array rides as a scalar-
+prefetch operand so the output index map can route row r's tile to
+block ``seg_ids[r]`` (data-dependent output blocking).
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(stats_ref, w_ref, out_ref, *, bias: float, base: float):
@@ -81,3 +89,62 @@ def merge_topics_batched_pallas(stats, weights, bias: float = 0.0,
         out_shape=jax.ShapeDtypeStruct((b, k, v), jnp.float32),
         interpret=interpret,
     )(stats, w3)
+
+
+def _ragged_kernel(seg_ref, stats_ref, w_ref, out_ref, *, bias: float,
+                   base: float):
+    r = pl.program_id(2)
+    prev = seg_ref[jnp.maximum(r - 1, 0)]
+    is_start = jnp.logical_or(r == 0, seg_ref[r] != prev)
+    s = stats_ref[0].astype(jnp.float32)            # (BK, BV)
+    w = w_ref[0, 0].astype(jnp.float32)
+    contrib = w * (s - base)
+
+    @pl.when(is_start)
+    def _():
+        out_ref[0] = contrib + bias
+
+    @pl.when(jnp.logical_not(is_start))
+    def _():
+        out_ref[0] += contrib
+
+
+def merge_topics_ragged_pallas(stats, weights, seg_ids, num_segments: int,
+                               bias: float = 0.0, base: float = 0.0, *,
+                               block_k: int = 128, block_v: int = 512,
+                               interpret: bool = False):
+    """Segmented merge: b ragged queries, one launch, zero pad rows.
+
+    stats: (R, K, V) f32 — every query's part rows concatenated;
+    weights: (R,) f32; seg_ids: (R,) int32 non-decreasing, seg_ids[r]
+    names the query row r belongs to -> (num_segments, K, V) f32.
+
+    The row axis is the *innermost* grid axis, so all rows of one
+    segment revisit their shared output block on consecutive grid
+    steps — the Pallas TPU requirement for read-modify-write output
+    accumulation.  ``seg_ids`` is a scalar-prefetch operand: the output
+    index map reads it to pick the destination block, and the kernel
+    body compares seg_ids[r] against seg_ids[r-1] to detect segment
+    starts (initialize with bias) vs continuations (accumulate).
+    """
+    n_rows, k, v = stats.shape
+    bk = min(block_k, k)
+    bv = min(block_v, v)
+    w2 = weights.reshape(n_rows, 1).astype(jnp.float32)
+    kernel = functools.partial(_ragged_kernel, bias=bias, base=base)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pl.cdiv(k, bk), pl.cdiv(v, bv), n_rows),
+        in_specs=[
+            pl.BlockSpec((1, bk, bv), lambda i, j, r, seg: (r, i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, r, seg: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, bv),
+                               lambda i, j, r, seg: (seg[r], i, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, k, v), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, stats, w2)

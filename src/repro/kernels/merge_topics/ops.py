@@ -2,11 +2,14 @@
 
 ``merge_vb_stats`` / ``merge_gs_stats`` map the paper's Alg. 1/2 onto
 the fused kernel; core/merge.py stays the host/NumPy reference.
-``merge_topics_batch`` is the one-launch-per-batch entry the device
-execution backend uses to merge several queries' plans at once, and
-``merge_topics_bucketed`` is its ragged-batch form: plans grouped into
-power-of-two size buckets, one launch per bucket, each row padded only
-to its bucket's widest plan instead of the global widest ``n'``.
+``merge_topics_batch`` is the one-launch-per-batch entry for batches
+whose plans all have the same part count; ``merge_topics_ragged`` is
+the true ragged-batch entry the device execution backend uses — plans
+with *different* part counts flatten into one CSR-style (R, K, V) row
+stack merged by the segmented kernel in a single launch with zero pad
+rows.  ``merge_topics_bucketed`` is the retired power-of-two-bucket
+launcher; it stays only as a parity/efficiency reference for the
+ragged path (tests compare the two).
 """
 from __future__ import annotations
 
@@ -15,12 +18,14 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.plan_ir import size_buckets
 from repro.kernels.common import default_interpret
 from repro.kernels.merge_topics.merge_topics import (
     merge_topics_batched_pallas,
     merge_topics_pallas,
+    merge_topics_ragged_pallas,
 )
 
 
@@ -61,11 +66,69 @@ def merge_topics_batch(stats, weights, bias: float = 0.0, base: float = 0.0,
     return out[:, :k, :v]
 
 
+@functools.partial(jax.jit, static_argnames=("num_segments", "bias", "base",
+                                             "interpret"))
+def _merge_topics_ragged_impl(stats, weights, seg_ids, num_segments: int,
+                              bias: float = 0.0, base: float = 0.0,
+                              *, interpret: bool = False):
+    n_rows, k, v = stats.shape
+    kp, vp = _round_up(k, 8), _round_up(v, 128)
+    if (kp, vp) != (k, v):
+        stats = jnp.pad(stats, ((0, 0), (0, kp - k), (0, vp - v)),
+                        constant_values=base)
+    out = merge_topics_ragged_pallas(stats, weights, seg_ids, num_segments,
+                                     bias, base, interpret=interpret)
+    return out[:, :k, :v]
+
+
+def segment_ids(counts: Sequence[int]) -> jnp.ndarray:
+    """CSR row->segment map for a ragged batch: (sum(counts),) int32."""
+    return jnp.asarray(
+        np.repeat(np.arange(len(counts)), list(counts)), jnp.int32)
+
+
+def merge_topics_ragged(stats_list: Sequence, weights_list: Sequence,
+                        bias: float = 0.0, base: float = 0.0,
+                        *, interpret: bool = None
+                        ) -> Tuple[List, int, int]:
+    """Ragged batch of merges: one segmented launch, zero pad rows.
+
+    ``stats_list[i]`` is query i's ``(n_i, K, V)`` stack,
+    ``weights_list[i]`` its ``(n_i,)`` weights.  All stacks concatenate
+    into one ``(R, K, V)`` row stack merged by the segmented kernel —
+    no row padding on *any* batch shape (only K/V tile alignment, which
+    pads with ``base`` and cancels).  Distinct ``(b, R)`` shapes
+    compile separately; the former bucketing scheme existed to bound
+    that recompilation, and the segmented kernel retires it by making
+    every shape a zero-waste launch.
+
+    Returns ``(merged, pad_rows, launches)`` matching the bucketed
+    signature; ``pad_rows`` is always 0 and ``launches`` always 1.
+    """
+    interpret = default_interpret(interpret)
+    counts = [int(s.shape[0]) for s in stats_list]
+    if len(counts) == 1:
+        out = merge_topics(stats_list[0], weights_list[0],
+                           bias=bias, base=base, interpret=interpret)
+        return [out], 0, 1
+    stats = jnp.concatenate([jnp.asarray(s) for s in stats_list], axis=0)
+    weights = jnp.concatenate(
+        [jnp.asarray(w, jnp.float32) for w in weights_list])
+    merged = _merge_topics_ragged_impl(stats, weights, segment_ids(counts),
+                                       len(counts), bias, base,
+                                       interpret=interpret)
+    return [merged[i] for i in range(len(counts))], 0, 1
+
+
 def merge_topics_bucketed(stats_list: Sequence, weights_list: Sequence,
                           bias: float = 0.0, base: float = 0.0,
                           *, interpret: bool = None
                           ) -> Tuple[List, int, int]:
     """Ragged batch of merges: bucketed launches instead of one padded one.
+
+    Retired from the execution hot path in favor of
+    :func:`merge_topics_ragged` (zero pad rows, one launch); kept as
+    the parity/efficiency reference the ragged tests compare against.
 
     ``stats_list[i]`` is query i's ``(n_i, K, V)`` stack, ``weights_list[i]``
     its ``(n_i,)`` weights.  Plans are grouped into power-of-two size

@@ -101,8 +101,10 @@ class ServiceReport:
     counters (device-cache traffic across every session).
 
     Hardening telemetry: ``shed``/``deadline_rejected`` are service-
-    wide admission rejections, ``queue_depth`` the current pending
-    count per worker pool, ``slo`` each backend's sliding latency
+    wide admission rejections, ``bisect_retries`` the fused groups
+    re-split after a failed ``submit_many`` (each split halves the
+    group — O(log n) per malformed spec), ``queue_depth`` the current
+    pending count per worker pool, ``slo`` each backend's sliding latency
     window and active degradation level, ``tenant_evictions`` the
     idle-TTL lifecycle churn and ``active_sessions`` the tenants
     currently resident.
@@ -123,6 +125,7 @@ class ServiceReport:
     store_bytes: int = 0
     shed: int = 0
     deadline_rejected: int = 0
+    bisect_retries: int = 0
     degraded_queries: int = 0
     tenant_evictions: int = 0
     active_sessions: int = 0

@@ -24,10 +24,13 @@ drained together and are compatible — same trainer kind, same
 execution backend; α may differ, the session's α-split machinery
 handles it — are fused into one ``submit_many`` call, so independent
 interactive users ride Alg. 4's joint planning (shared gap segments
-trained once) and the size-bucketed batched merge launches instead of
+trained once) and the ragged segmented merge launch instead of
 issuing n serial single-query merges.  A group whose fused execution
-fails is retried query-by-query, so one malformed spec cannot poison
-its coalescing window's neighbors.
+fails is **bisected**: each half retries fused, recursively, so one
+malformed spec is isolated in O(log n) retries while its healthy
+window neighbors keep their shared-segment training — not the n
+serial re-executions a query-by-query fallback would pay
+(``ServiceReport.bisect_retries`` counts the splits).
 
 Production hardening:
 
@@ -121,10 +124,12 @@ def _reject(future: "Future", exc: BaseException) -> None:
 
 
 class _Pool:
-    """One backend name's worker pool: a coalescing queue plus its
-    drain threads.  Worker 0 is the *home* worker (drains only this
+    """One backend *instance*'s worker pool: a coalescing queue plus
+    its drain threads.  Worker 0 is the *home* worker (drains only this
     queue — a stall in another pool can never capture it); workers
-    1..n-1 steal from sibling pools when this queue is idle."""
+    1..n-1 steal from sibling pools when this queue is idle.  ``name``
+    is the display label (the backend's name, ``#k``-suffixed when two
+    distinct instances share one)."""
 
     def __init__(self, name: str, queue: CoalescingQueue):
         self.name = name
@@ -246,12 +251,14 @@ class MLegoService:
         self._width_sum = self._max_coalesce_width = 0
         self._shed = self._deadline_rejected = 0
         self._degraded = self._tenant_evictions = 0
+        self._bisect_retries = 0
 
         self._closed = False
         self._stop = threading.Event()
-        self._pools: Dict[str, _Pool] = {}
+        # keyed by backend instance identity (or "*" single-loop)
+        self._pools: Dict[object, _Pool] = {}
         self._pool_lock = threading.Lock()
-        self._pool_for(self.backend.name)       # default pool, eagerly
+        self._pool_for(self.backend)            # default pool, eagerly
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -294,18 +301,28 @@ class MLegoService:
     # ------------------------------------------------------------------
     # worker pools
     # ------------------------------------------------------------------
-    def _pool_for(self, backend_name: str) -> _Pool:
-        """The worker pool owning ``backend_name``'s traffic (one
-        shared pool when ``pool_per_backend=False``), created lazily —
-        a service that never sees device specs never starts device
-        workers."""
-        key = backend_name if self.pool_per_backend else "*"
+    def _pool_for(self, backend: ExecutionBackend) -> _Pool:
+        """The worker pool owning this backend *instance*'s traffic
+        (one shared pool when ``pool_per_backend=False``), created
+        lazily — a service that never sees device specs never starts
+        device workers.  Keyed by instance identity, not ``.name``:
+        two distinct backends that happen to share a name (a custom
+        instance passed at construction alongside a factory-made
+        sibling) must never share a queue, or one's stall would
+        head-of-line block the other's traffic."""
+        key: object = id(backend) if self.pool_per_backend else "*"
         with self._pool_lock:
             pool = self._pools.get(key)
             if pool is None:
                 if self._closed:
                     raise ServiceClosedError("service is closed")
-                pool = _Pool(key, CoalescingQueue(
+                name = backend.name if self.pool_per_backend else "*"
+                taken = {p.name for p in self._pools.values()}
+                if name in taken:
+                    dups = sum(1 for p in self._pools.values()
+                               if p.name.split("#")[0] == name)
+                    name = f"{name}#{dups + 1}"
+                pool = _Pool(name, CoalescingQueue(
                     window_s=self._window_s, max_width=self._max_width,
                     max_queue=self._max_queue, on_shed=self._note_displaced))
                 self._pools[key] = pool
@@ -313,7 +330,7 @@ class MLegoService:
                     t = threading.Thread(
                         target=self._run,
                         args=(pool, i > 0 and self.pool_per_backend),
-                        name=f"mlego-serve-{key}-{i}", daemon=True)
+                        name=f"mlego-serve-{name}-{i}", daemon=True)
                     pool.threads.append(t)
                     t.start()
             return pool
@@ -477,12 +494,13 @@ class MLegoService:
                     if max_queue_wait_s is not None
                     else options.max_queue_wait_s)
         self.session(tenant)           # construct early: fail fast here
+        inst = self.backend
         if spec.backend is not None:
             # route named backends to the shared per-name instance
             # before the worker executes (registers into every session)
-            self._shared_backend(spec.backend)
+            inst = self._shared_backend(spec.backend)
         item = PendingQuery(spec=spec, tenant=tenant, options=opts)
-        pool = self._pool_for(spec.backend or self.backend.name)
+        pool = self._pool_for(inst)
         try:
             pool.queue.put(item)
         except ShedError:
@@ -670,28 +688,7 @@ class MLegoService:
             # membership and arrival order can't leak into another
             # tenant's RNG stream
             items.sort(key=lambda it: it.tenant)
-            sessions = [self.session(it.tenant) for it in items]
-            specs = [self._degrade_spec(it.spec, level, sessions[0])
-                     for it in items]
-            try:
-                br = sessions[0].submit_many(
-                    specs, next_keys=[s._next_key for s in sessions])
-            except Exception:
-                # isolate the offender: re-run the group query-by-query
-                # so only the failing spec's future carries the error
-                self._execute_serial(items, level)
-                return
-            with self._stats_lock:
-                self._groups += 1
-                self._coalesced_groups += 1
-                self._width_sum += width
-                self._max_coalesce_width = max(self._max_coalesce_width,
-                                               width)
-            for it, rep in zip(items, br.reports):
-                rep.degraded = level
-                self._record(it, t0, width, br.plan_cached,
-                             model_ids=rep.model_ids, degraded=level)
-                _resolve(it.future, rep)
+            self._execute_fused(items, level, t0)
         finally:
             with self._stats_lock:
                 for it in items:
@@ -700,6 +697,46 @@ class MLegoService:
                         self._inflight.pop(it.tenant, None)
                     else:
                         self._inflight[it.tenant] = n
+
+    def _execute_fused(self, items: List[PendingQuery], level: int,
+                       t0: float) -> None:
+        """Fused execution with bisecting failure isolation.
+
+        A failed ``submit_many`` splits the group in half and retries
+        each half fused, recursing down to width 1 (which runs through
+        the serial path and surfaces the error on exactly the failing
+        spec's future).  One malformed spec therefore costs O(log n)
+        extra launches while every all-healthy half keeps its Alg. 4
+        shared-segment training — the retired query-by-query fallback
+        forfeited joint planning for the entire window."""
+        width = len(items)
+        if width == 1:
+            self._execute_serial(items, level)
+            return
+        sessions = [self.session(it.tenant) for it in items]
+        specs = [self._degrade_spec(it.spec, level, sessions[0])
+                 for it in items]
+        try:
+            br = sessions[0].submit_many(
+                specs, next_keys=[s._next_key for s in sessions])
+        except Exception:
+            mid = width // 2
+            with self._stats_lock:
+                self._bisect_retries += 1
+            self._execute_fused(items[:mid], level, t0)
+            self._execute_fused(items[mid:], level, t0)
+            return
+        with self._stats_lock:
+            self._groups += 1
+            self._coalesced_groups += 1
+            self._width_sum += width
+            self._max_coalesce_width = max(self._max_coalesce_width,
+                                           width)
+        for it, rep in zip(items, br.reports):
+            rep.degraded = level
+            self._record(it, t0, width, br.plan_cached,
+                         model_ids=rep.model_ids, degraded=level)
+            _resolve(it.future, rep)
 
     def _execute_serial(self, items: List[PendingQuery],
                         level: int = 0) -> None:
@@ -861,6 +898,7 @@ class MLegoService:
                 store_bytes=self.store.nbytes(),
                 shed=self._shed,
                 deadline_rejected=self._deadline_rejected,
+                bisect_retries=self._bisect_retries,
                 degraded_queries=self._degraded,
                 tenant_evictions=self._tenant_evictions,
                 active_sessions=active,

@@ -231,14 +231,14 @@ def test_reports_expose_cache_resident_bytes(train):
 
 
 # ---------------------------------------------------------------------------
-# size-bucketed batch launches (§V.C)
+# ragged segmented batch launches (§V.C)
 # ---------------------------------------------------------------------------
 
-def test_bucketed_launches_pad_less_than_widest(train):
-    """A ragged batch must pad ≤ the old pad-to-global-widest scheme
-    while keeping exact parity with per-query host merges."""
-    from repro.core.plan_ir import pad_rows_widest
-
+def test_ragged_batch_single_launch_zero_pad(train):
+    """A ragged batch runs as ONE segmented launch with zero pad rows —
+    even on the adversarial one-wide-outlier shape that the retired
+    bucketed scheme handled worst — while keeping exact parity with
+    per-query host merges."""
     host, dev = _sessions(train, "vb",
                           edges=(0.0, 75.0, 150.0, 225.0, 300.0))
     specs = [QuerySpec(sigma=Interval(0.0, 300.0), alpha=0.0),   # 4 parts
@@ -249,14 +249,13 @@ def test_bucketed_launches_pad_less_than_widest(train):
     bd = dev.submit_many(specs)
     for rh, rd in zip(bh, bd):
         np.testing.assert_allclose(rh.beta, rd.beta, rtol=1e-5, atol=1e-5)
-    counts = [r.n_merged for r in bd]
-    assert bd.pad_rows <= pad_rows_widest(counts)
-    assert bd.pad_rows == 0, "1/1/1 bucket together, 4 rides alone"
-    # one launch per occupied bucket, not one per query
-    assert dev.backend.stats.device_launches == 2
+    assert bd.pad_rows == 0
+    assert dev.backend.stats.pad_rows == 0
+    # one segmented launch for the whole batch, not one per bucket
+    assert dev.backend.stats.device_launches == 1
 
 
-def test_uniform_batch_single_bucket(train):
+def test_uniform_batch_zero_pad(train):
     _, dev = _sessions(train, "vb")
     specs = [QuerySpec(sigma=Interval(0.0, 200.0), alpha=0.0),
              QuerySpec(sigma=Interval(100.0, 300.0), alpha=0.0)]

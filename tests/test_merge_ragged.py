@@ -1,0 +1,113 @@
+"""Ragged segmented merge kernel vs the bucketed launcher and host ref.
+
+The segmented kernel (one launch, CSR segment ids, zero pad rows on
+*any* batch shape) replaced the power-of-two bucketed launcher on the
+execution hot path; the bucketed form stays as the parity reference.
+Adversarial batch shapes run as example tests everywhere; hypothesis
+(optional dev dep, see ci.yml) widens them to random ragged batches.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.merge_topics.ops import (
+    merge_topics_bucketed,
+    merge_topics_ragged,
+    segment_ids,
+)
+from repro.kernels.merge_topics.ref import merge_topics_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # optional dev dep (see ci.yml)
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.default_rng(17)
+
+
+def _batch(counts, k, v):
+    stats = [jnp.asarray(RNG.gamma(1.0, 1.0, (n, k, v)), jnp.float32)
+             for n in counts]
+    weights = [jnp.asarray(RNG.uniform(0.2, 2.0, n), jnp.float32)
+               for n in counts]
+    return stats, weights
+
+
+def _check(counts, k, v, bias, base):
+    stats, weights = _batch(counts, k, v)
+    out, pad_rows, launches = merge_topics_ragged(
+        stats, weights, bias=bias, base=base, interpret=True)
+    assert pad_rows == 0, f"ragged launch padded on shape {counts}"
+    assert launches == 1
+    ref_out, _, _ = merge_topics_bucketed(
+        stats, weights, bias=bias, base=base, interpret=True)
+    for got, buck, s, w in zip(out, ref_out, stats, weights):
+        ref = merge_topics_ref(s, w, bias, base)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(buck),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# adversarial batch shapes (run everywhere)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("counts", [
+    [1],                  # n' = 1: single row, single segment
+    [1, 1, 1],            # all-equal width 1
+    [3, 3, 3],            # all-equal width > 1
+    [5, 4, 3, 2, 1],      # strictly descending
+    [1, 1, 1, 16],        # single wide outlier (worst bucketed shape)
+])
+@pytest.mark.parametrize("k,v", [(12, 128), (6, 150)])  # aligned + ragged KV
+def test_ragged_matches_bucketed_and_ref(counts, k, v):
+    _check(counts, k, v, bias=0.05, base=0.05)      # MVB form
+    _check(counts, k, v, bias=0.0, base=0.0)        # MGS form
+
+
+def test_segment_ids_csr():
+    np.testing.assert_array_equal(
+        np.asarray(segment_ids([2, 1, 3])), [0, 0, 1, 2, 2, 2])
+    assert segment_ids([4]).dtype == jnp.int32
+
+
+def test_ragged_never_pads_where_bucketed_does():
+    """The one-wide-outlier shape forces the bucketed launcher to pad;
+    the segmented launch must not, while agreeing on every output."""
+    counts = [1, 1, 1, 16]
+    stats, weights = _batch(counts, 8, 128)
+    _, ragged_pad, ragged_launches = merge_topics_ragged(
+        stats, weights, interpret=True)
+    _, bucketed_pad, bucketed_launches = merge_topics_bucketed(
+        stats, weights, interpret=True)
+    assert ragged_pad == 0
+    assert ragged_launches == 1
+    assert bucketed_launches >= 2       # one per occupied bucket
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis, when available)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    COUNTS = st.lists(st.integers(1, 8), min_size=1, max_size=5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(COUNTS, st.sampled_from([(8, 128), (5, 96), (11, 130)]),
+           st.sampled_from([(0.05, 0.05), (0.0, 0.0)]))
+    def test_ragged_property_parity(counts, kv, form):
+        k, v = kv
+        bias, base = form
+        _check(counts, k, v, bias=bias, base=base)
+
+    @settings(max_examples=15, deadline=None)
+    @given(COUNTS)
+    def test_ragged_property_zero_pad(counts):
+        stats, weights = _batch(counts, 8, 128)
+        _, pad_rows, launches = merge_topics_ragged(
+            stats, weights, interpret=True)
+        assert pad_rows == 0
+        assert launches == 1
