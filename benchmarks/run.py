@@ -20,6 +20,9 @@
   ingest              (ours)     streaming ingestion: freshness lag,
                                  speculative pre-training A/B (p50 +
                                  hit rate), compaction budget/quality
+  chaos               (ours)     serve trace under injected faults:
+                                 goodput, retry counts, breaker opens/
+                                 reroutes, device-loss recovery time
   kernels             (ours)     Pallas kernel parity timings
   roofline            (ours)     table from dry-run artifacts, if present
 
@@ -282,6 +285,23 @@ def main() -> None:
               f"{cp['beta_max_abs_delta']:.2e}, topic overlap "
               f"{cp['topic_overlap']:.3f}")
         out["ingest"] = ib
+
+    if want("chaos"):
+        _section("chaos (serve goodput under injected faults)")
+        from benchmarks import serve_bench
+        cz = serve_bench.run_chaos(n_docs=600 if args.quick else 1200,
+                                   quick=args.quick)
+        rec = (f"{cz['recovery_s']:.3f}s" if cz["recovery_s"] is not None
+               else "n/a")
+        print(f"# chaos ({cz['fault_rate']:.0%} transient): goodput "
+              f"{cz['goodput']:.3f} ({cz['answered']}/{cz['queries']}), "
+              f"{cz['injected_failures']} faults, {cz['retries']} "
+              f"retries, {cz['fallback_answers']} fallback answers")
+        print(f"# breaker: opens {cz['breaker_opens']} (final "
+              f"{cz['breaker_final_state']}), reroutes "
+              f"{cz['breaker_reroutes']}, device-loss recovery {rec}, "
+              f"workers_alive {cz['workers_alive']}")
+        out["chaos"] = cz
 
     if want("kernels"):
         _section("kernels (interpret-mode parity timings)")

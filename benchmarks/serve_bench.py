@@ -34,6 +34,14 @@ is shed rate > 0 *with* answered p95 still inside the SLO.
 the per-backend worker pools and through the pre-hardening single-loop
 topology (``pool_per_backend=False``, one worker): pools let host and
 device groups execute concurrently instead of serializing.
+
+``run_chaos`` replays the trace under the deterministic fault
+injector: a configurable transient rate on the merge/fetch/store
+sites plus one injected device loss mid-trace.  It reports goodput
+(answered fraction), the retry ledger, breaker transition counts, the
+reroute count while the device backend sat quarantined, and the
+recovery time from device loss to the first post-probe device-served
+answer — the acceptance check is goodput ≈ 1 with zero worker deaths.
 """
 from __future__ import annotations
 
@@ -50,7 +58,8 @@ from repro.api import (
     QuerySpec,
 )
 from repro.core.store import ModelStore
-from repro.serve import MLegoService, ShedError, SLOPolicy
+from repro.serve import BreakerPolicy, MLegoService, ShedError, SLOPolicy
+from repro.testing.faults import FaultInjector, FaultRule, injected
 
 
 def _percentile(xs: List[float], p: float) -> float:
@@ -351,6 +360,87 @@ def run_pool_comparison(n_docs=600, seed=0, quick=False, n_clients=4,
     }
 
 
+def run_chaos(n_docs=600, seed=0, quick=False, fault_rate=0.1,
+              n_queries=None) -> Dict:
+    """Closed-loop trace under deterministic chaos.
+
+    ``fault_rate`` transient injection on the merge, fetch and store
+    sites, plus exactly one device loss a quarter of the way in.  The
+    retry layer must absorb the transients, the session fallback chain
+    must answer through the loss, the breaker must open/reroute/probe/
+    close, and no worker thread may die — goodput stays ≈ 1.
+    """
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    if n_queries is None:
+        n_queries = 32 if quick else 120
+    cooldown = 0.2 if quick else 1.0
+
+    svc = MLegoService(train, cfg, kind="vb", seed=seed, window_s=0.0,
+                       backend="device",
+                       breaker=BreakerPolicy(cooldown_s=cooldown))
+    svc.train_range(0.0, hi / 2)
+
+    def spec_for(i: int) -> QuerySpec:
+        lo = (i * 0.31 * hi) % (hi / 2)
+        return QuerySpec(sigma=Interval(lo, lo + hi / 2), alpha=1.0,
+                         materialize="volatile")
+
+    inj = FaultInjector([
+        FaultRule("backend.merge", rate=fault_rate),
+        FaultRule("backend.fetch", rate=fault_rate),
+        FaultRule("store.get", rate=fault_rate),
+        FaultRule("backend.merge.device", rate=1.0, kind="device_lost",
+                  after=max(2, n_queries // 4), max_failures=1),
+    ], seed=seed)
+
+    answered = failed = fallback_answers = 0
+    t_loss = t_recovered = None
+    t0 = time.perf_counter()
+    with injected(inj):
+        for i in range(n_queries):
+            try:
+                rep = svc.submit(spec_for(i)).result(timeout=600)
+            except Exception:
+                failed += 1
+                continue
+            answered += 1
+            now = time.perf_counter()
+            if rep.fallback_from is not None:
+                fallback_answers += 1
+                if t_loss is None:
+                    t_loss = now
+            elif t_loss is not None and t_recovered is None \
+                    and rep.backend == "device":
+                t_recovered = now
+    wall = time.perf_counter() - t0
+    report = svc.report()
+    workers_alive = all(t.is_alive() for p in svc._pools_snapshot()
+                        for t in p.threads)
+    svc.close()
+
+    dev = report.breaker.get("device")
+    return {
+        "fault_rate": fault_rate,
+        "queries": n_queries,
+        "answered": answered,
+        "failed": failed,
+        "goodput": answered / n_queries if n_queries else 0.0,
+        "injected_failures": inj.total_failures,
+        "retries": sum(report.retries.values()),
+        "retries_by_site": dict(report.retries),
+        "fallback_answers": fallback_answers,
+        "breaker_opens": dev.opens if dev is not None else 0,
+        "breaker_final_state": dev.state if dev is not None else "n/a",
+        "breaker_reroutes": report.breaker_reroutes,
+        "recovery_s": (t_recovered - t_loss)
+        if t_loss is not None and t_recovered is not None else None,
+        "workers_alive": workers_alive,
+        "wall_s": wall,
+    }
+
+
 def main() -> None:
     out = run()
     s, c = out["serial"], out["coalesced"]
@@ -376,6 +466,16 @@ def main() -> None:
     print(f"# pools: single-loop {pc['single_loop']['wall_s']:.2f}s vs "
           f"pooled {pc['pooled']['wall_s']:.2f}s "
           f"({pc['pool_speedup']:.2f}x)")
+    ch = run_chaos(quick=True)
+    rec = f"{ch['recovery_s']:.3f}s" if ch['recovery_s'] is not None \
+        else "n/a"
+    print(f"# chaos ({ch['fault_rate']:.0%} transient): goodput "
+          f"{ch['goodput']:.3f} ({ch['answered']}/{ch['queries']}), "
+          f"{ch['injected_failures']} faults, {ch['retries']} retries, "
+          f"{ch['fallback_answers']} fallback answers, breaker opens "
+          f"{ch['breaker_opens']} (final {ch['breaker_final_state']}), "
+          f"reroutes {ch['breaker_reroutes']}, recovery {rec}, "
+          f"workers_alive {ch['workers_alive']}")
 
 
 if __name__ == "__main__":

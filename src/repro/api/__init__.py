@@ -44,6 +44,14 @@ from repro.core.cost import (
     CostModel,
     CostProvider,
 )
+from repro.core.errors import (
+    CorruptModelError,
+    DeviceLostError,
+    ExecutionError,
+    PermanentExecutionError,
+    RetryPolicy,
+    TransientExecutionError,
+)
 from repro.core.plan_ir import FetchStep, MergeStep, Plan, TrainGapStep
 from repro.core.plans import Interval
 
@@ -55,10 +63,13 @@ __all__ = [
     "CalibratedCostModel",
     "Calibration",
     "calibration_sidecar",
+    "CorruptModelError",
     "CostModel",
     "CostProvider",
     "DeviceBackend",
+    "DeviceLostError",
     "ExecutionBackend",
+    "ExecutionError",
     "FetchStep",
     "HostBackend",
     "Interval",
@@ -71,9 +82,12 @@ __all__ = [
     "MATERIALIZE_POLICIES",
     "MLegoSession",
     "PERSIST",
+    "PermanentExecutionError",
     "QueryReport",
     "QuerySpec",
+    "RetryPolicy",
     "StalePlanError",
+    "TransientExecutionError",
     "VOLATILE",
     "available_trainers",
     "get_trainer",

@@ -47,6 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from contextlib import contextmanager
+
 from repro.api.trainers import (
     TrainerFn,
     get_merge,
@@ -54,6 +56,7 @@ from repro.api.trainers import (
     merge_family_name,
 )
 from repro.configs.lda_default import LDAConfig
+from repro.core.errors import DeviceLostError
 from repro.core.lda import MaterializedModel
 from repro.core.merge import (
     device_merge_params,
@@ -74,8 +77,19 @@ from repro.kernels.merge_topics.ops import (
     merge_topics_ragged,
     segment_ids,
 )
+from repro.testing.faults import maybe_fail
 
 BACKEND_NAMES = ("host", "device", "device_sharded")
+
+# Runtime errors the device toolchain raises when an accelerator dies
+# mid-launch (OOM, halted device, failed transfer).  Translated to
+# ``DeviceLostError`` so callers can quarantine the backend and replay
+# on the fallback chain instead of failing the query.
+_JAX_RUNTIME_ERRORS = tuple(
+    t for t in (getattr(getattr(jax, "errors", None),
+                        "JaxRuntimeError", None),
+                getattr(jax.lib, "XlaRuntimeError", None))
+    if isinstance(t, type))
 
 
 @dataclass(frozen=True)
@@ -134,6 +148,31 @@ class ExecutionBackend:
         # bytes).  Callers hold this around snapshot -> launch -> diff
         # sections — coarse, but the device serializes launches anyway.
         self.measure_lock = threading.RLock()
+        # health: a quarantined backend is suspected of device loss;
+        # sessions route around it until a breaker probe re-admits it
+        self.quarantined = False
+
+    # -- health ----------------------------------------------------------
+    def quarantine(self) -> None:
+        """Mark unhealthy (device lost).  Idempotent."""
+        self.quarantined = True
+
+    def unquarantine(self) -> None:
+        """Re-admit after a successful health probe."""
+        self.quarantined = False
+
+    @contextmanager
+    def _device_guard(self):
+        """Translate raw runtime crashes into ``DeviceLostError`` so
+        the caller knows the *backend* is suspect, not the query."""
+        try:
+            yield
+        except DeviceLostError:
+            raise
+        except _JAX_RUNTIME_ERRORS as exc:
+            raise DeviceLostError(
+                f"{self.name} backend lost its device: {exc}",
+                backend=self.name) from exc
 
     # -- lifecycle -------------------------------------------------------
     def bind_store(self, store: ModelStore) -> None:
@@ -182,6 +221,9 @@ class HostBackend(ExecutionBackend):
     name = "host"
 
     def merge(self, parts, kind, cfg):
+        maybe_fail("backend.merge.host")
+        for _ in parts:
+            maybe_fail("backend.fetch.host")
         self._count(merges=1)
         return get_merge(kind)(list(parts), cfg)
 
@@ -375,19 +417,32 @@ class DeviceBackend(ExecutionBackend):
         self.cache.invalidate(model_id)
         self._sync_cache_counters()
 
+    def quarantine(self) -> None:
+        # resident copies on a lost device are garbage; drop them so a
+        # re-admitted backend re-uploads from the store
+        super().quarantine()
+        self.cache.clear()
+        self._sync_cache_counters()
+
+    def _fetch(self, model, stat_key: str) -> jax.Array:
+        maybe_fail(f"backend.fetch.{self.name}")
+        return self.cache.get(model, stat_key)
+
     # -- merge -----------------------------------------------------------
     def merge(self, parts, kind, cfg):
+        maybe_fail(f"backend.merge.{self.name}")
         fam = merge_family_name(kind)
         if fam is None:                  # custom merge callable: host only
             self._count(merges=1, host_fallbacks=1)
             return get_merge(kind)(list(parts), cfg)
         stat_key, bias, base, finish = device_merge_params(fam, cfg)
         t0 = time.perf_counter()
-        stats = jnp.stack([self.cache.get(m, stat_key) for m in parts])
-        w = jnp.ones((len(parts),), jnp.float32)
-        merged = merge_topics(stats, w, bias=bias, base=base,
-                              interpret=self.interpret)
-        merged.block_until_ready()
+        with self._device_guard():
+            stats = jnp.stack([self._fetch(m, stat_key) for m in parts])
+            w = jnp.ones((len(parts),), jnp.float32)
+            merged = merge_topics(stats, w, bias=bias, base=base,
+                                  interpret=self.interpret)
+            merged.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         self._sync_cache_counters()
         self._count(merges=1, device_launches=1, merge_device_ms=ms)
@@ -407,18 +462,20 @@ class DeviceBackend(ExecutionBackend):
             return super().merge_many(part_lists, kind, cfg)
         if len(part_lists) == 1:
             return [self.merge(part_lists[0], kind, cfg)]
+        maybe_fail(f"backend.merge.{self.name}")
         stat_key, bias, base, finish = device_merge_params(fam, cfg)
         t0 = time.perf_counter()
-        stats_list, weights_list = [], []
-        for parts in part_lists:
-            stats_list.append(
-                jnp.stack([self.cache.get(m, stat_key) for m in parts]))
-            weights_list.append(jnp.ones((len(parts),), jnp.float32))
-        merged, pad_rows, launches = merge_topics_ragged(
-            stats_list, weights_list, bias=bias, base=base,
-            interpret=self.interpret)
-        for row in merged:
-            row.block_until_ready()
+        with self._device_guard():
+            stats_list, weights_list = [], []
+            for parts in part_lists:
+                stats_list.append(
+                    jnp.stack([self._fetch(m, stat_key) for m in parts]))
+                weights_list.append(jnp.ones((len(parts),), jnp.float32))
+            merged, pad_rows, launches = merge_topics_ragged(
+                stats_list, weights_list, bias=bias, base=base,
+                interpret=self.interpret)
+            for row in merged:
+                row.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         # a padding row carries one part's worth of (K, V) f32 bytes —
         # the per-byte cost calibration prices it from this
@@ -541,6 +598,7 @@ class ShardedDeviceBackend(DeviceBackend):
 
     # -- merge -----------------------------------------------------------
     def merge(self, parts, kind, cfg):
+        maybe_fail(f"backend.merge.{self.name}")
         fam = merge_family_name(kind)
         if fam is None:                  # custom merge callable: host only
             self._count(merges=1, host_fallbacks=1)
@@ -548,13 +606,14 @@ class ShardedDeviceBackend(DeviceBackend):
         stat_key, bias, base, _ = device_merge_params(fam, cfg)
         v_true = int(parts[0].theta[stat_key].shape[-1])
         t0 = time.perf_counter()
-        stats = jnp.stack([self.cache.get(m, stat_key) for m in parts])
-        w = jnp.ones((len(parts),), jnp.float32)
-        beta = merge_topics_sharded(
-            stats, w, self.env, bias=bias, base=base,
-            num_offset=device_norm_offset(fam, cfg), v_true=v_true,
-            interpret=default_interpret(self.interpret))
-        beta.block_until_ready()
+        with self._device_guard():
+            stats = jnp.stack([self._fetch(m, stat_key) for m in parts])
+            w = jnp.ones((len(parts),), jnp.float32)
+            beta = merge_topics_sharded(
+                stats, w, self.env, bias=bias, base=base,
+                num_offset=device_norm_offset(fam, cfg), v_true=v_true,
+                interpret=default_interpret(self.interpret))
+            beta.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         self._sync_cache_counters()
         self._count(merges=1, device_launches=1, merge_device_ms=ms)
@@ -566,20 +625,22 @@ class ShardedDeviceBackend(DeviceBackend):
             return ExecutionBackend.merge_many(self, part_lists, kind, cfg)
         if len(part_lists) == 1:
             return [self.merge(part_lists[0], kind, cfg)]
+        maybe_fail(f"backend.merge.{self.name}")
         stat_key, bias, base, _ = device_merge_params(fam, cfg)
         v_true = int(part_lists[0][0].theta[stat_key].shape[-1])
         counts = [len(parts) for parts in part_lists]
         t0 = time.perf_counter()
-        rows = [self.cache.get(m, stat_key)
-                for parts in part_lists for m in parts]
-        stats = jnp.stack(rows)
-        w = jnp.ones((len(rows),), jnp.float32)
-        beta = merge_topics_ragged_sharded(
-            stats, w, segment_ids(counts), len(counts), self.env,
-            bias=bias, base=base,
-            num_offset=device_norm_offset(fam, cfg), v_true=v_true,
-            interpret=default_interpret(self.interpret))
-        beta.block_until_ready()
+        with self._device_guard():
+            rows = [self._fetch(m, stat_key)
+                    for parts in part_lists for m in parts]
+            stats = jnp.stack(rows)
+            w = jnp.ones((len(rows),), jnp.float32)
+            beta = merge_topics_ragged_sharded(
+                stats, w, segment_ids(counts), len(counts), self.env,
+                bias=bias, base=base,
+                num_offset=device_norm_offset(fam, cfg), v_true=v_true,
+                interpret=default_interpret(self.interpret))
+            beta.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         self._sync_cache_counters()
         self._count(merges=len(part_lists), device_launches=1,

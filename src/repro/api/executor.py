@@ -38,19 +38,24 @@ import numpy as np
 from repro.api.backend import ExecutionBackend, HostBackend
 from repro.api.trainers import get_trainer, merge_family_name, resolve_kind
 from repro.configs.lda_default import LDAConfig
+from repro.core.errors import (DeviceLostError, RetryPolicy,
+                               TransientExecutionError)
 from repro.core.lda import MaterializedModel
 from repro.core.plan_ir import Plan
 from repro.core.plans import Interval
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
+from repro.testing.faults import maybe_fail
 
 
-class StalePlanError(KeyError):
+class StalePlanError(KeyError, TransientExecutionError):
     """A plan's fetched model vanished from the store between planning
     and execution — background compaction/eviction (``repro.ingest``)
     removed it mid-query.  The store mutation already invalidated the
     plan cache, so a re-plan over the current model set succeeds;
-    ``MLegoSession.submit`` retries once on this."""
+    ``MLegoSession.submit`` re-plans on this (transient in the
+    taxonomy, but a blind same-plan retry can never succeed — callers
+    must re-plan, so the executor's own retry loop excludes it)."""
 
 
 def _resolves_to(tag: str, kind: str) -> bool:
@@ -87,7 +92,8 @@ def _parts_kind(parts: Sequence[MaterializedModel]) -> str:
 
 class Executor:
     def __init__(self, corpus: Corpus, cfg: LDAConfig, store: ModelStore,
-                 next_key: Callable[[], object]):
+                 next_key: Callable[[], object],
+                 retry: Optional[RetryPolicy] = None):
         self.corpus = corpus
         self.cfg = cfg
         # (kind, frozenset(model ids), summed ΔN_kv) — see _gs_prior.
@@ -97,6 +103,10 @@ class Executor:
         self.store = store
         self._next_key = next_key
         self._host = HostBackend()
+        # One policy object for every data-plane call this executor
+        # makes (fetch, train, merge); the session/service surface its
+        # per-site counters in reports.
+        self.retry = retry if retry is not None else RetryPolicy()
 
     @property
     def store(self) -> ModelStore:
@@ -140,8 +150,18 @@ class Executor:
             prior = self._gs_prior(kind)
             if prior is not None:
                 kwargs["global_nkv"] = prior
-        theta = trainer(sub, self.cfg, (next_key or self._next_key)(),
-                        **kwargs)
+        key = (next_key or self._next_key)()
+        site = "backend.train_gap." + (backend.name if backend is not None
+                                       else "host")
+
+        def _train():
+            maybe_fail(site)
+            return trainer(sub, self.cfg, key, **kwargs)
+
+        # Device loss is excluded: a blind retry would hit the same
+        # dead device — the session replays on the fallback chain.
+        theta = self.retry.run(_train, site=site,
+                               no_retry=(DeviceLostError,))
         if persist:
             m = self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
                                kind, theta)
@@ -204,13 +224,20 @@ class Executor:
         ``train_obs`` one measured ``(tokens, seconds)`` sample per
         trained gap (the calibrated cost provider's κ input).
         """
-        try:
-            parts: List[MaterializedModel] = [
-                self.store.get(f.model_id) for f in plan.fetches]
-        except KeyError as exc:
-            raise StalePlanError(
-                f"planned model {exc.args[0]!r} was removed from the "
-                f"store (background compaction/eviction?)") from exc
+        def _fetch_parts() -> List[MaterializedModel]:
+            try:
+                return [self.store.get(f.model_id) for f in plan.fetches]
+            except StalePlanError:
+                raise
+            except KeyError as exc:
+                raise StalePlanError(
+                    f"planned model {exc.args[0]!r} was removed from the "
+                    f"store (background compaction/eviction?)") from exc
+
+        # store.get faults (injected or real I/O hiccups) retry in
+        # place; a StalePlanError propagates — only a re-plan helps.
+        parts = self.retry.run(_fetch_parts, site="store.get",
+                               no_retry=(StalePlanError,))
         fresh: List[MaterializedModel] = []
         n_tok = 0
         obs: List[Tuple[int, float]] = []
@@ -231,7 +258,10 @@ class Executor:
         kind's merge family (Alg. 1 for vb, Alg. 2 for gs) on the given
         execution backend (host semantics when None)."""
         kind = _parts_kind(parts)
-        return (backend or self._host).merge(list(parts), kind, self.cfg)
+        b = backend or self._host
+        return self.retry.run(
+            lambda: b.merge(list(parts), kind, self.cfg),
+            site=f"backend.merge.{b.name}", no_retry=(DeviceLostError,))
 
     def merge_many(self, part_lists: Sequence[Sequence[MaterializedModel]],
                    backend: Optional[ExecutionBackend] = None
@@ -243,5 +273,9 @@ class Executor:
         kinds = {_parts_kind(p) for p in part_lists}
         if len(kinds) != 1:
             raise ValueError(f"cannot batch-merge mixed kinds {kinds}")
-        return (backend or self._host).merge_many(
-            [list(p) for p in part_lists], kinds.pop(), self.cfg)
+        kind = kinds.pop()
+        b = backend or self._host
+        return self.retry.run(
+            lambda: b.merge_many([list(p) for p in part_lists], kind,
+                                 self.cfg),
+            site=f"backend.merge.{b.name}", no_retry=(DeviceLostError,))

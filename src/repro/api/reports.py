@@ -10,7 +10,7 @@ query's result, so per-query latency stats stay meaningful.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -49,6 +49,12 @@ class QueryReport:
     spec's effective α down to shed planning/training work under
     overload — see ``repro.serve.slo``).  Always 0 for direct session
     use.
+
+    ``fallback_from`` names the backend the query was *submitted* to
+    when device loss forced a replay on the fallback chain
+    (``backend`` then names the backend that actually answered);
+    None on the healthy path.  The serving layer reads it to feed the
+    per-backend circuit breaker.
     """
 
     beta: np.ndarray                 # merged topic-word matrix (K, V)
@@ -68,6 +74,7 @@ class QueryReport:
     cache_resident_bytes: int = 0
     plan_cached: bool = False
     degraded: int = 0
+    fallback_from: Optional[str] = None
 
     @property
     def plan(self) -> SearchResult:
@@ -110,6 +117,7 @@ class BatchReport:
     cache_resident_bytes: int = 0
     pad_rows: int = 0                # zero-weight rows across the launches
     plan_cached: bool = False        # Alg. 4 result served from the cache
+    fallback_from: Optional[str] = None  # backend lost mid-batch (see above)
 
     @property
     def merge_s(self) -> float:

@@ -45,6 +45,7 @@ import jax
 
 from repro.api.backend import DeviceBackend, ExecutionBackend, make_backend
 from repro.api.executor import Executor, StalePlanError
+from repro.core.errors import DeviceLostError, RetryPolicy
 from repro.api.planner import PlanCache, Planner
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.spec import QuerySpec
@@ -93,7 +94,8 @@ class MLegoSession:
                  backend: Union[str, ExecutionBackend] = "host",
                  plan_cache: Optional[PlanCache] = None,
                  plan_cache_entries: int = 256,
-                 calibration_path: Optional[str] = None):
+                 calibration_path: Optional[str] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.corpus = corpus
         self.index = DataIndex(corpus)
         self._backends = {}
@@ -131,7 +133,11 @@ class MLegoSession:
         # the store fingerprint alone can't see corpus growth)
         self._data_epoch = 0
         self.planner = Planner(self.index, self.cost)
-        self.executor = Executor(corpus, cfg, self.store, self._next_key)
+        # one retry policy for every data-plane call; shared with the
+        # serving layer when it constructs tenant sessions
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.executor = Executor(corpus, cfg, self.store, self._next_key,
+                                 retry=self.retry)
         self.backend = self._register_backend(
             make_backend(backend) if isinstance(backend, str) else backend,
             adopted=not isinstance(backend, str))
@@ -349,6 +355,29 @@ class MLegoSession:
             self._register_backend(make_backend(spec.backend))
         return self._backends[spec.backend]
 
+    # device-loss fallback chain: sharded -> single-device -> host
+    # (host is terminal: it cannot lose a device)
+    _FALLBACK = {"device_sharded": "device", "device": "host"}
+
+    def _fail_over(self, backend: ExecutionBackend
+                   ) -> Optional[ExecutionBackend]:
+        """Quarantine a device-lost backend and return the next healthy
+        backend on the fallback chain (None when the chain is
+        exhausted or the backend has no fallback).  The quarantined
+        backend stays registered — a breaker's half-open probe (or an
+        explicit ``unquarantine``) re-admits it."""
+        backend.quarantine()
+        name = backend.name
+        while True:
+            name = self._FALLBACK.get(name)
+            if name is None:
+                return None
+            if name not in self._backends:
+                self._register_backend(make_backend(name))
+            nxt = self._backends[name]
+            if not nxt.quarantined:
+                return nxt
+
     def _models(self, kind: str) -> List[MaterializedModel]:
         """Store models of ``kind``, matching alias tags too — stores
         persisted by the legacy engine may carry e.g. "gibbs" verbatim."""
@@ -453,11 +482,14 @@ class MLegoSession:
         n_tok = 0
         search_s = train_s = 0.0
         all_cached = True
+        fallback_from: Optional[str] = None
         models = self._models(kind)
         fingerprint = PlanCache.fingerprint(models)
         snap_train = backend.stats
+        train_device_ms = 0.0
         for sigma in spec.sigma:
-            for attempt in range(2):
+            stale_left = 1
+            while True:
                 t0 = time.perf_counter()
                 res, was_cached = self._plan_component(
                     models, fingerprint, sigma, spec, kind, backend)
@@ -478,8 +510,29 @@ class MLegoSession:
                     # already cleared the plan cache, so one re-plan
                     # over the current snapshot suffices
                     train_s += time.perf_counter() - t1
-                    if attempt:
+                    if not stale_left:
                         raise
+                    stale_left -= 1
+                    models = self._models(kind)
+                    fingerprint = PlanCache.fingerprint(models)
+                    continue
+                except DeviceLostError:
+                    # the backend is suspect, not the query: quarantine
+                    # it and replay this component on the fallback
+                    # chain.  Segments the failed attempt persisted
+                    # remain capital and re-enter the re-plan as
+                    # fetchable models; plans are backend-keyed, so the
+                    # fallback's prices drive a fresh search.
+                    train_s += time.perf_counter() - t1
+                    nxt = self._fail_over(backend)
+                    if nxt is None:
+                        raise
+                    if fallback_from is None:
+                        fallback_from = backend.name
+                    train_device_ms += backend.stats.delta(
+                        snap_train).train_device_ms
+                    backend = nxt
+                    snap_train = backend.stats
                     models = self._models(kind)
                     fingerprint = PlanCache.fingerprint(models)
                     continue
@@ -495,17 +548,29 @@ class MLegoSession:
 
         if not parts:
             raise ValueError(f"query {spec.sigma} selects no data")
-        train_device_ms = backend.stats.delta(snap_train).train_device_ms
+        train_device_ms += backend.stats.delta(snap_train).train_device_ms
         # the snapshot->merge->diff window is held against concurrent
         # sessions sharing this backend: their launches inside it
         # would corrupt this query's counters and the per-byte
         # calibration samples derived from them
-        with backend.measure_lock:
-            snap = backend.stats
-            t2 = time.perf_counter()
-            beta = self.executor.merge(parts, backend=backend)
-            merge_s = time.perf_counter() - t2
-            d = backend.stats.delta(snap)
+        while True:
+            try:
+                with backend.measure_lock:
+                    snap = backend.stats
+                    t2 = time.perf_counter()
+                    beta = self.executor.merge(parts, backend=backend)
+                    merge_s = time.perf_counter() - t2
+                    d = backend.stats.delta(snap)
+                break
+            except DeviceLostError:
+                # parts are host-side models — the fallback backend can
+                # merge them directly, no re-plan needed at this stage
+                nxt = self._fail_over(backend)
+                if nxt is None:
+                    raise
+                if fallback_from is None:
+                    fallback_from = backend.name
+                backend = nxt
         self._observe_merge(len(parts) - 1, merge_s, d,
                             backend=backend.name)
         return QueryReport(beta, spec, tuple(plans), n_tok, len(parts),
@@ -516,7 +581,8 @@ class MLegoSession:
                            cache_hits=d.cache_hits,
                            cache_misses=d.cache_misses,
                            cache_resident_bytes=d.cache_resident_bytes,
-                           plan_cached=all_cached)
+                           plan_cached=all_cached,
+                           fallback_from=fallback_from)
 
     # ------------------------------------------------------------------
     def submit_many(self, specs: Sequence[QuerySpec], *,
@@ -593,16 +659,34 @@ class MLegoSession:
         # re-plan over the current snapshot answers the batch without
         # surfacing the transient to callers (the serving layer's
         # serial fallback stays reserved for real per-spec failures).
-        # Segments the failed attempt persisted remain as capital and
-        # enter the re-plan as fetchable models.
-        for attempt in range(2):
+        # Device loss mid-batch quarantines the backend and replays the
+        # whole batch on the fallback chain.  In both cases, segments
+        # the failed attempt persisted remain as capital and enter the
+        # re-plan as fetchable models.
+        stale_left = 1
+        fallback_from: Optional[str] = None
+        while True:
             try:
-                return self._submit_many_once(specs, sigmas, owner, alpha,
-                                              kind, backend, next_keys)
+                rep = self._submit_many_once(specs, sigmas, owner, alpha,
+                                             kind, backend, next_keys)
             except StalePlanError:
-                if attempt:
+                if not stale_left:
                     raise
-        raise AssertionError("unreachable")      # pragma: no cover
+                stale_left -= 1
+                continue
+            except DeviceLostError:
+                nxt = self._fail_over(backend)
+                if nxt is None:
+                    raise
+                if fallback_from is None:
+                    fallback_from = backend.name
+                backend = nxt
+                continue
+            if fallback_from is not None:
+                rep.fallback_from = fallback_from
+                for r in rep.reports:
+                    r.fallback_from = fallback_from
+            return rep
 
     def _submit_many_once(self, specs: List[QuerySpec],
                           sigmas: List[Interval], owner: List[int],
@@ -774,4 +858,7 @@ class MLegoSession:
             cache_misses=sum(s.cache_misses for s in subs),
             cache_resident_bytes=subs[-1].cache_resident_bytes,
             pad_rows=sum(s.pad_rows for s in subs),
-            plan_cached=all(s.plan_cached for s in subs))
+            plan_cached=all(s.plan_cached for s in subs),
+            fallback_from=next(
+                (s.fallback_from for s in subs
+                 if s.fallback_from is not None), None))

@@ -38,6 +38,7 @@ import json
 import os
 import tempfile
 import threading
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -617,9 +618,22 @@ class CalibratedCostModel(CostProvider):
 
     def load_calibration(self, path: str) -> bool:
         """Replace the measurement log with a persisted sidecar's.
-        False (and no change) when missing/unreadable/stale-format."""
+        False (and no change) when missing/unreadable/stale-format.
+
+        A sidecar that *exists* but cannot be parsed (corrupt or
+        truncated JSON, wrong format version) cold-starts the provider
+        at analytic prices with a warning — a damaged price log must
+        never fail session construction, it only costs a re-warmup.
+        A missing file stays silent: that is the normal first run.
+        """
         cal = Calibration.load(path)
         if cal is None:
+            if os.path.exists(path):
+                warnings.warn(
+                    f"calibration sidecar {path!r} is unreadable or "
+                    f"stale-format; cold-starting at analytic prices "
+                    f"(the log rebuilds from this session's timings)",
+                    RuntimeWarning, stacklevel=2)
             return False
         self.calibration = cal
         self._dirty = len(cal) > 0

@@ -5,6 +5,16 @@ persists atomically (npz blobs + json manifest with content hashes) and
 participates in the checkpoint manager so a restarted cluster resumes
 with its full reuse capital.
 
+Persistence is crash-safe: every blob and the manifest are written
+tmp + fsync + rename (a crash mid-save leaves the previous consistent
+snapshot), and each blob's sha256 rides in the manifest.  ``load``
+verifies checksums; with ``on_corrupt="quarantine"`` a bad or
+truncated blob is *skipped* instead of failing the whole load — the
+store records it in ``quarantined`` and the planner simply never sees
+the model, so Alg. 4 plans around the hole (gap-train or alternate
+cover).  ``on_corrupt="raise"`` keeps the legacy fail-fast contract
+(the error is a ``CorruptModelError``, an ``IOError`` subclass).
+
 The store is also the lifecycle spine of the streaming-ingestion path
 (``repro.ingest``): slice models *append* through ``add``, compaction
 *swaps* a run of fine slices for one coarse segment through
@@ -25,15 +35,32 @@ import os
 import re
 import tempfile
 import threading
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.errors import CorruptModelError
 from repro.core.lda import MaterializedModel
 from repro.core.plans import Interval
+from repro.testing.faults import maybe_fail
 
 
 _BLOB_RE = re.compile(r"model_(-?\d+)\.npz")
+
+
+@dataclass(frozen=True)
+class QuarantinedBlob:
+    """One model the store refused to serve (bad checksum, truncated
+    blob, or a runtime ``quarantine`` call).  ``o``/``kind`` are kept
+    from the manifest so recovery (``distributed.elastic``) knows what
+    interval to retrain without re-reading the corrupt file."""
+
+    model_id: int
+    file: str
+    reason: str
+    o: Optional[Interval] = None
+    kind: Optional[str] = None
 
 
 StoreListener = Callable[[str, int], None]
@@ -50,6 +77,9 @@ class ModelStore:
         # which is irrelevant for a cold-vs-hot eviction ranking
         self._access: Dict[int, int] = {}
         self._access_clock = 0
+        # blobs load() skipped or quarantine() pulled at runtime; the
+        # planner never sees these, so plans route around them
+        self.quarantined: List[QuarantinedBlob] = []
 
     # --- change notification -------------------------------------------
     # Execution backends cache device-resident copies of Θ keyed by
@@ -123,10 +153,36 @@ class ModelStore:
         return m
 
     def get(self, model_id: int) -> MaterializedModel:
+        maybe_fail("store.get")
         m = self._models[model_id]
         self._access_clock += 1
         self._access[model_id] = self._access_clock
         return m
+
+    # --- quarantine ------------------------------------------------------
+    def quarantine(self, model_id: int, reason: str = "runtime") -> None:
+        """Pull a live model from service, remembering what was lost.
+
+        Same invalidation path as ``remove`` (plan caches and device
+        LRUs drop it), but the interval/kind land in ``quarantined``
+        so ``distributed.elastic.recover_quarantined`` can retrain the
+        hole later.
+        """
+        with self._lock:
+            m = self._models.pop(model_id, None)
+            self._access.pop(model_id, None)
+            if m is not None:
+                self.quarantined.append(QuarantinedBlob(
+                    model_id=model_id, file=f"model_{model_id}.npz",
+                    reason=reason, o=m.o, kind=m.kind))
+        if m is not None:
+            self._notify("remove", model_id)
+
+    def clear_quarantined(self) -> List[QuarantinedBlob]:
+        """Drain the quarantine ledger (after recovery retrained it)."""
+        with self._lock:
+            drained, self.quarantined = self.quarantined, []
+        return drained
 
     def last_access(self, model_id: int) -> int:
         """Access-clock stamp of the last ``get`` (0 = never fetched) —
@@ -153,12 +209,15 @@ class ModelStore:
 
     # --- persistence ----------------------------------------------------
     def save(self, path: str) -> None:
+        maybe_fail("store.save")
         os.makedirs(path, exist_ok=True)
         manifest = {"next_id": self._next_id, "models": []}
         for m in self.models():
             blob = os.path.join(path, f"model_{m.model_id}.npz")
             with tempfile.NamedTemporaryFile(dir=path, delete=False) as f:
                 np.savez(f, **m.theta)
+                f.flush()
+                os.fsync(f.fileno())
                 tmp = f.name
             os.replace(tmp, blob)
             manifest["models"].append({
@@ -172,8 +231,11 @@ class ModelStore:
         mf = os.path.join(path, "manifest.json")
         with tempfile.NamedTemporaryFile("w", dir=path, delete=False) as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
             tmp = f.name
         os.replace(tmp, mf)
+        _fsync_dir(path)
         # prune blobs of models removed since the last save.  Only ids
         # this store has allocated (< next_id) are candidates — a fresh
         # or stale store saving into a shared directory must not delete
@@ -187,22 +249,68 @@ class ModelStore:
                 os.remove(os.path.join(path, name))
 
     @classmethod
-    def load(cls, path: str, verify: bool = True) -> "ModelStore":
+    def load(cls, path: str, verify: bool = True,
+             on_corrupt: str = "raise") -> "ModelStore":
+        """Restore a saved store.
+
+        ``on_corrupt="raise"`` (legacy): the first bad blob aborts the
+        load with ``CorruptModelError`` (an ``IOError``).
+        ``on_corrupt="quarantine"``: bad blobs are skipped, recorded
+        in ``store.quarantined`` with their manifest interval/kind,
+        and every healthy model still loads — queries covering the
+        hole plan around it (gap-train or alternate cover).
+        """
+        maybe_fail("store.load")
+        if on_corrupt not in ("raise", "quarantine"):
+            raise ValueError(
+                f"on_corrupt must be 'raise' or 'quarantine', "
+                f"got {on_corrupt!r}")
         store = cls()
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         store._next_id = manifest["next_id"]
         for e in manifest["models"]:
             blob = os.path.join(path, e["file"])
-            if verify and _sha(blob) != e["sha"]:
-                raise IOError(f"checksum mismatch for {blob}")
-            with np.load(blob) as z:
-                theta = {k: z[k] for k in z.files}
+            reason = None
+            theta = None
+            try:
+                if verify and _sha(blob) != e["sha"]:
+                    reason = "checksum mismatch"
+                else:
+                    with np.load(blob) as z:
+                        theta = {k: z[k] for k in z.files}
+            except CorruptModelError:
+                raise
+            except Exception as exc:  # truncated zip, missing file, ...
+                reason = f"unreadable ({type(exc).__name__}: {exc})"
+            if reason is not None:
+                if on_corrupt == "raise":
+                    raise CorruptModelError(
+                        f"{reason} for {blob}",
+                        model_id=e["model_id"], blob=blob)
+                store.quarantined.append(QuarantinedBlob(
+                    model_id=e["model_id"], file=e["file"], reason=reason,
+                    o=Interval(e["lo"], e["hi"]), kind=e["kind"]))
+                continue
             m = MaterializedModel(
                 e["model_id"], Interval(e["lo"], e["hi"]),
                 e["n_docs"], e["n_tokens"], e["kind"], theta)
             store._models[m.model_id] = m
         return store
+
+
+def _fsync_dir(path: str) -> None:
+    """Make the renames themselves durable (POSIX: fsync the directory)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass  # some filesystems refuse directory fsync; best-effort
+    finally:
+        os.close(fd)
 
 
 def _sha(path: str) -> str:

@@ -103,3 +103,27 @@ def recover_failed(store: ModelStore, failed_ranges: Sequence[Interval],
             if m is not None:
                 fresh.append(m)
     return fresh
+
+
+def recover_quarantined(store: ModelStore, train_fn, *,
+                        clear: bool = True) -> List[MaterializedModel]:
+    """Retrain the ranges of the store's quarantined blobs.
+
+    ``ModelStore.load(on_corrupt="quarantine")`` and runtime
+    ``store.quarantine`` leave a ledger of blobs the store dropped
+    (checksum mismatch, truncation, device loss mid-write); each entry
+    carries the original range ``o``.  This is the same local-recovery
+    argument as ``recover_failed``: a dropped blob is just a missing
+    range, so recovery is retraining exactly those ranges — restricted
+    to the parts not already covered by healthy capital (a re-ingested
+    or compacted replacement makes retraining moot).  ``train_fn``
+    persists through the normal path (``MLegoSession.train_range``),
+    so the replacement blobs are checksummed and crash-safe.  With
+    ``clear=True`` the ledger is drained afterwards — the quarantine
+    has been acted on.
+    """
+    lost = [q.o for q in store.quarantined]
+    fresh = recover_failed(store, lost, train_fn)
+    if clear:
+        store.clear_quarantined()
+    return fresh

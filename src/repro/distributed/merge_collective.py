@@ -35,6 +35,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.compat import shard_map
 from repro.distributed.sharding import MeshEnv
+from repro.testing.faults import maybe_fail
 from repro.kernels.merge_topics.merge_topics import (
     merge_topics_pallas,
     merge_topics_ragged_pallas,
@@ -133,6 +134,7 @@ def merge_topics_sharded(stats, weights, env: MeshEnv, *,
     topic matrix β as a (K, Vp) array still sharded over the vocab
     axis (slice ``[:, :v_true]`` after np.asarray gathers it).
     """
+    maybe_fail("collective.merge")
     tp = env.tp_axis
     n, k, _ = stats.shape
     kp = ((k + 7) // 8) * 8
@@ -167,6 +169,7 @@ def merge_topics_ragged_sharded(stats, weights, seg_ids,
     (num_segments, K) — still independent of V.  Returns β stacked
     (num_segments, K, Vp), vocab-sharded.
     """
+    maybe_fail("collective.merge")
     tp = env.tp_axis
     n_rows, k, _ = stats.shape
     kp = ((k + 7) // 8) * 8

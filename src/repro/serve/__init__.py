@@ -20,9 +20,20 @@ SLO loop degrades plan quality (effective α) under overload, and idle
 tenant sessions are evicted on a TTL and revived with their RNG stream
 intact.  ``attach_ingest``/``attach_speculator`` add streaming
 ingestion and workload-driven gap pre-training (``repro.ingest``).
-See ``repro.api`` README's "Serving layer" and "Streaming ingestion &
-speculation" sections.
+Per-backend circuit breakers (``repro.serve.breaker``) quarantine a
+backend whose error window trips and reroute its traffic down the
+fallback chain until a half-open probe re-admits it.  See
+``repro.api`` README's "Serving layer", "Streaming ingestion &
+speculation" and "Failure semantics" sections.
 """
+from repro.serve.breaker import (
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    BreakerPolicy,
+    BreakerSnapshot,
+    CircuitBreaker,
+)
 from repro.serve.queue import (
     CoalescingQueue,
     DeadlineExceededError,
@@ -44,9 +55,15 @@ from repro.serve.slo import LatencyTracker, SLOPolicy
 
 __all__ = [
     "BackendSLO",
+    "BreakerPolicy",
+    "BreakerSnapshot",
+    "CLOSED",
+    "CircuitBreaker",
     "CoalescingQueue",
     "DEFAULT_TENANT",
     "DeadlineExceededError",
+    "HALF_OPEN",
+    "OPEN",
     "IngestReport",
     "LatencyTracker",
     "MLegoService",

@@ -29,6 +29,11 @@ Admission control (the production-hardening layer):
     wait).  The queue orders drains by priority (FIFO within one
     priority); deadline/queue-wait expiry is enforced by the service
     at execution start, where the clock actually matters.
+  * **Mid-queue aging**: an entry that has waited past half its
+    ``max_queue_wait_s`` is treated one priority level higher by both
+    drain ordering and displacement-victim selection
+    (``PendingQuery.effective_priority``) — long-waiting work climbs
+    toward the front instead of starving until its overwait shed.
   * ``steal()`` is the work-stealing drain: non-blocking, no
     coalescing window — an idle worker of another pool takes only
     what is already pending so it can never hold foreign work open.
@@ -118,6 +123,18 @@ class PendingQuery:
         w = self.options.max_queue_wait_s
         return w is not None and (now - self.enqueued_at) > w
 
+    def effective_priority(self, now: float) -> int:
+        """Mid-queue aging: an entry that has waited past *half* its
+        ``max_queue_wait_s`` gets a one-level priority bump — drain
+        order and displacement both see the aged value, so a query
+        about to shed on overwait outranks a fresh arrival of its
+        nominal priority instead of starving behind it.  Entries
+        without a wait cap never age (they cannot overwait-shed)."""
+        w = self.options.max_queue_wait_s
+        if w is not None and (now - self.enqueued_at) > 0.5 * w:
+            return self.options.priority + 1
+        return self.options.priority
+
 
 def _shed_future(future: "Future", exc: Exception) -> None:
     """Fail a still-pending future, tolerating a racing client cancel
@@ -192,14 +209,20 @@ class CoalescingQueue:
                 # pending item — late low-priority work yields to an
                 # urgent arrival; among equals, first come first served
                 # (the arrival is the one rejected)
-                candidates = [it for it in self._items
-                              if it.options.priority < item.options.priority]
+                # aged entries displace as their *effective* priority —
+                # a query nearing its overwait shed is not a valid
+                # victim for a merely-equal fresh arrival
+                now = time.perf_counter()
+                candidates = [
+                    it for it in self._items
+                    if it.effective_priority(now) < item.options.priority]
                 if not candidates:
                     raise ShedError(
                         f"queue full ({self.max_queue} pending) and no "
                         f"lower-priority query to displace")
                 victim = min(candidates,
-                             key=lambda it: (it.options.priority, -it.seq))
+                             key=lambda it: (it.effective_priority(now),
+                                             -it.seq))
                 self._items.remove(victim)
                 self.shed += 1
             item.seq = self._seq
@@ -215,8 +238,9 @@ class CoalescingQueue:
                 self.on_shed(victim)
 
     def _pop_best_locked(self) -> PendingQuery:
+        now = time.perf_counter()
         best = min(self._items,
-                   key=lambda it: (-it.options.priority, it.seq))
+                   key=lambda it: (-it.effective_priority(now), it.seq))
         self._items.remove(best)
         return best
 

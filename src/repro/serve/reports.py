@@ -24,6 +24,7 @@ from typing import Dict, Optional, Tuple
 from repro.api.backend import BackendStats
 from repro.ingest.pipeline import IngestReport
 from repro.ingest.speculate import QueryLogEntry, SpeculationReport
+from repro.serve.breaker import BreakerSnapshot
 from repro.serve.slo import BackendSLO
 
 
@@ -108,6 +109,14 @@ class ServiceReport:
     window and active degradation level, ``tenant_evictions`` the
     idle-TTL lifecycle churn and ``active_sessions`` the tenants
     currently resident.
+
+    Fault-tolerance telemetry: ``breaker`` is each backend's circuit-
+    breaker snapshot (state, windowed error rate, lifetime opens),
+    ``breaker_reroutes`` counts queries routed to a fallback pool
+    because their backend's breaker was open (they were answered, not
+    shed), and ``retries`` is the shared ``RetryPolicy``'s per-site
+    retry ledger (e.g. ``{"backend.merge.device": 3}`` means three
+    transient merge faults were absorbed invisibly to clients).
     """
 
     tenants: Dict[str, TenantStats] = field(default_factory=dict)
@@ -131,6 +140,9 @@ class ServiceReport:
     active_sessions: int = 0
     queue_depth: Dict[str, int] = field(default_factory=dict)
     slo: Dict[str, BackendSLO] = field(default_factory=dict)
+    breaker: Dict[str, BreakerSnapshot] = field(default_factory=dict)
+    breaker_reroutes: int = 0
+    retries: Dict[str, int] = field(default_factory=dict)
     # None unless the corresponding subsystem is attached
     ingest: Optional[IngestReport] = None
     speculation: Optional[SpeculationReport] = None
@@ -169,5 +181,6 @@ class ServiceReport:
         return self.tenants.get(name, TenantStats(tenant=name))
 
 
-__all__ = ["BackendSLO", "IngestReport", "QueryLogEntry", "ServiceReport",
-           "SpeculationReport", "TenantStats"]
+__all__ = ["BackendSLO", "BreakerSnapshot", "IngestReport",
+           "QueryLogEntry", "ServiceReport", "SpeculationReport",
+           "TenantStats"]

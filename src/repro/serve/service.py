@@ -86,9 +86,12 @@ from repro.api.spec import QuerySpec
 from repro.api.trainers import resolve_kind
 from repro.configs.lda_default import LDAConfig
 from repro.core.cost import CostProvider
+from repro.core.errors import (DeviceLostError, ExecutionError, RetryPolicy)
 from repro.core.lda import MaterializedModel
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
+from repro.serve.breaker import (OPEN, BreakerPolicy, CircuitBreaker)
+from repro.testing.faults import maybe_fail
 from repro.ingest.compaction import CompactionPolicy, Compactor
 from repro.ingest.pipeline import IngestPipeline
 from repro.ingest.speculate import QueryLogEntry, SpeculativeTrainer
@@ -187,7 +190,9 @@ class MLegoService:
                  slo_p95_s: Optional[float] = None,
                  slo: Optional[SLOPolicy] = None,
                  slo_window: int = 256,
-                 tenant_ttl_s: Optional[float] = None):
+                 tenant_ttl_s: Optional[float] = None,
+                 breaker: Optional[BreakerPolicy] = None,
+                 retry: Optional[RetryPolicy] = None):
         if workers_per_pool < 1:
             raise ValueError(
                 f"workers_per_pool must be >= 1, got {workers_per_pool}")
@@ -219,6 +224,19 @@ class MLegoService:
         self._slo_window = slo_window
         self._trackers: Dict[str, LatencyTracker] = {}
         self._tracker_lock = threading.Lock()
+        # one retry policy shared by every tenant session, so the
+        # report's per-site retry counters aggregate service-wide
+        self.retry = retry if retry is not None else RetryPolicy()
+        # per-backend-identity circuit breakers (lazily built, like
+        # pools); the transition hook mirrors breaker state into the
+        # backend quarantine flag so sessions' fallback chains and the
+        # service's reroutes agree on who is healthy
+        self._breaker_policy = breaker if breaker is not None \
+            else BreakerPolicy()
+        self._breakers: Dict[int, CircuitBreaker] = {}
+        self._breaker_names: Dict[int, str] = {}
+        self._breaker_lock = threading.Lock()
+        self._breaker_reroutes = 0
 
         self._sessions: Dict[str, MLegoSession] = {}
         self._session_lock = threading.RLock()
@@ -361,7 +379,8 @@ class MLegoService:
                     self.corpus, self.cfg, store=self.store,
                     cost=self.cost, kind=self.kind,
                     seed=self._tenant_seed(tenant),
-                    backend=self.backend, plan_cache=self.plan_cache)
+                    backend=self.backend, plan_cache=self.plan_cache,
+                    retry=self.retry)
                 for b in self._extra_backends.values():
                     sess.adopt_backend(b)
                 saved = self._evicted_keys.pop(tenant, None)
@@ -441,6 +460,77 @@ class MLegoService:
                 for sess in self._sessions.values():
                     sess.adopt_backend(b)
             return b
+
+    # ------------------------------------------------------------------
+    # circuit breakers
+    # ------------------------------------------------------------------
+    def _instance_for(self, name: str) -> ExecutionBackend:
+        """The service-wide backend instance behind ``name``."""
+        if name == self.backend.name:
+            return self.backend
+        return self._shared_backend(name)
+
+    def _breaker_for(self, backend: ExecutionBackend) -> CircuitBreaker:
+        """This backend instance's breaker, lazily built.  The
+        transition hook quarantines the backend on → open (sessions'
+        fallback chains then skip it) and un-quarantines on any other
+        transition (half-open probes and re-closure re-admit it)."""
+        with self._breaker_lock:
+            cb = self._breakers.get(id(backend))
+            if cb is None:
+                def _mirror(old: str, new: str,
+                            _b: ExecutionBackend = backend) -> None:
+                    if new == OPEN:
+                        _b.quarantine()
+                    else:
+                        _b.unquarantine()
+                cb = CircuitBreaker(self._breaker_policy,
+                                    on_transition=_mirror)
+                self._breakers[id(backend)] = cb
+                name = backend.name
+                taken = set(self._breaker_names.values())
+                if name in taken:
+                    dups = sum(1 for v in self._breaker_names.values()
+                               if v.split("#")[0] == name)
+                    name = f"{name}#{dups + 1}"
+                self._breaker_names[id(backend)] = name
+            return cb
+
+    def _reroute_target(self, name: str) -> Optional[str]:
+        """First backend down the fallback chain whose breaker admits
+        traffic (None when the whole chain is open)."""
+        nxt = MLegoSession._FALLBACK.get(name)
+        while nxt is not None:
+            if self._breaker_for(self._instance_for(nxt)).allow():
+                return nxt
+            nxt = MLegoSession._FALLBACK.get(nxt)
+        return None
+
+    def _note_outcome(self, answered_by: Optional[str],
+                      fallback_from: Optional[str]) -> None:
+        """Feed the breakers from one answered query/batch: a report
+        carrying ``fallback_from`` means that backend was lost mid-
+        query (the session absorbed the ``DeviceLostError`` and
+        replayed downstream) — a hard failure for its breaker — while
+        the answering backend records a success."""
+        if fallback_from is not None:
+            self._breaker_for(self._instance_for(fallback_from)) \
+                .record_failure(hard=True)
+        if answered_by is not None:
+            self._breaker_for(self._instance_for(answered_by)) \
+                .record_success()
+
+    def _note_error(self, exc: BaseException, backend_name: str) -> None:
+        """Feed the breakers from one failed query.  Only typed
+        execution-infrastructure errors count — a spec error (empty
+        predicate, bad α) says nothing about backend health."""
+        if isinstance(exc, DeviceLostError):
+            name = exc.backend or backend_name
+            self._breaker_for(self._instance_for(name)) \
+                .record_failure(hard=True)
+        elif isinstance(exc, ExecutionError):
+            self._breaker_for(self._instance_for(backend_name)) \
+                .record_failure()
 
     # ------------------------------------------------------------------
     # front door
@@ -615,6 +705,10 @@ class MLegoService:
                 spec.backend or self.backend.name)
 
     def _execute(self, batch: List[PendingQuery]) -> None:
+        # named injection site for the chaos harness: a fault here
+        # lands in the worker's catch-all, which must fail the batch's
+        # futures and keep the thread alive (asserted in tests)
+        maybe_fail("serve.worker")
         groups: Dict[Tuple[str, str], List[PendingQuery]] = {}
         for item in batch:
             groups.setdefault(self._group_key(item.spec), []).append(item)
@@ -661,6 +755,26 @@ class MLegoService:
 
     def _execute_group(self, items: List[PendingQuery],
                        backend_name: str) -> None:
+        if not self._breaker_for(self._instance_for(backend_name)).allow():
+            # breaker open: route the still-pending group to the
+            # fallback pool instead of shedding — degraded answers
+            # beat no answers.  With the whole chain open we fall
+            # through and try the original backend anyway (strictly
+            # no worse than rejecting).
+            fb = self._reroute_target(backend_name)
+            if fb is not None:
+                pool = self._pool_for(self._instance_for(fb))
+                with self._stats_lock:
+                    self._breaker_reroutes += len(items)
+                for it in items:
+                    it.spec = _dc_replace(it.spec, backend=fb)
+                    try:
+                        pool.queue.put(it)
+                    except (ShedError, ServiceClosedError) as exc:
+                        if it.future.set_running_or_notify_cancel():
+                            _reject(it.future, exc)
+                            self._record_rejection(it, deadline=False)
+                return
         items = self._admit(items)
         width = len(items)
         if width == 0:
@@ -726,6 +840,7 @@ class MLegoService:
             self._execute_fused(items[:mid], level, t0)
             self._execute_fused(items[mid:], level, t0)
             return
+        self._note_outcome(br.backend, br.fallback_from)
         with self._stats_lock:
             self._groups += 1
             self._coalesced_groups += 1
@@ -752,9 +867,12 @@ class MLegoService:
             try:
                 rep = sess.submit(self._degrade_spec(it.spec, level, sess))
             except Exception as exc:
+                self._note_error(exc,
+                                 it.spec.backend or self.backend.name)
                 self._record(it, t0, 1, False, error=True)
                 _reject(it.future, exc)
             else:
+                self._note_outcome(rep.backend, rep.fallback_from)
                 rep.degraded = level
                 self._record(it, t0, 1, rep.plan_cached,
                              model_ids=rep.model_ids, degraded=level)
@@ -879,6 +997,13 @@ class MLegoService:
                 if self._slo_policy is not None else 0)
             for name, tr in trackers.items()}
         depth = {p.name: len(p.queue) for p in self._pools_snapshot()}
+        with self._breaker_lock:
+            blist = [(self._breaker_names[k], cb)
+                     for k, cb in self._breakers.items()]
+        # snapshot outside _breaker_lock: a cooled-down open breaker
+        # transitions to half-open on observation, which fires the
+        # quarantine-mirror hook
+        breaker = {name: cb.snapshot() for name, cb in blist}
         with self._session_lock:
             active = len(self._sessions)
         with self._stats_lock:
@@ -904,6 +1029,9 @@ class MLegoService:
                 active_sessions=active,
                 queue_depth=depth,
                 slo=slo,
+                breaker=breaker,
+                breaker_reroutes=self._breaker_reroutes,
+                retries=self.retry.snapshot(),
                 ingest=self._ingest.report()
                 if self._ingest is not None else None,
                 speculation=self._speculator.report()

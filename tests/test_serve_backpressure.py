@@ -134,6 +134,58 @@ def test_bounded_queue_displaces_youngest_lower_priority():
     assert [p.seq for p in batch] == [urgent.seq, old.seq]
 
 
+def test_aged_entry_outranks_fresh_equal_priority_at_drain():
+    """Mid-queue aging: past half its max_queue_wait_s an entry drains
+    one priority level higher, so work nearing its overwait shed
+    climbs ahead of fresh same-priority arrivals."""
+    q = CoalescingQueue(window_s=0.0, max_width=8)
+    aged = _pending(lo=0.0, max_queue_wait_s=0.1)
+    q.put(aged)
+    time.sleep(0.06)                      # past the half-wait mark
+    fresh = _pending(lo=1.0)
+    q.put(fresh)
+    capped = _pending(lo=2.0, max_queue_wait_s=10.0)  # far from aging
+    q.put(capped)
+    batch = q.drain(timeout=0.05)
+    # aged leads despite equal nominal priority; the others stay FIFO
+    assert [p.seq for p in batch] == [aged.seq, fresh.seq, capped.seq]
+
+
+def test_aged_entry_is_not_displaced_by_equal_priority_arrival():
+    """Displacement sees effective priority too: a query that aged to
+    priority+1 is no longer a victim for a priority-1 arrival, while
+    an unaged priority-0 neighbor still is."""
+    displaced = []
+    q = CoalescingQueue(window_s=0.0, max_queue=2,
+                        on_shed=displaced.append)
+    aging = _pending(lo=0.0, max_queue_wait_s=0.1)
+    q.put(aging)
+    time.sleep(0.06)                      # aging now drains at prio 1
+    unaged = _pending(lo=1.0)             # no wait cap: never ages
+    q.put(unaged)
+    urgent = _pending(lo=2.0, priority=1)
+    q.put(urgent)                         # full queue: must displace
+    assert displaced == [unaged], \
+        "the aged entry must be spared; the unaged one is the victim"
+    assert len(q) == 2
+    # and with only aged entries at effective prio 1, an equal arrival
+    # is rejected at the door instead of displacing them
+    with pytest.raises(ShedError, match="queue full"):
+        q.put(_pending(lo=3.0, priority=1))
+
+
+def test_entries_without_wait_cap_never_age():
+    q = CoalescingQueue(window_s=0.0, max_width=8)
+    old = _pending(lo=0.0)                # no max_queue_wait_s
+    q.put(old)
+    time.sleep(0.05)
+    fresh = _pending(lo=1.0)
+    q.put(fresh)
+    batch = q.drain(timeout=0.05)
+    assert [p.seq for p in batch] == [old.seq, fresh.seq], \
+        "FIFO within a priority, no phantom aging bump"
+
+
 def test_queue_drains_priority_first_fifo_within():
     q = CoalescingQueue(window_s=0.0, max_width=8)
     a = _pending(lo=0.0, priority=0)
