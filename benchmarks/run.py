@@ -23,6 +23,9 @@
   chaos               (ours)     serve trace under injected faults:
                                  goodput, retry counts, breaker opens/
                                  reroutes, device-loss recovery time
+  obs                 (ours)     tracing/metrics overhead (asserted
+                                 < 5%) + Chrome trace artifact and
+                                 span/metric cardinality
   kernels             (ours)     Pallas kernel parity timings
   roofline            (ours)     table from dry-run artifacts, if present
 
@@ -302,6 +305,20 @@ def main() -> None:
               f"{cz['breaker_reroutes']}, device-loss recovery {rec}, "
               f"workers_alive {cz['workers_alive']}")
         out["chaos"] = cz
+
+    if want("obs"):
+        _section("obs (tracing/metrics overhead)")
+        from benchmarks import serve_bench
+        ob = serve_bench.run_obs(n_docs=600 if args.quick else 1200,
+                                 quick=args.quick,
+                                 trace_path="BENCH_obs_trace.json")
+        print(f"# overhead: untraced {ob['untraced_wall_s']:.3f}s vs "
+              f"traced {ob['traced_wall_s']:.3f}s "
+              f"({ob['overhead_frac']:+.2%}, budget <5%)")
+        print(f"# spans: {ob['span_count']} across {ob['span_kinds']} "
+              f"kinds; metrics: {ob['metric_lines']} exposition lines; "
+              f"trace -> {ob['trace_path']}")
+        out["obs"] = ob
 
     if want("kernels"):
         _section("kernels (interpret-mode parity timings)")

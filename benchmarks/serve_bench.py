@@ -35,6 +35,12 @@ the per-backend worker pools and through the pre-hardening single-loop
 topology (``pool_per_backend=False``, one worker): pools let host and
 device groups execute concurrently instead of serializing.
 
+``run_obs`` replays the trace with the tracer disabled vs enabled and
+asserts the tracing overhead stays under 5 % of wall; it also exports
+the traced run's Chrome trace (Perfetto-loadable) and reports span /
+metric cardinality — the observability layer must stay free enough to
+leave on in production.
+
 ``run_chaos`` replays the trace under the deterministic fault
 injector: a configurable transient rate on the merge/fetch/store
 sites plus one injected device loss mid-trace.  It reports goodput
@@ -56,6 +62,7 @@ from repro.api import (
     MLegoSession,
     PlanCache,
     QuerySpec,
+    Tracer,
 )
 from repro.core.store import ModelStore
 from repro.serve import BreakerPolicy, MLegoService, ShedError, SLOPolicy
@@ -156,6 +163,78 @@ def run(n_docs=600, seed=0, quick=False, n_clients=4, per_client=4,
         "coalesce_rate": report.coalesce_rate,
         "plan_cache_hits": report.plan_cache_hits,
         "plan_cache_misses": report.plan_cache_misses,
+    }
+
+
+def _drive_trace(svc, hi: float, n_clients: int,
+                 per_client: int) -> float:
+    """Replay the standard concurrent trace; returns wall seconds."""
+    def client(name: str) -> None:
+        for spec in _trace(hi, per_client):
+            svc.submit(spec, tenant=name).result()
+
+    threads = [threading.Thread(target=client, args=(f"client{i}",))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run_obs(n_docs=600, seed=0, quick=False, n_clients=4, per_client=4,
+            window_s=0.05, repeats=2, trace_path=None) -> Dict:
+    """Observability overhead: the same concurrent trace through a
+    service with the tracer disabled vs enabled (metrics run in both
+    cases — they are always on).  Each mode gets its own service over
+    its own store; one untraced warm-up run absorbs jit compilation.
+    Walls are min-of-``repeats``; the acceptance check (asserted) is
+    traced wall within 5 % of untraced.  When ``trace_path`` is given
+    the last traced run's Chrome trace is exported there, and the
+    result reports its span count / kind cardinality plus the metrics
+    exposition size."""
+    cfg = bench_cfg(quick)
+    train, _, _, _ = bench_world(n_docs=n_docs, cfg=cfg, seed=seed)
+    hi = float(train.attr[-1]) + 1.0
+    capital = [(i * hi / 4, (i + 1) * hi / 4) for i in range(2)]
+
+    def one_run(enabled: bool):
+        svc = MLegoService(train, cfg, kind="vb", seed=seed,
+                           window_s=window_s, max_width=2 * n_clients,
+                           tracer=Tracer(capacity=1 << 16,
+                                         enabled=enabled))
+        for lo, hi_e in capital:
+            svc.train_range(lo, hi_e)
+        wall = _drive_trace(svc, hi, n_clients, per_client)
+        spans = svc.tracer.spans()
+        metric_lines = sum(1 for line in svc.metrics_text().splitlines()
+                           if line and not line.startswith("#"))
+        rep = svc.report()
+        if enabled and trace_path:
+            svc.export_trace(trace_path)
+        svc.close()
+        return wall, spans, metric_lines, rep
+
+    one_run(False)                               # warm-up: compile jits
+    untraced = min(one_run(False)[0] for _ in range(repeats))
+    traced_runs = [one_run(True) for _ in range(repeats)]
+    traced = min(w for w, _, _, _ in traced_runs)
+    wall, spans, metric_lines, rep = traced_runs[-1]
+    overhead = traced / untraced - 1.0
+    assert overhead < 0.05, (
+        f"tracing overhead {overhead:.1%} exceeds the 5% budget "
+        f"(untraced {untraced:.3f}s, traced {traced:.3f}s)")
+    return {
+        "queries": n_clients * per_client,
+        "untraced_wall_s": untraced,
+        "traced_wall_s": traced,
+        "overhead_frac": overhead,
+        "span_count": len(spans),
+        "span_kinds": len({s.name for s in spans}),
+        "metric_lines": metric_lines,
+        "mean_coalesce_width": rep.mean_coalesce_width,
+        "trace_path": trace_path,
     }
 
 
@@ -466,6 +545,11 @@ def main() -> None:
     print(f"# pools: single-loop {pc['single_loop']['wall_s']:.2f}s vs "
           f"pooled {pc['pooled']['wall_s']:.2f}s "
           f"({pc['pool_speedup']:.2f}x)")
+    ob = run_obs(quick=True)
+    print(f"# obs: untraced {ob['untraced_wall_s']:.3f}s vs traced "
+          f"{ob['traced_wall_s']:.3f}s ({ob['overhead_frac']:+.2%}), "
+          f"{ob['span_count']} spans / {ob['span_kinds']} kinds, "
+          f"{ob['metric_lines']} metric lines")
     ch = run_chaos(quick=True)
     rec = f"{ch['recovery_s']:.3f}s" if ch['recovery_s'] is not None \
         else "n/a"

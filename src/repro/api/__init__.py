@@ -54,6 +54,8 @@ from repro.core.errors import (
 )
 from repro.core.plan_ir import FetchStep, MergeStep, Plan, TrainGapStep
 from repro.core.plans import Interval
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 
 __all__ = [
     "BACKEND_NAMES",
@@ -80,6 +82,7 @@ __all__ = [
     "TrainGapStep",
     "make_backend",
     "MATERIALIZE_POLICIES",
+    "MetricsRegistry",
     "MLegoSession",
     "PERSIST",
     "PermanentExecutionError",
@@ -87,6 +90,7 @@ __all__ = [
     "QuerySpec",
     "RetryPolicy",
     "StalePlanError",
+    "Tracer",
     "TransientExecutionError",
     "VOLATILE",
     "available_trainers",

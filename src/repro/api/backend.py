@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from contextlib import contextmanager
+from contextlib import contextmanager, nullcontext
 
 from repro.api.trainers import (
     TrainerFn,
@@ -77,6 +77,8 @@ from repro.kernels.merge_topics.ops import (
     merge_topics_ragged,
     segment_ids,
 )
+from repro.obs import profile as obs_profile
+from repro.obs import trace as obs
 from repro.testing.faults import maybe_fail
 
 BACKEND_NAMES = ("host", "device", "device_sharded")
@@ -151,6 +153,11 @@ class ExecutionBackend:
         # health: a quarantined backend is suspected of device loss;
         # sessions route around it until a breaker probe re-admits it
         self.quarantined = False
+        # opt-in kernel profiling (see repro.obs.profile): wraps
+        # launches in jax.profiler annotations and lands HLO-derived
+        # flops/bytes on the ambient span.  Costs one compile per new
+        # launch shape — keep off on latency-sensitive paths.
+        self.profile = False
 
     # -- health ----------------------------------------------------------
     def quarantine(self) -> None:
@@ -200,6 +207,15 @@ class ExecutionBackend:
 
     def trainer(self, kind: str) -> TrainerFn:
         return get_trainer(kind)
+
+    def kernel_route(self, kind: str) -> bool:
+        """True when ``trainer(kind)`` runs through a device kernel.
+
+        The executor uses this to attribute a trained gap's wall time
+        to ``train_device_ms`` *per query* — replacing the shared
+        stats-snapshot diff whose window picked up concurrent
+        sessions' launches on a shared backend."""
+        return False
 
     def note_trained(self, model: MaterializedModel) -> None:
         """Hook: a fresh gap model was persisted after training on this
@@ -286,10 +302,11 @@ class _DeviceModelCache:
         return int(arr.nbytes) // self.bytes_divisor
 
     def _evict_lru(self) -> None:
-        _, arr = self._entries.popitem(last=False)
+        mid, arr = self._entries.popitem(last=False)
         self.resident_bytes -= self._nb(arr)
         self.evictions += 1
         self.epoch += 1
+        obs.instant("cache.evict", model_id=mid, bytes=self._nb(arr))
 
     def _fits_alone(self, arr: jax.Array) -> bool:
         """A model bigger than the whole byte budget must pass through
@@ -306,7 +323,9 @@ class _DeviceModelCache:
                 self._entries.move_to_end(mid)
                 return self._entries[mid]
             self.misses += 1
-            arr = self._prepare(model.theta[stat_key])
+            with obs.span("device.upload", "backend", model_id=mid):
+                arr = self._prepare(model.theta[stat_key])
+                obs.set_attrs(bytes=self._nb(arr))
             self.miss_bytes += self._nb(arr)
             if mid >= 0 and self._fits_alone(arr):
                 self._entries[mid] = arr
@@ -324,7 +343,10 @@ class _DeviceModelCache:
         with self._lock:
             if mid < 0 or mid in self._entries:
                 return mid in self._entries
-            arr = self._prepare(model.theta[stat_key])
+            with obs.span("device.upload", "backend", model_id=mid,
+                          warm=True):
+                arr = self._prepare(model.theta[stat_key])
+                obs.set_attrs(bytes=self._nb(arr))
             if not self._fits_alone(arr):
                 return False
             self._entries[mid] = arr
@@ -384,13 +406,15 @@ class DeviceBackend(ExecutionBackend):
                  interpret: Optional[bool] = None,
                  kernel_estep: bool = True,
                  kernel_gibbs: bool = True,
-                 gibbs_block_docs: int = 64):
+                 gibbs_block_docs: int = 64,
+                 profile: bool = False):
         super().__init__()
         self.cache = self._make_cache(capacity, max_bytes)
         self.interpret = interpret
         self.kernel_estep = kernel_estep
         self.kernel_gibbs = kernel_gibbs
         self.gibbs_block_docs = gibbs_block_docs
+        self.profile = profile
         self._store: Optional[ModelStore] = None
 
     def _make_cache(self, capacity: int,
@@ -428,6 +452,10 @@ class DeviceBackend(ExecutionBackend):
         maybe_fail(f"backend.fetch.{self.name}")
         return self.cache.get(model, stat_key)
 
+    def _annotate(self, name: str):
+        """Profiler annotation for a launch; no-op unless profiling."""
+        return obs_profile.annotate(name) if self.profile else nullcontext()
+
     # -- merge -----------------------------------------------------------
     def merge(self, parts, kind, cfg):
         maybe_fail(f"backend.merge.{self.name}")
@@ -437,13 +465,21 @@ class DeviceBackend(ExecutionBackend):
             return get_merge(kind)(list(parts), cfg)
         stat_key, bias, base, finish = device_merge_params(fam, cfg)
         t0 = time.perf_counter()
-        with self._device_guard():
+        with self._device_guard(), \
+                obs.span("kernel.launch", "backend", op="merge_topics",
+                         n_parts=len(parts), backend=self.name):
             stats = jnp.stack([self._fetch(m, stat_key) for m in parts])
             w = jnp.ones((len(parts),), jnp.float32)
-            merged = merge_topics(stats, w, bias=bias, base=base,
-                                  interpret=self.interpret)
-            merged.block_until_ready()
-        ms = (time.perf_counter() - t0) * 1e3
+            with self._annotate("mlego.merge_topics"):
+                merged = merge_topics(stats, w, bias=bias, base=base,
+                                      interpret=self.interpret)
+                merged.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3
+            obs.set_attrs(merge_device_ms=ms)
+            if self.profile:
+                obs_profile.annotate_span("hlo", obs_profile.hlo_features(
+                    "merge_topics", merge_topics, stats, w,
+                    bias=bias, base=base, interpret=self.interpret))
         self._sync_cache_counters()
         self._count(merges=1, device_launches=1, merge_device_ms=ms)
         return finish(np.asarray(merged))
@@ -465,17 +501,23 @@ class DeviceBackend(ExecutionBackend):
         maybe_fail(f"backend.merge.{self.name}")
         stat_key, bias, base, finish = device_merge_params(fam, cfg)
         t0 = time.perf_counter()
-        with self._device_guard():
+        with self._device_guard(), \
+                obs.span("kernel.launch", "backend",
+                         op="merge_topics_ragged",
+                         n_plans=len(part_lists), backend=self.name):
             stats_list, weights_list = [], []
             for parts in part_lists:
                 stats_list.append(
                     jnp.stack([self._fetch(m, stat_key) for m in parts]))
                 weights_list.append(jnp.ones((len(parts),), jnp.float32))
-            merged, pad_rows, launches = merge_topics_ragged(
-                stats_list, weights_list, bias=bias, base=base,
-                interpret=self.interpret)
-            for row in merged:
-                row.block_until_ready()
+            with self._annotate("mlego.merge_topics_ragged"):
+                merged, pad_rows, launches = merge_topics_ragged(
+                    stats_list, weights_list, bias=bias, base=base,
+                    interpret=self.interpret)
+                for row in merged:
+                    row.block_until_ready()
+            obs.set_attrs(merge_device_ms=(time.perf_counter() - t0) * 1e3,
+                          pad_rows=pad_rows)
         ms = (time.perf_counter() - t0) * 1e3
         # a padding row carries one part's worth of (K, V) f32 bytes —
         # the per-byte cost calibration prices it from this
@@ -505,6 +547,10 @@ class DeviceBackend(ExecutionBackend):
             return self._train_gs_kernel
         return get_trainer(kind)
 
+    def kernel_route(self, kind: str) -> bool:
+        return ((kind == "vb" and self.kernel_estep)
+                or (kind == "gs" and self.kernel_gibbs))
+
     def note_trained(self, model: MaterializedModel) -> None:
         fam = merge_family_name(model.kind)
         if fam is None:                  # custom merge: no device form
@@ -518,9 +564,11 @@ class DeviceBackend(ExecutionBackend):
         from repro.core.vb import vb_fit
         t0 = time.perf_counter()
         x = doc_term_matrix(corpus)
-        lam = np.asarray(vb_fit(x, key, cfg, use_kernel=True))
-        self._count(gap_device_trains=1,
-                    train_device_ms=(time.perf_counter() - t0) * 1e3)
+        with self._annotate("mlego.vb_estep"):
+            lam = np.asarray(vb_fit(x, key, cfg, use_kernel=True))
+        ms = (time.perf_counter() - t0) * 1e3
+        obs.set_attrs(train_device_ms=ms, route="vb_estep")
+        self._count(gap_device_trains=1, train_device_ms=ms)
         return {"lam": lam}
 
     def _train_gs_kernel(self, corpus: Corpus, cfg: LDAConfig, key,
@@ -531,14 +579,16 @@ class DeviceBackend(ExecutionBackend):
         # an explicit interpret override must reach the Pallas body
         # like it does on the merge/E-step routes — use_kernel=None
         # alone would route off-TPU hosts to the jnp reference
-        nkv = cgs_fit_blocked(corpus.tokens, corpus.doc_ids, cfg, key,
-                              global_nkv=global_nkv,
-                              block_docs=self.gibbs_block_docs,
-                              use_kernel=(None if self.interpret is None
-                                          else True),
-                              interpret=self.interpret)
-        self._count(gap_device_trains=1,
-                    train_device_ms=(time.perf_counter() - t0) * 1e3)
+        with self._annotate("mlego.gibbs_sweep"):
+            nkv = cgs_fit_blocked(corpus.tokens, corpus.doc_ids, cfg, key,
+                                  global_nkv=global_nkv,
+                                  block_docs=self.gibbs_block_docs,
+                                  use_kernel=(None if self.interpret is None
+                                              else True),
+                                  interpret=self.interpret)
+        ms = (time.perf_counter() - t0) * 1e3
+        obs.set_attrs(train_device_ms=ms, route="gibbs_blocked")
+        self._count(gap_device_trains=1, train_device_ms=ms)
         return {"delta_nkv": nkv}
 
 
@@ -574,13 +624,15 @@ class ShardedDeviceBackend(DeviceBackend):
                  kernel_estep: bool = True,
                  kernel_gibbs: bool = True,
                  gibbs_block_docs: int = 64,
-                 env: Optional[MeshEnv] = None):
+                 env: Optional[MeshEnv] = None,
+                 profile: bool = False):
         self.env = env if env is not None else local_mesh_env()
         self.shards = max(1, self.env.tp_size)
         super().__init__(capacity, max_bytes=max_bytes,
                          interpret=interpret, kernel_estep=kernel_estep,
                          kernel_gibbs=kernel_gibbs,
-                         gibbs_block_docs=gibbs_block_docs)
+                         gibbs_block_docs=gibbs_block_docs,
+                         profile=profile)
 
     def _make_cache(self, capacity, max_bytes):
         return _DeviceModelCache(capacity, max_bytes,
@@ -606,18 +658,26 @@ class ShardedDeviceBackend(DeviceBackend):
         stat_key, bias, base, _ = device_merge_params(fam, cfg)
         v_true = int(parts[0].theta[stat_key].shape[-1])
         t0 = time.perf_counter()
-        with self._device_guard():
+        with self._device_guard(), \
+                obs.span("kernel.launch", "backend",
+                         op="merge_topics_sharded", n_parts=len(parts),
+                         backend=self.name, shards=self.shards):
             stats = jnp.stack([self._fetch(m, stat_key) for m in parts])
             w = jnp.ones((len(parts),), jnp.float32)
-            beta = merge_topics_sharded(
-                stats, w, self.env, bias=bias, base=base,
-                num_offset=device_norm_offset(fam, cfg), v_true=v_true,
-                interpret=default_interpret(self.interpret))
-            beta.block_until_ready()
+            with self._annotate("mlego.merge_topics_sharded"):
+                beta = merge_topics_sharded(
+                    stats, w, self.env, bias=bias, base=base,
+                    num_offset=device_norm_offset(fam, cfg), v_true=v_true,
+                    interpret=default_interpret(self.interpret))
+                beta.block_until_ready()
+            obs.set_attrs(merge_device_ms=(time.perf_counter() - t0) * 1e3)
         ms = (time.perf_counter() - t0) * 1e3
         self._sync_cache_counters()
         self._count(merges=1, device_launches=1, merge_device_ms=ms)
-        return np.asarray(beta)[:, :v_true]
+        with obs.span("allgather", "backend", backend=self.name,
+                      bytes=int(beta.nbytes), shards=self.shards):
+            host = np.asarray(beta)
+        return host[:, :v_true]
 
     def merge_many(self, part_lists, kind, cfg):
         fam = merge_family_name(kind)
@@ -630,22 +690,30 @@ class ShardedDeviceBackend(DeviceBackend):
         v_true = int(part_lists[0][0].theta[stat_key].shape[-1])
         counts = [len(parts) for parts in part_lists]
         t0 = time.perf_counter()
-        with self._device_guard():
+        with self._device_guard(), \
+                obs.span("kernel.launch", "backend",
+                         op="merge_topics_ragged_sharded",
+                         n_plans=len(part_lists), backend=self.name,
+                         shards=self.shards):
             rows = [self._fetch(m, stat_key)
                     for parts in part_lists for m in parts]
             stats = jnp.stack(rows)
             w = jnp.ones((len(rows),), jnp.float32)
-            beta = merge_topics_ragged_sharded(
-                stats, w, segment_ids(counts), len(counts), self.env,
-                bias=bias, base=base,
-                num_offset=device_norm_offset(fam, cfg), v_true=v_true,
-                interpret=default_interpret(self.interpret))
-            beta.block_until_ready()
+            with self._annotate("mlego.merge_topics_ragged_sharded"):
+                beta = merge_topics_ragged_sharded(
+                    stats, w, segment_ids(counts), len(counts), self.env,
+                    bias=bias, base=base,
+                    num_offset=device_norm_offset(fam, cfg), v_true=v_true,
+                    interpret=default_interpret(self.interpret))
+                beta.block_until_ready()
+            obs.set_attrs(merge_device_ms=(time.perf_counter() - t0) * 1e3)
         ms = (time.perf_counter() - t0) * 1e3
         self._sync_cache_counters()
         self._count(merges=len(part_lists), device_launches=1,
                     merge_device_ms=ms)
-        host = np.asarray(beta)[:, :, :v_true]
+        with obs.span("allgather", "backend", backend=self.name,
+                      bytes=int(beta.nbytes), shards=self.shards):
+            host = np.asarray(beta)[:, :, :v_true]
         return [host[i] for i in range(len(counts))]
 
 
@@ -653,9 +721,14 @@ _FACTORIES = {"host": HostBackend, "device": DeviceBackend,
               "device_sharded": ShardedDeviceBackend}
 
 
-def make_backend(name: str) -> ExecutionBackend:
+def make_backend(name: str, **kwargs) -> ExecutionBackend:
+    """Construct a backend by name; ``kwargs`` pass to its constructor
+    (host ignores ``profile=`` — it has no launches to annotate)."""
     try:
-        return _FACTORIES[name]()
+        factory = _FACTORIES[name]
     except KeyError:
         raise ValueError(f"unknown execution backend {name!r}; one of "
                          f"{BACKEND_NAMES}") from None
+    if factory is HostBackend:
+        kwargs.pop("profile", None)
+    return factory(**kwargs)

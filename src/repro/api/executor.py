@@ -16,9 +16,18 @@ persisted gap model is handed back to the backend (``note_trained``)
 so device backends can warm their cache with it before the merge that
 follows.  ``backend=None`` falls back to host semantics so direct
 callers (tests, schedulers) need no wiring.  ``gather`` returns one
-measured ``(tokens, seconds)`` sample per trained gap — the session
-feeds these to the cost provider keyed by the backend that ran them,
-which is how host and device κ are calibrated separately.
+measured ``(tokens, seconds, device_seconds)`` sample per trained gap —
+the session feeds these to the cost provider keyed by the backend that
+ran them, which is how host and device κ are calibrated separately,
+and sums the device component into the *per-query*
+``train_device_ms`` (attribution by the query's own wall clock, not a
+shared counter diff, so concurrent sessions on one backend can't
+claim each other's kernel time).
+
+Every stage emits spans through the ambient tracing context
+(``repro.obs.trace``): ``fetch`` around the store reads, ``train``
+per gap, ``merge`` around the backend merge.  With no enclosing span
+(bare executor use) these are no-ops.
 
 The executor consumes the planner's **Plan IR** (``repro.core.plan_ir``):
 ``gather`` walks a ``Plan``'s ``FetchStep``/``TrainGapStep`` sequence —
@@ -45,6 +54,7 @@ from repro.core.plan_ir import Plan
 from repro.core.plans import Interval
 from repro.core.store import ModelStore
 from repro.data.corpus import Corpus
+from repro.obs import trace as obs
 from repro.testing.faults import maybe_fail
 
 
@@ -160,8 +170,11 @@ class Executor:
 
         # Device loss is excluded: a blind retry would hit the same
         # dead device — the session replays on the fallback chain.
-        theta = self.retry.run(_train, site=site,
-                               no_retry=(DeviceLostError,))
+        with obs.span("train", "exec", lo=lo, hi=hi, kind=kind,
+                      backend=(backend.name if backend else "host"),
+                      tokens=sub.n_tokens):
+            theta = self.retry.run(_train, site=site,
+                                   no_retry=(DeviceLostError,))
         if persist:
             m = self.store.add(Interval(lo, hi), sub.n_docs, sub.n_tokens,
                                kind, theta)
@@ -214,15 +227,19 @@ class Executor:
                backend: Optional[ExecutionBackend] = None
                ) -> Tuple[List[MaterializedModel],
                           List[MaterializedModel],
-                          int, List[Tuple[int, float]]]:
+                          int, List[Tuple[int, float, float]]]:
         """Consume one Plan IR's fetch + train-gap steps.
 
         Returns ``(parts, fresh, n_trained_tokens, train_obs)``:
         ``parts`` is everything the plan's merge step will combine —
         fetched store models (resolved by id) followed by freshly
         trained gap models — ``fresh`` the trained subset, and
-        ``train_obs`` one measured ``(tokens, seconds)`` sample per
-        trained gap (the calibrated cost provider's κ input).
+        ``train_obs`` one measured ``(tokens, seconds,
+        device_seconds)`` sample per trained gap: ``seconds`` is the
+        κ input for the calibrated cost provider, ``device_seconds``
+        equals it when the backend routed this kind through a device
+        kernel (``backend.kernel_route``) and is 0.0 on host routes —
+        the per-query ``train_device_ms`` attribution.
         """
         def _fetch_parts() -> List[MaterializedModel]:
             try:
@@ -236,21 +253,25 @@ class Executor:
 
         # store.get faults (injected or real I/O hiccups) retry in
         # place; a StalePlanError propagates — only a re-plan helps.
-        parts = self.retry.run(_fetch_parts, site="store.get",
-                               no_retry=(StalePlanError,))
+        with obs.span("fetch", "exec", n_fetches=len(plan.fetches)):
+            parts = self.retry.run(_fetch_parts, site="store.get",
+                                   no_retry=(StalePlanError,))
+            obs.set_attrs(bytes=sum(p.nbytes() for p in parts))
+        kernel_route = backend is not None and backend.kernel_route(kind)
         fresh: List[MaterializedModel] = []
         n_tok = 0
-        obs: List[Tuple[int, float]] = []
+        samples: List[Tuple[int, float, float]] = []
         for g in plan.gaps:
             t0 = time.perf_counter()
             m = self.train_gap(g.gap.lo, g.gap.hi, kind,
                                persist=persist, backend=backend)
             if m is not None:
+                dt = time.perf_counter() - t0
                 fresh.append(m)
                 parts.append(m)
                 n_tok += m.n_tokens
-                obs.append((m.n_tokens, time.perf_counter() - t0))
-        return parts, fresh, n_tok, obs
+                samples.append((m.n_tokens, dt, dt if kernel_route else 0.0))
+        return parts, fresh, n_tok, samples
 
     def merge(self, parts: Sequence[MaterializedModel],
               backend: Optional[ExecutionBackend] = None) -> np.ndarray:
@@ -259,9 +280,11 @@ class Executor:
         execution backend (host semantics when None)."""
         kind = _parts_kind(parts)
         b = backend or self._host
-        return self.retry.run(
-            lambda: b.merge(list(parts), kind, self.cfg),
-            site=f"backend.merge.{b.name}", no_retry=(DeviceLostError,))
+        with obs.span("merge", "exec", n_parts=len(parts), kind=kind,
+                      backend=b.name):
+            return self.retry.run(
+                lambda: b.merge(list(parts), kind, self.cfg),
+                site=f"backend.merge.{b.name}", no_retry=(DeviceLostError,))
 
     def merge_many(self, part_lists: Sequence[Sequence[MaterializedModel]],
                    backend: Optional[ExecutionBackend] = None
@@ -275,7 +298,10 @@ class Executor:
             raise ValueError(f"cannot batch-merge mixed kinds {kinds}")
         kind = kinds.pop()
         b = backend or self._host
-        return self.retry.run(
-            lambda: b.merge_many([list(p) for p in part_lists], kind,
-                                 self.cfg),
-            site=f"backend.merge.{b.name}", no_retry=(DeviceLostError,))
+        with obs.span("merge", "exec", n_plans=len(part_lists),
+                      n_parts=sum(len(p) for p in part_lists), kind=kind,
+                      backend=b.name):
+            return self.retry.run(
+                lambda: b.merge_many([list(p) for p in part_lists], kind,
+                                     self.cfg),
+                site=f"backend.merge.{b.name}", no_retry=(DeviceLostError,))

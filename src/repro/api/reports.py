@@ -55,6 +55,11 @@ class QueryReport:
     (``backend`` then names the backend that actually answered);
     None on the healthy path.  The serving layer reads it to feed the
     per-backend circuit breaker.
+
+    ``trace`` is the query's trace id in the session's (or service's)
+    ``repro.obs.Tracer`` — look it up with ``tracer.spans(trace_id=
+    report.trace)`` or find it in the exported Chrome trace.  None
+    when tracing is disabled.
     """
 
     beta: np.ndarray                 # merged topic-word matrix (K, V)
@@ -75,6 +80,7 @@ class QueryReport:
     plan_cached: bool = False
     degraded: int = 0
     fallback_from: Optional[str] = None
+    trace: Optional[str] = None
 
     @property
     def plan(self) -> SearchResult:
@@ -118,6 +124,7 @@ class BatchReport:
     pad_rows: int = 0                # zero-weight rows across the launches
     plan_cached: bool = False        # Alg. 4 result served from the cache
     fallback_from: Optional[str] = None  # backend lost mid-batch (see above)
+    trace: Optional[str] = None      # batch-level trace id (see QueryReport)
 
     @property
     def merge_s(self) -> float:

@@ -46,6 +46,8 @@ import jax
 from repro.api.backend import DeviceBackend, ExecutionBackend, make_backend
 from repro.api.executor import Executor, StalePlanError
 from repro.core.errors import DeviceLostError, RetryPolicy
+from repro.obs import trace as obs
+from repro.obs.trace import Tracer
 from repro.api.planner import PlanCache, Planner
 from repro.api.reports import BatchReport, QueryReport
 from repro.api.spec import QuerySpec
@@ -95,7 +97,9 @@ class MLegoSession:
                  plan_cache: Optional[PlanCache] = None,
                  plan_cache_entries: int = 256,
                  calibration_path: Optional[str] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 tracer: Optional[Tracer] = None,
+                 profile: bool = False):
         self.corpus = corpus
         self.index = DataIndex(corpus)
         self._backends = {}
@@ -138,8 +142,22 @@ class MLegoSession:
         self.retry = retry if retry is not None else RetryPolicy()
         self.executor = Executor(corpus, cfg, self.store, self._next_key,
                                  retry=self.retry)
+        # tracing: every submit/submit_many opens a root span on this
+        # tracer; a private tracer by default, or the serving layer's
+        # shared one (so worker-thread spans from many tenant sessions
+        # land in one exportable buffer)
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._profile = profile
+        # optional outcome hook: called once per answered query with
+        # (answered_by_backend, fallback_from, error) — the serving
+        # layer installs its breaker/health feed here so *direct*
+        # session use (tenants bypassing the front door) still counts
+        self.on_outcome: Optional[
+            Callable[[str, Optional[str], Optional[BaseException]],
+                     None]] = None
         self.backend = self._register_backend(
-            make_backend(backend) if isinstance(backend, str) else backend,
+            make_backend(backend, profile=profile)
+            if isinstance(backend, str) else backend,
             adopted=not isinstance(backend, str))
 
     @staticmethod
@@ -352,7 +370,8 @@ class MLegoSession:
         if spec.backend is None:
             return self.backend
         if spec.backend not in self._backends:
-            self._register_backend(make_backend(spec.backend))
+            self._register_backend(
+                make_backend(spec.backend, profile=self._profile))
         return self._backends[spec.backend]
 
     # device-loss fallback chain: sharded -> single-device -> host
@@ -373,9 +392,12 @@ class MLegoSession:
             if name is None:
                 return None
             if name not in self._backends:
-                self._register_backend(make_backend(name))
+                self._register_backend(
+                    make_backend(name, profile=self._profile))
             nxt = self._backends[name]
             if not nxt.quarantined:
+                obs.instant("fallback", from_backend=backend.name,
+                            to_backend=nxt.name)
                 return nxt
 
     def _models(self, kind: str) -> List[MaterializedModel]:
@@ -468,12 +490,46 @@ class MLegoSession:
         elif n_merges > 0:
             self.cost.observe_merge_host(n_merges, merge_s)
 
+    def _emit_outcome(self, answered_by: str,
+                      fallback_from: Optional[str],
+                      error: Optional[BaseException]) -> None:
+        """Fire the outcome hook, never letting observer errors mask
+        the query's own result."""
+        if self.on_outcome is None:
+            return
+        try:
+            self.on_outcome(answered_by, fallback_from, error)
+        except Exception:
+            pass
+
     def submit(self, spec: QuerySpec) -> QueryReport:
         """One analytic query: plan search, gap training, merge.
 
         ``spec.kind=None`` (the default) uses the session's kind;
         ``spec.backend=None`` the session's execution backend.
+
+        The whole query runs under a ``session.submit`` root span on
+        ``self.tracer``; the returned report carries its ``trace`` id,
+        so the query's plan/fetch/train/merge breakdown can be looked
+        up in the exported Chrome trace.
         """
+        with self.tracer.span(
+                "session.submit", "session",
+                attrs={"sigma": str(spec.sigma), "alpha": spec.alpha,
+                       "kind": spec.kind or self.kind}) as root:
+            try:
+                rep = self._submit_traced(spec)
+            except BaseException as exc:
+                self._emit_outcome(spec.backend or self.backend.name,
+                                   None, exc)
+                raise
+        if root is not None and rep.trace is None:
+            rep.trace = root.trace_id
+        self._emit_outcome(rep.backend, rep.fallback_from, None)
+        return rep
+
+    def _submit_traced(self, spec: QuerySpec) -> QueryReport:
+        """``submit`` body; runs under the root span opened above."""
         kind = spec.kind or self.kind
         backend = self._backend_for(spec)
         plans: List[SearchResult] = []
@@ -485,14 +541,15 @@ class MLegoSession:
         fallback_from: Optional[str] = None
         models = self._models(kind)
         fingerprint = PlanCache.fingerprint(models)
-        snap_train = backend.stats
         train_device_ms = 0.0
         for sigma in spec.sigma:
             stale_left = 1
             while True:
                 t0 = time.perf_counter()
-                res, was_cached = self._plan_component(
-                    models, fingerprint, sigma, spec, kind, backend)
+                with obs.span("plan", "session", lo=sigma.lo, hi=sigma.hi):
+                    res, was_cached = self._plan_component(
+                        models, fingerprint, sigma, spec, kind, backend)
+                    obs.set_attrs(cached=was_cached)
                 search_s += time.perf_counter() - t0
 
                 # training below may mutate the store (persisted gap
@@ -502,7 +559,7 @@ class MLegoSession:
                 # be served for a different model set
                 t1 = time.perf_counter()
                 try:
-                    c_parts, c_fresh, c_tok, obs = self.executor.gather(
+                    c_parts, c_fresh, c_tok, samples = self.executor.gather(
                         res.ir, kind, persist=spec.persist, backend=backend)
                 except StalePlanError:
                     # background compaction/eviction removed a planned
@@ -529,10 +586,7 @@ class MLegoSession:
                         raise
                     if fallback_from is None:
                         fallback_from = backend.name
-                    train_device_ms += backend.stats.delta(
-                        snap_train).train_device_ms
                     backend = nxt
-                    snap_train = backend.stats
                     models = self._models(kind)
                     fingerprint = PlanCache.fingerprint(models)
                     continue
@@ -543,12 +597,18 @@ class MLegoSession:
             parts.extend(c_parts)
             fresh.extend(c_fresh)
             n_tok += c_tok
-            for tok, secs in obs:
+            # device seconds come per-sample from the executor (nonzero
+            # only when the backend kernel-routed that gap), so a
+            # query's device attribution is *its own* — concurrent
+            # sessions sharing the backend no longer leak their train
+            # launches into this query's counter the way the old
+            # stats-snapshot diff did
+            for tok, secs, dev_s in samples:
                 self.cost.observe_train(tok, secs, backend=backend.name)
+                train_device_ms += dev_s * 1e3
 
         if not parts:
             raise ValueError(f"query {spec.sigma} selects no data")
-        train_device_ms += backend.stats.delta(snap_train).train_device_ms
         # the snapshot->merge->diff window is held against concurrent
         # sessions sharing this backend: their launches inside it
         # would corrupt this query's counters and the per-byte
@@ -620,8 +680,37 @@ class MLegoSession:
         stream of the first (lowest-index) query covering it.  The
         serving layer passes tenant streams here so a coalesced group
         reproduces per-tenant; ``None`` keeps this session's stream.
+
+        The batch runs under one ``session.submit_many`` root span;
+        the ``BatchReport`` (and any per-query report that does not
+        already carry one) gets its ``trace`` id.
         """
-        specs = list(specs)
+        with self.tracer.span(
+                "session.submit_many", "session",
+                attrs={"batch": len(specs)}) as root:
+            try:
+                rep = self._submit_many_inner(list(specs), next_keys)
+            except BaseException as exc:
+                name = self.backend.name
+                for s in specs:
+                    self._emit_outcome(s.backend or name, None, exc)
+                raise
+        if root is not None:
+            if rep.trace is None:
+                rep.trace = root.trace_id
+            for r in rep.reports:
+                if r.trace is None:
+                    r.trace = root.trace_id
+        for r in rep.reports:
+            self._emit_outcome(r.backend, r.fallback_from, None)
+        return rep
+
+    def _submit_many_inner(self, specs: List[QuerySpec],
+                           next_keys: Optional[
+                               Sequence[Callable[[], object]]] = None
+                           ) -> BatchReport:
+        """``submit_many`` body (also the α-split recursion target, so
+        sub-batches do not re-open root spans or re-fire outcomes)."""
         if next_keys is not None and len(next_keys) != len(specs):
             raise ValueError(
                 f"next_keys must parallel specs: got {len(next_keys)} "
@@ -705,19 +794,27 @@ class MLegoSession:
                 self.cost, getattr(self.cost, "version", 0),
                 self._cache_epoch(backend), self._data_epoch)
         t0 = time.perf_counter()
-        opt = self._plan_cache.get(bkey)
-        batch_cached = opt is not None
-        if opt is None:
-            self.cost.set_train_backend(backend.name)
-            opt = self.planner.plan_batch(models, sigmas, alpha)
-            self._plan_cache.put(bkey, opt)
+        with obs.span("plan", "session", batch=len(specs),
+                      components=len(sigmas)):
+            opt = self._plan_cache.get(bkey)
+            batch_cached = opt is not None
+            if opt is None:
+                self.cost.set_train_backend(backend.name)
+                opt = self.planner.plan_batch(models, sigmas, alpha)
+                self._plan_cache.put(bkey, opt)
+            obs.set_attrs(cached=batch_cached)
         shared_search_s = time.perf_counter() - t0
 
         # train every atomic shared gap segment exactly once (gap
         # structure read off the lowered Plan IR)
         gap_lists = [[g.gap for g in ir.gaps] for ir in opt.irs]
         seg_models = {}
-        snap_train = backend.stats
+        # per-segment wall time counts as device time iff this backend
+        # routes the kind through a kernel — attribution stays with
+        # *this batch's* segments even when other sessions share the
+        # backend concurrently
+        kernel_route = backend.kernel_route(kind)
+        train_device_ms = 0.0
         t1 = time.perf_counter()
         for lo, hi, _ in _segments(gap_lists):
             covering = sorted({
@@ -734,12 +831,13 @@ class MLegoSession:
             m = self.executor.train_gap(lo, hi, kind, persist=persist,
                                         backend=backend, next_key=key_fn)
             if m is not None:
+                dt = time.perf_counter() - t_gap
                 seg_models[(lo, hi)] = m
-                self.cost.observe_train(m.n_tokens,
-                                        time.perf_counter() - t_gap,
+                self.cost.observe_train(m.n_tokens, dt,
                                         backend=backend.name)
+                if kernel_route:
+                    train_device_ms += dt * 1e3
         shared_train_s = time.perf_counter() - t1
-        train_device_ms = backend.stats.delta(snap_train).train_device_ms
 
         # assemble every query's part list from its components' IR
         # (fetches resolved by id), then merge the whole batch through
@@ -832,7 +930,7 @@ class MLegoSession:
         reports: List[Optional[QueryReport]] = [None] * len(specs)
         subs: List[BatchReport] = []
         for idxs in groups.values():
-            sub = self.submit_many(
+            sub = self._submit_many_inner(
                 [specs[i] for i in idxs],
                 next_keys=[next_keys[i] for i in idxs]
                 if next_keys is not None else None)

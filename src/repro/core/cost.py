@@ -588,6 +588,8 @@ class CalibratedCostModel(CostProvider):
 
     @property
     def version(self) -> int:
+        """Refit counter; the serve metrics registry mirrors it as
+        ``mlego_calibration_refits_total``."""
         self._ensure_fit()
         return self._version
 

@@ -159,8 +159,16 @@ class RetryPolicy:
         ``on_retry(exc, attempt)`` fires before each re-try, after the
         backoff sleep.  ``sleep`` defaults to ``time.sleep``; tests
         pass a stub.
+
+        Each re-try also lands a zero-duration ``retry`` event on the
+        ambient trace span (``repro.obs.trace``), so a query's span
+        tree shows every attempt with its site and the error that
+        forced it; free when no span is active.
         """
         import time as _time
+
+        from repro.obs import trace as _obs
+
         do_sleep = sleep if sleep is not None else _time.sleep
         budget = self.attempts_for(site)
         attempt = 0
@@ -179,6 +187,8 @@ class RetryPolicy:
                 if delay > 0.0:
                     do_sleep(delay)
                 self._note_retry(site)
+                _obs.instant("retry", site=site, attempt=attempt,
+                             error=type(exc).__name__)
                 if on_retry is not None:
                     on_retry(exc, attempt)
 

@@ -39,12 +39,15 @@ def merge_topics(stats, weights, bias: float = 0.0, base: float = 0.0,
     interpret = default_interpret(interpret)
     n, k, v = stats.shape
     kp, vp = _round_up(k, 8), _round_up(v, 128)
-    if (kp, vp) != (k, v):
-        stats = jnp.pad(stats, ((0, 0), (0, kp - k), (0, vp - v)),
-                        constant_values=base)
-    out = merge_topics_pallas(stats, weights, bias, base,
-                              interpret=interpret)
-    return out[:k, :v]
+    # named scopes land in HLO metadata and jax.profiler traces, so a
+    # device timeline attributes launch time to the MLego op by name
+    with jax.named_scope("mlego.merge_topics"):
+        if (kp, vp) != (k, v):
+            stats = jnp.pad(stats, ((0, 0), (0, kp - k), (0, vp - v)),
+                            constant_values=base)
+        out = merge_topics_pallas(stats, weights, bias, base,
+                                  interpret=interpret)
+        return out[:k, :v]
 
 
 @functools.partial(jax.jit, static_argnames=("bias", "base", "interpret"))
@@ -58,12 +61,14 @@ def merge_topics_batch(stats, weights, bias: float = 0.0, base: float = 0.0,
     interpret = default_interpret(interpret)
     b, n, k, v = stats.shape
     kp, vp = _round_up(k, 8), _round_up(v, 128)
-    if (kp, vp) != (k, v):
-        stats = jnp.pad(stats, ((0, 0), (0, 0), (0, kp - k), (0, vp - v)),
-                        constant_values=base)
-    out = merge_topics_batched_pallas(stats, weights, bias, base,
-                                      interpret=interpret)
-    return out[:, :k, :v]
+    with jax.named_scope("mlego.merge_topics_batch"):
+        if (kp, vp) != (k, v):
+            stats = jnp.pad(stats,
+                            ((0, 0), (0, 0), (0, kp - k), (0, vp - v)),
+                            constant_values=base)
+        out = merge_topics_batched_pallas(stats, weights, bias, base,
+                                          interpret=interpret)
+        return out[:, :k, :v]
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "bias", "base",
@@ -73,12 +78,14 @@ def _merge_topics_ragged_impl(stats, weights, seg_ids, num_segments: int,
                               *, interpret: bool = False):
     n_rows, k, v = stats.shape
     kp, vp = _round_up(k, 8), _round_up(v, 128)
-    if (kp, vp) != (k, v):
-        stats = jnp.pad(stats, ((0, 0), (0, kp - k), (0, vp - v)),
-                        constant_values=base)
-    out = merge_topics_ragged_pallas(stats, weights, seg_ids, num_segments,
-                                     bias, base, interpret=interpret)
-    return out[:, :k, :v]
+    with jax.named_scope("mlego.merge_topics_ragged"):
+        if (kp, vp) != (k, v):
+            stats = jnp.pad(stats, ((0, 0), (0, kp - k), (0, vp - v)),
+                            constant_values=base)
+        out = merge_topics_ragged_pallas(stats, weights, seg_ids,
+                                         num_segments, bias, base,
+                                         interpret=interpret)
+        return out[:, :k, :v]
 
 
 def segment_ids(counts: Sequence[int]) -> jnp.ndarray:

@@ -35,15 +35,18 @@ def vb_estep(x, exp_elog_beta, gamma0, alpha: float, n_iters: int,
     bd = min(block_d, _round_up(d, 8))
     dp = _round_up(d, bd)
     block_d = bd
-    if (kp, vp, dp) != (k, v, d):
-        x = jnp.pad(x, ((0, dp - d), (0, vp - v)))
-        # pad eeβ with ~0 (tiny positive keeps phinorm finite)
-        exp_elog_beta = jnp.pad(exp_elog_beta,
-                                ((0, kp - k), (0, vp - v)),
-                                constant_values=1e-30)
-        gamma0 = jnp.pad(gamma0, ((0, dp - d), (0, kp - k)),
-                         constant_values=alpha)
-    gamma, sstats = vb_estep_pallas(x, exp_elog_beta, gamma0, alpha,
-                                    n_iters, block_d=block_d,
-                                    interpret=interpret)
-    return gamma[:d, :k], sstats[:k, :v]
+    # named scope: HLO metadata + jax.profiler timelines attribute the
+    # launch to the MLego op by name
+    with jax.named_scope("mlego.vb_estep"):
+        if (kp, vp, dp) != (k, v, d):
+            x = jnp.pad(x, ((0, dp - d), (0, vp - v)))
+            # pad eeβ with ~0 (tiny positive keeps phinorm finite)
+            exp_elog_beta = jnp.pad(exp_elog_beta,
+                                    ((0, kp - k), (0, vp - v)),
+                                    constant_values=1e-30)
+            gamma0 = jnp.pad(gamma0, ((0, dp - d), (0, kp - k)),
+                             constant_values=alpha)
+        gamma, sstats = vb_estep_pallas(x, exp_elog_beta, gamma0, alpha,
+                                        n_iters, block_d=block_d,
+                                        interpret=interpret)
+        return gamma[:d, :k], sstats[:k, :v]

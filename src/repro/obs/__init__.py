@@ -1,0 +1,53 @@
+"""MLego observability layer: tracing, metrics, kernel profiling.
+
+Three pieces, one instrumentation story (see api/README.md
+"Observability" for the user-facing tour):
+
+* ``repro.obs.trace`` — `Span`/`Tracer` with a thread-safe ring
+  buffer and Chrome-trace-event export (loads in Perfetto).  Span
+  owners (session, service) hold a `Tracer`; everything else emits
+  through the ambient thread-local context, so un-traced code paths
+  cost one dict lookup.
+* ``repro.obs.metrics`` — `MetricsRegistry` of labelled counters/
+  gauges/histograms with Prometheus text exposition and a JSON
+  snapshot; the single read surface for every counter the serve
+  stack used to scatter across ad-hoc structures.
+* ``repro.obs.profile`` — opt-in kernel profiling hooks:
+  ``jax.profiler`` trace annotations around device launches plus
+  HLO-derived flops/bytes features (via ``launch/hlo_analyzer``)
+  landed as span attributes.
+
+``trace`` and ``metrics`` are stdlib-only by design — importable from
+``repro.core`` without cycles; only ``profile`` touches jax.
+"""
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    HistogramView,
+    MetricsRegistry,
+)
+from repro.obs.trace import (
+    Span,
+    Tracer,
+    current_span,
+    current_tracer,
+    instant,
+    set_attrs,
+    span,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "HistogramView",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "current_span",
+    "current_tracer",
+    "instant",
+    "set_attrs",
+    "span",
+]

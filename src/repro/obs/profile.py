@@ -1,0 +1,102 @@
+"""Kernel profiling hooks: profiler annotations + HLO-derived features.
+
+The ``profile=`` mode on the device backends does two things per
+merge/E-step/Gibbs launch:
+
+* wraps the launch in a ``jax.profiler.TraceAnnotation`` so a real
+  ``jax.profiler.trace()`` capture (TensorBoard / XProf) attributes
+  device time to the MLego op that caused it, and
+* extracts static flops/bytes features from the launch's *optimized*
+  HLO via the in-repo analyzer (``launch/hlo_analyzer.analyze_hlo``)
+  and lands them as attributes on the ambient span — the same span
+  whose measured milliseconds the calibration log consumes, so one
+  trace row carries both the prediction features and the label.
+
+HLO extraction costs a compile, so features are memoized by
+``(tag, arg shapes/dtypes, static kwargs)`` — the same key space XLA
+itself caches compiles under.  Everything is best-effort: a lowering
+or parse failure yields ``{}`` rather than an error on the hot path
+(the launch itself already ran or will run regardless).
+
+Keep this module import-light: importing it must not pull in jax at
+module import time beyond what the backends already require.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, Iterator, Tuple
+
+from repro.obs import trace as _trace
+
+__all__ = ["annotate", "hlo_features", "clear_feature_cache"]
+
+_FEATURE_KEYS = ("flops", "hbm_bytes", "collective_wire_bytes")
+
+_cache: Dict[Tuple, Dict[str, float]] = {}
+_cache_lock = threading.Lock()
+
+
+@contextmanager
+def annotate(name: str) -> Iterator[None]:
+    """``jax.profiler.TraceAnnotation`` that degrades to a no-op."""
+    try:
+        import jax
+        cm = jax.profiler.TraceAnnotation(name)
+    except Exception:
+        yield
+        return
+    with cm:
+        yield
+
+
+def _shape_sig(x: Any) -> Tuple:
+    shape = getattr(x, "shape", None)
+    if shape is None:
+        return (type(x).__name__,)
+    return (tuple(shape), str(getattr(x, "dtype", "?")))
+
+
+def hlo_features(tag: str, fn: Callable, *args: Any,
+                 n_partitions: int = 1, **static: Any) -> Dict[str, float]:
+    """Flops/bytes features for ``fn(*args, **static)``'s optimized HLO.
+
+    ``fn`` must be jit-traceable with ``args`` as array arguments and
+    ``static`` as keyword constants.  Returns a dict with keys
+    ``flops`` / ``hbm_bytes`` / ``collective_wire_bytes`` (floats), or
+    ``{}`` when lowering/analysis fails.  Memoized per shape class.
+    """
+    key = ((tag, int(n_partitions))
+           + tuple(_shape_sig(a) for a in args)
+           + tuple(sorted((k, repr(v)) for k, v in static.items())))
+    with _cache_lock:
+        hit = _cache.get(key)
+    if hit is not None:
+        return dict(hit)
+    feats: Dict[str, float] = {}
+    try:
+        import jax
+
+        from repro.launch.hlo_analyzer import analyze_hlo
+
+        lowered = jax.jit(lambda *xs: fn(*xs, **static)).lower(*args)
+        hlo_text = lowered.compile().as_text()
+        stats = analyze_hlo(hlo_text, int(n_partitions))
+        feats = {k: float(getattr(stats, k)) for k in _FEATURE_KEYS}
+    except Exception:
+        feats = {}
+    with _cache_lock:
+        _cache[key] = feats
+    return dict(feats)
+
+
+def annotate_span(prefix: str, feats: Dict[str, float]) -> None:
+    """Land HLO features on the ambient span as ``<prefix>_<key>``."""
+    if feats:
+        _trace.set_attrs(**{"%s_%s" % (prefix, k): v
+                            for k, v in feats.items()})
+
+
+def clear_feature_cache() -> None:
+    with _cache_lock:
+        _cache.clear()

@@ -67,6 +67,7 @@ class BreakerSnapshot:
     reroutes: int = 0             # calls denied while open
     half_open_probes: int = 0     # probes admitted in current half-open
     since_s: float = 0.0          # seconds in current state
+    transitions: int = 0          # lifetime state transitions (any edge)
 
 
 class CircuitBreaker:
@@ -88,6 +89,7 @@ class CircuitBreaker:
         self._transitions: List[Tuple[str, str]] = []  # pending hook args
         self.opens = 0
         self.reroutes = 0
+        self.transitions = 0
 
     # -- internals (lock held) ------------------------------------------
 
@@ -97,6 +99,7 @@ class CircuitBreaker:
             return
         self._state = new
         self._since = self._clock()
+        self.transitions += 1
         if new == OPEN:
             self.opens += 1
         if new == HALF_OPEN:
@@ -196,7 +199,8 @@ class CircuitBreaker:
                 opens=self.opens,
                 reroutes=self.reroutes,
                 half_open_probes=self._probes_inflight,
-                since_s=max(0.0, self._clock() - self._since))
+                since_s=max(0.0, self._clock() - self._since),
+                transitions=self.transitions)
             pending = self._drain_hooks_locked()
         self._fire(pending)
         return snap

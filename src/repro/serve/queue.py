@@ -100,7 +100,13 @@ class SubmitOptions:
 
 @dataclass
 class PendingQuery:
-    """One enqueued spec awaiting execution."""
+    """One enqueued spec awaiting execution.
+
+    ``trace_id``/``root_span_id`` are minted by the service front door
+    (``repro.obs.trace``) so the per-query root span survives the
+    thread hop: the submitter enqueues, a pool worker executes, and
+    everything the worker records parents onto the pre-allocated root.
+    """
 
     spec: QuerySpec
     tenant: str
@@ -108,6 +114,8 @@ class PendingQuery:
     future: "Future" = field(default_factory=Future)
     enqueued_at: float = field(default_factory=time.perf_counter)
     seq: int = -1                    # assigned by the queue (FIFO tiebreak)
+    trace_id: Optional[str] = None
+    root_span_id: Optional[str] = None
 
     @property
     def deadline_at(self) -> Optional[float]:

@@ -19,7 +19,7 @@ but a query completing mid-snapshot can land between them.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from repro.api.backend import BackendStats
 from repro.ingest.pipeline import IngestReport
@@ -143,6 +143,10 @@ class ServiceReport:
     breaker: Dict[str, BreakerSnapshot] = field(default_factory=dict)
     breaker_reroutes: int = 0
     retries: Dict[str, int] = field(default_factory=dict)
+    # JSON snapshot of the service metrics registry (same objects the
+    # Prometheus exposition renders, so the two cannot drift); see
+    # ``repro.obs.metrics.MetricsRegistry.snapshot``
+    metrics: Optional[Dict[str, Any]] = None
     # None unless the corresponding subsystem is attached
     ingest: Optional[IngestReport] = None
     speculation: Optional[SpeculationReport] = None

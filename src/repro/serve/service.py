@@ -103,8 +103,12 @@ from repro.serve.queue import (
     ShedError,
     SubmitOptions,
 )
+from repro.obs.metrics import HistogramView, MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serve.reports import BackendSLO, ServiceReport, TenantStats
-from repro.serve.slo import LatencyTracker, SLOPolicy
+from repro.serve.slo import SLOPolicy
+
+_BREAKER_STATE_CODE = {"closed": 0, "half_open": 1, "open": 2}
 
 DEFAULT_TENANT = "default"
 
@@ -192,7 +196,10 @@ class MLegoService:
                  slo_window: int = 256,
                  tenant_ttl_s: Optional[float] = None,
                  breaker: Optional[BreakerPolicy] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 tracer: Optional[Tracer] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 profile: bool = False):
         if workers_per_pool < 1:
             raise ValueError(
                 f"workers_per_pool must be >= 1, got {workers_per_pool}")
@@ -203,8 +210,9 @@ class MLegoService:
         self.cfg = cfg
         self.store = store if store is not None else ModelStore()
         self.kind = resolve_kind(kind)
-        self.backend = make_backend(backend) if isinstance(backend, str) \
-            else backend
+        self._profile = profile
+        self.backend = make_backend(backend, profile=profile) \
+            if isinstance(backend, str) else backend
         self.plan_cache = PlanCache(max_entries=plan_cache_entries)
         self.cost = MLegoSession._make_cost(cost, cfg, calibration_path)
         self.calibration_path = calibration_path
@@ -222,8 +230,16 @@ class MLegoService:
             self._slo_policy = SLOPolicy(p95_slo_s=slo_p95_s) \
                 if slo_p95_s is not None else None
         self._slo_window = slo_window
-        self._trackers: Dict[str, LatencyTracker] = {}
-        self._tracker_lock = threading.Lock()
+        # observability: one tracer (shared with every tenant session,
+        # so worker-thread spans land in one exportable buffer) and one
+        # metrics registry (the single source of truth for the
+        # service's counters — ``report()`` reads the same objects the
+        # Prometheus exposition renders)
+        self.tracer = tracer if tracer is not None else Tracer(
+            capacity=65536)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._build_metrics()
         # one retry policy shared by every tenant session, so the
         # report's per-site retry counters aggregate service-wide
         self.retry = retry if retry is not None else RetryPolicy()
@@ -236,7 +252,6 @@ class MLegoService:
         self._breakers: Dict[int, CircuitBreaker] = {}
         self._breaker_names: Dict[int, str] = {}
         self._breaker_lock = threading.Lock()
-        self._breaker_reroutes = 0
 
         self._sessions: Dict[str, MLegoSession] = {}
         self._session_lock = threading.RLock()
@@ -264,12 +279,10 @@ class MLegoService:
 
         self._stats_lock = threading.Lock()
         self._tenants: Dict[str, TenantStats] = {}
-        self._queries = self._errors = 0
-        self._groups = self._coalesced_groups = 0
+        # width aggregates stay plain ints under the stats lock (they
+        # pair with the TenantStats updates); everything countable
+        # lives natively in the metrics registry (see _build_metrics)
         self._width_sum = self._max_coalesce_width = 0
-        self._shed = self._deadline_rejected = 0
-        self._degraded = self._tenant_evictions = 0
-        self._bisect_retries = 0
 
         self._closed = False
         self._stop = threading.Event()
@@ -277,6 +290,149 @@ class MLegoService:
         self._pools: Dict[object, _Pool] = {}
         self._pool_lock = threading.Lock()
         self._pool_for(self.backend)            # default pool, eagerly
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+    def _build_metrics(self) -> None:
+        """Register the service's metric families.
+
+        *Native* counters are the service's only copy of the number —
+        ``report()`` reads them back, so the Prometheus exposition and
+        the ``ServiceReport`` can never disagree.  Structures with
+        their own locking discipline (``BackendStats``, breakers, the
+        retry ledger, caches) stay the writers and are *mirrored* into
+        the registry by a pre-scrape callback reading the same live
+        sources ``report()`` reads.
+        """
+        reg = self.registry
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        self._m_queries = c("mlego_queries_total",
+                            "Answered or failed query executions")
+        self._m_errors = c("mlego_query_errors_total",
+                           "Query executions that raised")
+        self._m_groups = c("mlego_groups_total",
+                           "Drained execution groups")
+        self._m_coalesced = c("mlego_coalesced_groups_total",
+                              "Groups of width > 1 (fused submit_many)")
+        self._m_shed = c("mlego_shed_total",
+                         "Queries refused: full queue, displacement, "
+                         "or overwait")
+        self._m_deadline = c("mlego_deadline_rejected_total",
+                             "Queries expired in queue past deadline_s")
+        self._m_degraded = c("mlego_degraded_queries_total",
+                             "Answers produced under SLO degradation",
+                             labelnames=("level",))
+        self._m_evictions = c("mlego_tenant_evictions_total",
+                              "Idle-TTL tenant session evictions")
+        self._m_bisect = c("mlego_bisect_retries_total",
+                           "Fused groups split after a failed batch")
+        self._m_reroutes = c("mlego_breaker_reroutes_total",
+                             "Queries routed to a fallback pool by an "
+                             "open breaker")
+        self._m_transitions = c("mlego_breaker_transitions_total",
+                                "Breaker state transitions",
+                                labelnames=("backend", "to"))
+        self._m_latency = h("mlego_serve_latency_seconds",
+                            "Client-observed latency (enqueue to answer)",
+                            labelnames=("backend",),
+                            window=self._slo_window)
+        # mirrored families (synced by _sync_mirrors at scrape time)
+        self._m_queue_depth = g("mlego_queue_depth",
+                                "Pending queries per worker pool",
+                                labelnames=("pool",))
+        self._m_plan_hits = c("mlego_plan_cache_hits_total",
+                              "Shared plan cache hits")
+        self._m_plan_misses = c("mlego_plan_cache_misses_total",
+                                "Shared plan cache misses")
+        self._m_plan_entries = g("mlego_plan_cache_entries",
+                                 "Shared plan cache residency")
+        self._m_store_bytes = g("mlego_store_bytes",
+                                "Materialized model store size")
+        self._m_cal_samples = g("mlego_calibration_samples",
+                                "Cost-calibration log size")
+        self._m_cal_refits = c("mlego_calibration_refits_total",
+                               "Cost-model refit generations")
+        self._m_active = g("mlego_active_sessions",
+                           "Tenant sessions currently resident")
+        self._m_retries = c("mlego_retries_total",
+                            "Transient-failure retries per site",
+                            labelnames=("site",))
+        self._m_hit_bytes = c("mlego_cache_hit_bytes_total",
+                              "Bytes read from the device model cache",
+                              labelnames=("backend",))
+        self._m_miss_bytes = c("mlego_cache_miss_bytes_total",
+                               "Bytes uploaded host-to-device on cache "
+                               "misses", labelnames=("backend",))
+        self._m_cache_evict = c("mlego_cache_evictions_total",
+                                "Device model cache LRU evictions",
+                                labelnames=("backend",))
+        self._m_pad_rows = c("mlego_pad_rows_total",
+                             "Zero-weight rows in batched merge launches",
+                             labelnames=("backend",))
+        self._m_resident = g("mlego_cache_resident_bytes",
+                             "Device model cache residency",
+                             labelnames=("backend",))
+        self._m_breaker_state = g("mlego_breaker_state",
+                                  "Breaker state (0 closed, 1 half-open, "
+                                  "2 open)", labelnames=("backend",))
+        self._m_breaker_opens = c("mlego_breaker_opens_total",
+                                  "Lifetime breaker open transitions",
+                                  labelnames=("backend",))
+        self._m_width_sum = c("mlego_coalesce_width_sum_total",
+                              "Sum of executed group widths")
+        self._m_max_width = g("mlego_max_coalesce_width",
+                              "Widest group executed so far")
+        reg.add_callback(self._sync_mirrors)
+
+    def _sync_mirrors(self) -> None:
+        """Pre-scrape sync: copy externally-owned counters into their
+        registry mirrors.  Reads exactly the live structures
+        ``report()`` reads, so a quiesced service exposes identical
+        numbers on both surfaces."""
+        for p in self._pools_snapshot():
+            self._m_queue_depth.set(len(p.queue), pool=p.name)
+        self._m_plan_hits.set_floor(self.plan_cache.hits)
+        self._m_plan_misses.set_floor(self.plan_cache.misses)
+        self._m_plan_entries.set(len(self.plan_cache))
+        self._m_store_bytes.set(self.store.nbytes())
+        cal = getattr(self.cost, "calibration", None)
+        self._m_cal_samples.set(len(cal) if cal is not None else 0)
+        self._m_cal_refits.set_floor(getattr(self.cost, "version", 0))
+        with self._session_lock:
+            self._m_active.set(len(self._sessions))
+            backends = dict(self._extra_backends)
+        backends.setdefault(self.backend.name, self.backend)
+        for site, n in self.retry.snapshot().items():
+            self._m_retries.set_floor(n, site=site)
+        for name, b in backends.items():
+            st = b.stats
+            self._m_hit_bytes.set_floor(st.cache_hit_bytes, backend=name)
+            self._m_miss_bytes.set_floor(st.cache_miss_bytes, backend=name)
+            self._m_cache_evict.set_floor(st.cache_evictions, backend=name)
+            self._m_pad_rows.set_floor(st.pad_rows, backend=name)
+            self._m_resident.set(st.cache_resident_bytes, backend=name)
+        with self._breaker_lock:
+            blist = [(self._breaker_names[k], cb)
+                     for k, cb in self._breakers.items()]
+        for name, cb in blist:
+            snap = cb.snapshot()
+            self._m_breaker_state.set(
+                _BREAKER_STATE_CODE.get(snap.state, -1), backend=name)
+            self._m_breaker_opens.set_floor(snap.opens, backend=name)
+        with self._stats_lock:
+            self._m_width_sum.set_floor(self._width_sum)
+            self._m_max_width.set(self._max_coalesce_width)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition (format 0.0.4) of the registry —
+        the scrape endpoint's payload."""
+        return self.registry.exposition()
+
+    def export_trace(self, path: str) -> None:
+        """Write the tracer's ring buffer as Chrome trace-event JSON
+        (loads in Perfetto / ``chrome://tracing``)."""
+        self.tracer.export_chrome(path)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -380,7 +536,12 @@ class MLegoService:
                     cost=self.cost, kind=self.kind,
                     seed=self._tenant_seed(tenant),
                     backend=self.backend, plan_cache=self.plan_cache,
-                    retry=self.retry)
+                    retry=self.retry, tracer=self.tracer)
+                # the breaker feed rides the session's outcome hook, so
+                # *direct* session use (tenants bypassing the front
+                # door) counts toward backend health exactly like
+                # worker-pool traffic
+                sess.on_outcome = self._session_outcome
                 for b in self._extra_backends.values():
                     sess.adopt_backend(b)
                 saved = self._evicted_keys.pop(tenant, None)
@@ -424,8 +585,8 @@ class MLegoService:
                     self._evicted_keys[tenant] = sess._key
                 self._last_seen.pop(tenant, None)
                 evicted += 1
+                self._m_evictions.inc()
                 with self._stats_lock:
-                    self._tenant_evictions += 1
                     ts = self._tenants.get(tenant,
                                            TenantStats(tenant=tenant))
                     self._tenants[tenant] = ts.bump(evictions=1)
@@ -454,7 +615,7 @@ class MLegoService:
         with self._session_lock:
             b = self._extra_backends.get(name)
             if b is None:
-                b = make_backend(name)
+                b = make_backend(name, profile=self._profile)
                 b.bind_store(self.store)
                 self._extra_backends[name] = b
                 for sess in self._sessions.values():
@@ -478,21 +639,29 @@ class MLegoService:
         with self._breaker_lock:
             cb = self._breakers.get(id(backend))
             if cb is None:
-                def _mirror(old: str, new: str,
-                            _b: ExecutionBackend = backend) -> None:
-                    if new == OPEN:
-                        _b.quarantine()
-                    else:
-                        _b.unquarantine()
-                cb = CircuitBreaker(self._breaker_policy,
-                                    on_transition=_mirror)
-                self._breakers[id(backend)] = cb
                 name = backend.name
                 taken = set(self._breaker_names.values())
                 if name in taken:
                     dups = sum(1 for v in self._breaker_names.values()
                                if v.split("#")[0] == name)
                     name = f"{name}#{dups + 1}"
+
+                def _mirror(old: str, new: str,
+                            _b: ExecutionBackend = backend,
+                            _name: str = name) -> None:
+                    if new == OPEN:
+                        _b.quarantine()
+                    else:
+                        _b.unquarantine()
+                    self._m_transitions.inc(backend=_name, to=new)
+                    now = time.perf_counter()
+                    self.tracer.record(
+                        "breaker.transition", "serve", now, now,
+                        trace_id=self.tracer.new_trace_id(),
+                        attrs={"backend": _name, "from": old, "to": new})
+                cb = CircuitBreaker(self._breaker_policy,
+                                    on_transition=_mirror)
+                self._breakers[id(backend)] = cb
                 self._breaker_names[id(backend)] = name
             return cb
 
@@ -519,6 +688,21 @@ class MLegoService:
         if answered_by is not None:
             self._breaker_for(self._instance_for(answered_by)) \
                 .record_success()
+
+    def _session_outcome(self, answered_by: str,
+                         fallback_from: Optional[str],
+                         error: Optional[BaseException]) -> None:
+        """Tenant sessions' outcome hook — the *single* breaker feed.
+
+        Fires inside ``MLegoSession.submit``/``submit_many`` whether
+        the call came from a worker pool or from a tenant holding the
+        session directly, so direct use can no longer bypass backend
+        health accounting (the worker paths deliberately do not feed
+        the breakers themselves — that would double-count)."""
+        if error is not None:
+            self._note_error(error, answered_by)
+        else:
+            self._note_outcome(answered_by, fallback_from)
 
     def _note_error(self, exc: BaseException, backend_name: str) -> None:
         """Feed the breakers from one failed query.  Only typed
@@ -589,13 +773,18 @@ class MLegoService:
             # route named backends to the shared per-name instance
             # before the worker executes (registers into every session)
             inst = self._shared_backend(spec.backend)
-        item = PendingQuery(spec=spec, tenant=tenant, options=opts)
+        # the trace root is minted here, on the submitting thread; the
+        # pool worker records spans onto the pre-allocated ids, so the
+        # per-query tree survives the thread hop (and coalescing)
+        item = PendingQuery(spec=spec, tenant=tenant, options=opts,
+                            trace_id=self.tracer.new_trace_id(),
+                            root_span_id=self.tracer.new_span_id())
         pool = self._pool_for(inst)
         try:
             pool.queue.put(item)
         except ShedError:
+            self._m_shed.inc()
             with self._stats_lock:
-                self._shed += 1
                 ts = self._tenants.get(tenant, TenantStats(tenant=tenant))
                 self._tenants[tenant] = ts.bump(shed=1)
             raise
@@ -604,8 +793,8 @@ class MLegoService:
     def _note_displaced(self, victim: PendingQuery) -> None:
         """Queue callback: a pending query was displaced by a higher-
         priority arrival (its future already failed with ShedError)."""
+        self._m_shed.inc()
         with self._stats_lock:
-            self._shed += 1
             ts = self._tenants.get(victim.tenant,
                                    TenantStats(tenant=victim.tenant))
             self._tenants[victim.tenant] = ts.bump(shed=1)
@@ -632,20 +821,17 @@ class MLegoService:
     # ------------------------------------------------------------------
     # SLO feedback
     # ------------------------------------------------------------------
-    def _tracker(self, backend_name: str) -> LatencyTracker:
-        with self._tracker_lock:
-            tr = self._trackers.get(backend_name)
-            if tr is None:
-                tr = LatencyTracker(window=self._slo_window)
-                self._trackers[backend_name] = tr
-            return tr
+    def _tracker(self, backend_name: str) -> HistogramView:
+        """One backend's latency window, as a sliding-window view over
+        the shared ``mlego_serve_latency_seconds`` histogram — the SLO
+        control loop and the Prometheus exposition read one structure,
+        fed by one ``observe()`` per answered query."""
+        return self._m_latency.view(backend=backend_name)
 
     def _degrade_level(self, backend_name: str) -> int:
         if self._slo_policy is None:
             return 0
-        with self._tracker_lock:
-            tr = self._trackers.get(backend_name)
-        return self._slo_policy.level(tr) if tr is not None else 0
+        return self._slo_policy.level(self._tracker(backend_name))
 
     def _degrade_spec(self, spec: QuerySpec, level: int,
                       sess: MLegoSession) -> QuerySpec:
@@ -743,11 +929,18 @@ class MLegoService:
 
     def _record_rejection(self, item: PendingQuery, *,
                           deadline: bool) -> None:
+        if deadline:
+            self._m_deadline.inc()
+        else:
+            self._m_shed.inc()
+        if item.trace_id and item.root_span_id:
+            now = time.perf_counter()
+            self.tracer.record(
+                "serve.query", "serve", item.enqueued_at, now,
+                trace_id=item.trace_id, span_id=item.root_span_id,
+                attrs={"tenant": item.tenant,
+                       "outcome": "deadline" if deadline else "shed"})
         with self._stats_lock:
-            if deadline:
-                self._deadline_rejected += 1
-            else:
-                self._shed += 1
             ts = self._tenants.get(item.tenant,
                                    TenantStats(tenant=item.tenant))
             self._tenants[item.tenant] = ts.bump(
@@ -764,8 +957,7 @@ class MLegoService:
             fb = self._reroute_target(backend_name)
             if fb is not None:
                 pool = self._pool_for(self._instance_for(fb))
-                with self._stats_lock:
-                    self._breaker_reroutes += len(items)
+                self._m_reroutes.inc(len(items))
                 for it in items:
                     it.spec = _dc_replace(it.spec, backend=fb)
                     try:
@@ -830,25 +1022,45 @@ class MLegoService:
         sessions = [self.session(it.tenant) for it in items]
         specs = [self._degrade_spec(it.spec, level, sessions[0])
                  for it in items]
+        # one *group* span wraps the fused execution (its own trace);
+        # each member query then gets a ``serve.execute`` child in its
+        # *own* trace covering the same interval and cross-linked to
+        # the group, so a coalesced query's trace id survives fusion
+        t_ex0 = time.perf_counter()
         try:
-            br = sessions[0].submit_many(
-                specs, next_keys=[s._next_key for s in sessions])
+            with self.tracer.span(
+                    "serve.fuse", "serve",
+                    attrs={"width": width,
+                           "traces": ",".join(
+                               it.trace_id or "?" for it in items)}) as gsp:
+                br = sessions[0].submit_many(
+                    specs, next_keys=[s._next_key for s in sessions])
         except Exception:
             mid = width // 2
-            with self._stats_lock:
-                self._bisect_retries += 1
+            self._m_bisect.inc()
             self._execute_fused(items[:mid], level, t0)
             self._execute_fused(items[mid:], level, t0)
             return
-        self._note_outcome(br.backend, br.fallback_from)
+        t_ex1 = time.perf_counter()
+        # breaker feed: already fired per report via the session's
+        # outcome hook inside submit_many — nothing to do here
+        self._m_groups.inc()
+        self._m_coalesced.inc()
         with self._stats_lock:
-            self._groups += 1
-            self._coalesced_groups += 1
             self._width_sum += width
             self._max_coalesce_width = max(self._max_coalesce_width,
                                            width)
+        group_trace = gsp.trace_id if gsp is not None else ""
         for it, rep in zip(items, br.reports):
             rep.degraded = level
+            if it.trace_id:
+                rep.trace = it.trace_id
+                self.tracer.record(
+                    "serve.execute", "serve", t_ex0, t_ex1,
+                    trace_id=it.trace_id, parent_id=it.root_span_id,
+                    attrs={"fused": True, "width": width,
+                           "group_trace": group_trace,
+                           "backend": br.backend or ""})
             self._record(it, t0, width, br.plan_cached,
                          model_ids=rep.model_ids, degraded=level)
             _resolve(it.future, rep)
@@ -859,21 +1071,28 @@ class MLegoService:
         futures are already RUNNING (gated in ``_admit``)."""
         for it in items:
             t0 = time.perf_counter()     # this query's own start
+            self._m_groups.inc()
             with self._stats_lock:
-                self._groups += 1
                 self._width_sum += 1
                 self._max_coalesce_width = max(self._max_coalesce_width, 1)
             sess = self.session(it.tenant)
+            # breaker feed: the session's outcome hook fires inside
+            # submit (success and failure), so the worker records only
+            # stats/spans here
             try:
-                rep = sess.submit(self._degrade_spec(it.spec, level, sess))
+                with self.tracer.span(
+                        "serve.execute", "serve",
+                        trace_id=it.trace_id, parent_id=it.root_span_id,
+                        attrs={"tenant": it.tenant, "fused": False}):
+                    rep = sess.submit(
+                        self._degrade_spec(it.spec, level, sess))
             except Exception as exc:
-                self._note_error(exc,
-                                 it.spec.backend or self.backend.name)
                 self._record(it, t0, 1, False, error=True)
                 _reject(it.future, exc)
             else:
-                self._note_outcome(rep.backend, rep.fallback_from)
                 rep.degraded = level
+                if it.trace_id:
+                    rep.trace = it.trace_id
                 self._record(it, t0, 1, rep.plan_cached,
                              model_ids=rep.model_ids, degraded=level)
                 _resolve(it.future, rep)
@@ -884,12 +1103,27 @@ class MLegoService:
                 degraded: int = 0) -> None:
         now = time.perf_counter()
         wait = max(t0 - item.enqueued_at, 0.0)
+        backend_name = item.spec.backend or self.backend.name
+        self._m_queries.inc()
+        if error:
+            self._m_errors.inc()
+        if degraded > 0 and not error:
+            self._m_degraded.inc(level=str(degraded))
+        if item.trace_id and item.root_span_id:
+            # the per-query root and its queue-wait child are recorded
+            # here, where both endpoints are known — they started on
+            # the submitting thread, ended on this worker
+            self.tracer.record(
+                "queue.wait", "serve", item.enqueued_at, t0,
+                trace_id=item.trace_id, parent_id=item.root_span_id,
+                attrs={"pool": backend_name})
+            self.tracer.record(
+                "serve.query", "serve", item.enqueued_at, now,
+                trace_id=item.trace_id, span_id=item.root_span_id,
+                attrs={"tenant": item.tenant, "width": width,
+                       "backend": backend_name, "error": error,
+                       "degraded": degraded})
         with self._stats_lock:
-            self._queries += 1
-            if error:
-                self._errors += 1
-            if degraded > 0 and not error:
-                self._degraded += 1
             ts = self._tenants.get(item.tenant,
                                    TenantStats(tenant=item.tenant))
             self._tenants[item.tenant] = ts.absorb(
@@ -897,10 +1131,11 @@ class MLegoService:
                 error=error, degraded=degraded > 0 and not error)
         self._last_seen[item.tenant] = time.monotonic()
         if not error:
-            # client-observed latency (enqueue → answer) feeds the SLO
-            # window of the backend that served the query
-            self._tracker(item.spec.backend or self.backend.name) \
-                .observe(now - item.enqueued_at)
+            # client-observed latency (enqueue → answer) feeds both the
+            # SLO window and the exposition histogram of the backend
+            # that served the query — one observe, one structure
+            self._m_latency.observe(now - item.enqueued_at,
+                                    backend=backend_name)
             spec = item.spec
             self._query_log.append(QueryLogEntry(
                 tenant=item.tenant,
@@ -987,15 +1222,17 @@ class MLegoService:
     # ------------------------------------------------------------------
     def report(self) -> ServiceReport:
         cal = getattr(self.cost, "calibration", None)
-        with self._tracker_lock:
-            trackers = dict(self._trackers)
-        slo = {
-            name: BackendSLO(
+        # per-backend SLO views off the shared latency histogram (one
+        # entry per backend that has ever observed a sample)
+        slo = {}
+        for key in self._m_latency.series():
+            name = key[0]
+            tr = self._tracker(name)
+            slo[name] = BackendSLO(
                 p50_s=tr.p50, p95_s=tr.p95, p99_s=tr.p99,
                 samples=len(tr),
                 level=self._slo_policy.level(tr)
                 if self._slo_policy is not None else 0)
-            for name, tr in trackers.items()}
         depth = {p.name: len(p.queue) for p in self._pools_snapshot()}
         with self._breaker_lock:
             blist = [(self._breaker_names[k], cb)
@@ -1006,13 +1243,17 @@ class MLegoService:
         breaker = {name: cb.snapshot() for name, cb in blist}
         with self._session_lock:
             active = len(self._sessions)
+        # the JSON metrics snapshot reads the same registry objects the
+        # counters below come from (running the mirror callbacks), so
+        # exposition and report agree on a quiesced service
+        metrics = self.registry.snapshot()
         with self._stats_lock:
             return ServiceReport(
                 tenants=dict(self._tenants),
-                queries=self._queries,
-                errors=self._errors,
-                groups=self._groups,
-                coalesced_groups=self._coalesced_groups,
+                queries=int(self._m_queries.total()),
+                errors=int(self._m_errors.total()),
+                groups=int(self._m_groups.total()),
+                coalesced_groups=int(self._m_coalesced.total()),
                 max_coalesce_width=self._max_coalesce_width,
                 width_sum=self._width_sum,
                 plan_cache_hits=self.plan_cache.hits,
@@ -1021,17 +1262,18 @@ class MLegoService:
                 backend=self.backend.stats,
                 calibration_samples=len(cal) if cal is not None else 0,
                 store_bytes=self.store.nbytes(),
-                shed=self._shed,
-                deadline_rejected=self._deadline_rejected,
-                bisect_retries=self._bisect_retries,
-                degraded_queries=self._degraded,
-                tenant_evictions=self._tenant_evictions,
+                shed=int(self._m_shed.total()),
+                deadline_rejected=int(self._m_deadline.total()),
+                bisect_retries=int(self._m_bisect.total()),
+                degraded_queries=int(self._m_degraded.total()),
+                tenant_evictions=int(self._m_evictions.total()),
                 active_sessions=active,
                 queue_depth=depth,
                 slo=slo,
                 breaker=breaker,
-                breaker_reroutes=self._breaker_reroutes,
+                breaker_reroutes=int(self._m_reroutes.total()),
                 retries=self.retry.snapshot(),
+                metrics=metrics,
                 ingest=self._ingest.report()
                 if self._ingest is not None else None,
                 speculation=self._speculator.report()

@@ -14,6 +14,14 @@ query lands on ``QueryReport.degraded`` (0 = full quality).
 ``LatencyTracker`` is the measurement half: a bounded deque of recent
 latencies with percentile reads.  ``SLOPolicy`` is the decision half:
 pure (p95, sample count) → level, so tests can pin it without traffic.
+
+``SLOPolicy.level`` duck-types its tracker argument — anything with
+``len()`` and ``.p95`` qualifies.  The service now feeds it a
+``repro.obs.metrics.HistogramView`` over the shared
+``mlego_serve_latency_seconds`` histogram's sliding window (one
+``observe()`` feeds both the Prometheus exposition buckets and this
+control loop), keeping ``LatencyTracker`` as the standalone
+implementation for callers without a registry.
 """
 from __future__ import annotations
 
